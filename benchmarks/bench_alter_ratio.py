@@ -1,0 +1,36 @@
+"""Paper Fig. 4: estimated alter_ratio vs hand-picked constants, across
+label-randomness levels R% in {0, 1, 10, 50, 100}."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import constraint, ground_truth, row, run_mode, world
+from repro.core import recall
+
+
+def main(out):
+    for pct_random in (0.0, 10.0, 50.0, 100.0):
+        corpus, graph, q, qlab = world(pct_random=pct_random)
+        for cons_kind in ("unequal-10%", "unequal-80%"):
+            cons = constraint(cons_kind, qlab)
+            _, ti = ground_truth(corpus, q, cons, k=10)
+            for ratio in (0.2, 0.6, 1.0, None):
+                label = "est" if ratio is None else f"{ratio:.1f}"
+                res, qps = run_mode(
+                    corpus, graph, q, cons, "alter", alter_ratio=ratio
+                )
+                out(row(
+                    f"fig4/R{pct_random:.0f}%/{cons_kind}/ratio-{label}",
+                    1e6 / qps,
+                    f"recall={float(recall(res.ids, ti)):.3f};"
+                    f"dist={float(jnp.mean(res.stats.dist_evals)):.0f}",
+                ))
+            # prefer (all optimizations) for comparison
+            res, qps = run_mode(corpus, graph, q, cons, "prefer")
+            out(row(
+                f"fig4/R{pct_random:.0f}%/{cons_kind}/prefer",
+                1e6 / qps,
+                f"recall={float(recall(res.ids, ti)):.3f};"
+                f"dist={float(jnp.mean(res.stats.dist_evals)):.0f}",
+            ))

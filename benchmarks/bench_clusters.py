@@ -1,0 +1,25 @@
+"""Paper Fig. 5: varying the number of label clusters k in {10, 100, 1000}
+(1000 scaled to the CPU-sized corpus), top-1 vs top-100 sensitivity."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import constraint, ground_truth, row, run_mode, world
+from repro.core import recall
+
+
+def main(out):
+    for n_labels in (10, 100):
+        corpus, graph, q, qlab = world(n_labels=n_labels)
+        cons = constraint("unequal-20%", qlab, n_labels=n_labels)
+        for k in (1, 100):
+            _, ti = ground_truth(corpus, q, cons, k=k)
+            for mode in ("vanilla", "prefer"):
+                res, qps = run_mode(corpus, graph, q, cons, mode, k=k,
+                                    ef=max(128, 2 * k))
+                out(row(
+                    f"fig5/labels{n_labels}/top{k}/{mode}",
+                    1e6 / qps,
+                    f"recall={float(recall(res.ids, ti)):.3f};"
+                    f"dist={float(jnp.mean(res.stats.dist_evals)):.0f}",
+                ))

@@ -1,0 +1,49 @@
+"""Paper Fig. 3: QPS(-proxy) and recall across constraint families.
+
+Rows: PQ / vanilla / AIRSHIP-Start / AIRSHIP (prefer) x
+constraints {equal, unequal-10%, unequal-20%, unequal-80%} x top-{1,10,100}.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import constraint, ground_truth, row, run_mode, world
+from repro.core import pq_constrained_search, pq_train, recall
+
+
+def main(out):
+    corpus, graph, q, qlab = world()
+    pq_index = pq_train(jax.random.PRNGKey(9), corpus.vectors, m_sub=8, n_cent=64)
+    for cons_kind in ("equal", "unequal-10%", "unequal-20%", "unequal-80%"):
+        cons = constraint(cons_kind, qlab)
+        for k in (1, 10, 100):
+            _, ti = ground_truth(corpus, q, cons, k=k)
+            # PQ baseline (linear scan + ADC)
+            pd_, pi = pq_constrained_search(corpus, pq_index, q, cons, k=k)
+            jax.block_until_ready(pd_)
+            t0 = time.perf_counter()
+            pd_, pi = pq_constrained_search(corpus, pq_index, q, cons, k=k)
+            jax.block_until_ready(pd_)
+            qps_pq = q.shape[0] / (time.perf_counter() - t0)
+            out(row(
+                f"fig3/{cons_kind}/top{k}/pq",
+                1e6 / qps_pq,
+                f"recall={float(recall(pi, ti)):.3f};dist={corpus.n}",
+            ))
+            for mode, label in (
+                ("vanilla", "vanilla"),
+                ("start", "airship-start"),
+                ("prefer", "airship"),
+            ):
+                res, qps = run_mode(corpus, graph, q, cons, mode, k=k,
+                                    ef=max(128, 2 * k))
+                out(row(
+                    f"fig3/{cons_kind}/top{k}/{label}",
+                    1e6 / qps,
+                    f"recall={float(recall(res.ids, ti)):.3f};"
+                    f"dist={float(jnp.mean(res.stats.dist_evals)):.0f};"
+                    f"hops={float(jnp.mean(res.stats.hops)):.0f}",
+                ))

@@ -1,0 +1,55 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU) vs jnp reference.
+
+On this host interpret-mode timing only proves correctness-at-shape; the
+BlockSpec geometry (VMEM working sets, MXU alignment) is the TPU-relevant
+artifact and is asserted here.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.gather_distance.ref import gather_distance_ref
+from repro.kernels.l2_matmul.l2_matmul import l2_matmul
+from repro.kernels.l2_matmul.ref import l2_matmul_ref
+from repro.kernels.pq_adc.ref import pq_adc_ref
+
+
+def _time(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main(out):
+    rng = jax.random.PRNGKey(0)
+    q = jax.random.normal(rng, (256, 128))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4096, 128))
+    us_ref = _time(jax.jit(l2_matmul_ref), q, x)
+    out(row("kernels/l2_matmul/jnp_ref", us_ref, "shape=256x4096x128"))
+    # v5e BlockSpec working-set check: bm*bk + bn*bk + bm*bn floats << VMEM
+    bm, bn, bk = 128, 128, 512
+    ws_mb = (bm * bk + bn * bk + bm * bn) * 4 / 1e6
+    out(row("kernels/l2_matmul/vmem_working_set", 0.0, f"{ws_mb:.2f}MB<16MB"))
+
+    ids = jax.random.randint(jax.random.PRNGKey(2), (256, 32), 0, 4096)
+    us = _time(jax.jit(gather_distance_ref), q, x, ids)
+    out(row("kernels/gather_distance/jnp_ref", us, "256q x 32nbrs"))
+
+    lut = jax.random.normal(jax.random.PRNGKey(3), (16, 8, 64))
+    codes = jax.random.randint(jax.random.PRNGKey(4), (4096, 8), 0, 64)
+    us = _time(jax.jit(pq_adc_ref), lut, codes)
+    out(row("kernels/pq_adc/jnp_ref", us, "16q x 4096 codes"))
+
+    table = jax.random.normal(jax.random.PRNGKey(5), (10000, 64))
+    bag = jax.random.randint(jax.random.PRNGKey(6), (512, 20), -1, 10000)
+    us = _time(jax.jit(embedding_bag_ref), table, bag)
+    out(row("kernels/embedding_bag/jnp_ref", us, "512 bags x 20"))

@@ -1,0 +1,27 @@
+"""Paper Fig. 1 motivation: the three-stage pipeline's under-fill failure
+(c < k survivors) vs the merged constrained search, as a function of s."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import constraint, row, run_mode, world
+from repro.core import three_stage_pipeline
+
+
+def main(out):
+    corpus, graph, q, qlab = world()
+    cons = constraint("unequal-10%", qlab)
+    k = 10
+    for s_mult in (1, 2, 5, 10):
+        s = k * s_mult
+        _, _, n_surv = three_stage_pipeline(corpus, graph, q, cons, s=s, k=k)
+        underfill = float(jnp.mean((n_surv < k).astype(jnp.float32)))
+        out(row(
+            f"fig1/pipeline/s={s}",
+            0.0,
+            f"mean_survivors={float(jnp.mean(n_surv)):.1f};"
+            f"underfill_rate={underfill:.2f}",
+        ))
+    res, qps = run_mode(corpus, graph, q, cons, "prefer", k=k)
+    filled = float(jnp.mean(jnp.sum(res.ids >= 0, axis=-1)))
+    out(row("fig1/airship-merged", 1e6 / qps, f"mean_filled={filled:.1f}"))

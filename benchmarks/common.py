@@ -1,0 +1,74 @@
+"""Shared benchmark harness: corpus/index fixtures + measurement helpers.
+
+CPU-host scaling note: the paper runs SIFT1M (n=1e6) on a 28-core Xeon; this
+container is a single core, so benchmarks default to n=20k with the same
+structure (10 k-means labels, R% randomization, equal/unequal-X%
+constraints). Recall and *distance-evaluation counts* are
+hardware-independent; wall-clock QPS is reported for this host and the
+TPU-projected throughput comes from §Roofline.
+"""
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    SearchParams,
+    constrained_search,
+    equal_constraint,
+    exact_constrained_search,
+    recall,
+    unequal_pct_constraint,
+)
+from repro.data.synthetic import make_labeled_corpus, make_queries
+from repro.graph.index import build_index
+
+N_DEFAULT = 10_000
+D_DEFAULT = 32
+NQ_DEFAULT = 64
+
+
+@lru_cache(maxsize=8)
+def world(n=N_DEFAULT, d=D_DEFAULT, n_labels=10, pct_random=0.0, anisotropic=False):
+    corpus = make_labeled_corpus(
+        jax.random.PRNGKey(0), n=n, d=d, n_labels=n_labels,
+        pct_random=pct_random, anisotropic=anisotropic,
+    )
+    graph = build_index(jax.random.PRNGKey(1), corpus, degree=16, sample_size=512)
+    q, qlab = make_queries(jax.random.PRNGKey(2), corpus, NQ_DEFAULT)
+    return corpus, graph, q, qlab
+
+
+def constraint(kind: str, qlab, n_labels=10, seed=3):
+    if kind == "equal":
+        return equal_constraint(qlab, n_labels)
+    assert kind.startswith("unequal-")
+    pct = float(kind.split("-")[1].rstrip("%"))
+    return unequal_pct_constraint(jax.random.PRNGKey(seed), qlab, n_labels, pct)
+
+
+def run_mode(corpus, graph, q, cons, mode, k=10, ef=128, alter_ratio=None):
+    params = SearchParams(
+        mode=mode, k=k, ef_result=ef, ef_sat=128, ef_other=128,
+        n_start=32, max_iters=1500, alter_ratio=alter_ratio,
+    )
+    # compile once, then time
+    res = constrained_search(corpus, graph, q, cons, params)
+    jax.block_until_ready(res.dists)
+    t0 = time.perf_counter()
+    res = constrained_search(corpus, graph, q, cons, params)
+    jax.block_until_ready(res.dists)
+    dt = time.perf_counter() - t0
+    qps = q.shape[0] / dt
+    return res, qps
+
+
+def ground_truth(corpus, q, cons, k=10):
+    return exact_constrained_search(corpus, q, cons, k=k)
+
+
+def row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

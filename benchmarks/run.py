@@ -1,0 +1,59 @@
+"""Benchmark entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Figures covered:
+Fig. 1 (pipeline under-fill), Fig. 3 (constraint families), Fig. 4
+(alter_ratio estimation), Fig. 5 (cluster counts), Fig. 6 (MNIST-style
+cross-class), plus kernel micro-benches.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--only",
+        default="",
+        help="comma list: pipeline,constraints,alter_ratio,clusters,mnist,kernels",
+    )
+    args = ap.parse_args()
+    selected = set(filter(None, args.only.split(",")))
+
+    from benchmarks import (
+        bench_alter_ratio,
+        bench_clusters,
+        bench_constraints,
+        bench_kernels,
+        bench_mnist_like,
+        bench_pipeline,
+    )
+
+    suites = {
+        "pipeline": bench_pipeline.main,
+        "constraints": bench_constraints.main,
+        "alter_ratio": bench_alter_ratio.main,
+        "clusters": bench_clusters.main,
+        "mnist": bench_mnist_like.main,
+        "kernels": bench_kernels.main,
+    }
+    print("name,us_per_call,derived")
+
+    def out(line: str) -> None:
+        print(line, flush=True)
+
+    for name, fn in suites.items():
+        if selected and name not in selected:
+            continue
+        t0 = time.time()
+        try:
+            fn(out)
+        except Exception as e:  # noqa: BLE001 — keep the suite running
+            out(f"{name}/ERROR,0,{type(e).__name__}:{str(e)[:120]}")
+        print(f"# suite {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""kNN-LM-style constrained retrieval over LM hidden states.
+
+Demonstrates the DESIGN.md §5 integration for the LM archs: a (smoke-sized)
+transformer encodes a corpus of token contexts; its final hidden states form
+the ANN corpus, each tagged with a domain label; at generation time the LM's
+current hidden state queries AIRSHIP for nearest *domain-constrained*
+contexts (the constrained analogue of kNN-LM's datastore lookup — e.g.
+"retrieve only from the legal domain").
+
+    PYTHONPATH=src python examples/knnlm_retrieval.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    SearchParams,
+    constrained_search,
+    equal_constraint,
+    exact_constrained_search,
+    recall,
+)
+from repro.core.types import Corpus
+from repro.data.pipeline import lm_batch
+from repro.distributed.meshinfo import single_device_meshinfo
+from repro.graph.index import build_index
+from repro.models.transformer.model import TransformerConfig, forward_hidden, init_params
+
+
+def main():
+    mi = single_device_meshinfo()
+    cfg = TransformerConfig(
+        name="knnlm-demo", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        head_dim=16, d_ff=128, vocab_size=1024, param_dtype=jnp.float32,
+        compute_dtype=jnp.float32, attn_chunk=32, ce_chunk=32, remat="none",
+    )
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    # 1) Build the datastore: hidden states of 256 contexts x 32 positions,
+    #    each context tagged with one of 8 "domains".
+    n_ctx, seq = 256, 32
+    batch = lm_batch(5, 0, n_ctx, seq, cfg.vocab_size)
+    h = forward_hidden(params, cfg, mi, batch["tokens"])  # (256, 32, 64)
+    keys = h.reshape(-1, cfg.d_model)  # (8192, 64)
+    domains = jnp.repeat(
+        jax.random.randint(jax.random.PRNGKey(1), (n_ctx,), 0, 8), seq
+    )
+    corpus = Corpus(vectors=keys, labels=domains.astype(jnp.int32))
+    print(f"datastore: {corpus.n} hidden-state keys, 8 domains")
+    graph = build_index(jax.random.PRNGKey(2), corpus, degree=16, sample_size=512)
+
+    # 2) Query: fresh contexts' final hidden states, constrained per query
+    #    to a target domain.
+    qbatch = lm_batch(6, 1, 16, seq, cfg.vocab_size)
+    q = forward_hidden(params, cfg, mi, qbatch["tokens"])[:, -1]  # (16, 64)
+    want = jax.random.randint(jax.random.PRNGKey(3), (16,), 0, 8)
+    cons = equal_constraint(want, 8)
+
+    _, true_ids = exact_constrained_search(corpus, q, cons, k=8)
+    sp = SearchParams(mode="prefer", k=8, ef_result=64, n_start=32, max_iters=400)
+    res = constrained_search(corpus, graph, q, cons, sp)
+    r = float(recall(res.ids, true_ids))
+    d = float(jnp.mean(res.stats.dist_evals))
+    got_domains = corpus.labels[jnp.maximum(res.ids, 0)]
+    ok = bool(jnp.all((got_domains == want[:, None]) | (res.ids < 0)))
+    print(f"domain-constrained kNN-LM lookup: recall@8={r:.3f}, "
+          f"{d:.0f} dist-evals/query (vs {corpus.n} brute-force)")
+    print(f"all retrieved keys in the requested domain: {ok}")
+    print("\n(the retrieved ids index (context, position) pairs — a full "
+          "kNN-LM would now interpolate the next-token distribution "
+          "with the successors of these contexts)")
+
+
+if __name__ == "__main__":
+    main()

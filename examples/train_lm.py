@@ -1,0 +1,79 @@
+"""End-to-end training driver: a ~100M-param GQA LM for a few hundred steps
+with checkpoint/resume, on whatever devices exist.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300 --d-model 512
+    (defaults are CPU-sized; crank --d-model/--layers on real hardware)
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import checkpoint as ck
+from repro.data.pipeline import lm_batch
+from repro.distributed.meshinfo import single_device_meshinfo
+from repro.models.transformer.model import TransformerConfig, init_params, lm_loss
+from repro.train.optimizer import adamw
+from repro.train.train_step import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=4096)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    mi = single_device_meshinfo()
+    cfg = TransformerConfig(
+        name="train-demo", n_layers=args.layers, d_model=args.d_model,
+        n_heads=args.d_model // 64, n_kv_heads=max(1, args.d_model // 128),
+        head_dim=64, d_ff=4 * args.d_model, vocab_size=args.vocab,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+        attn_chunk=64, ce_chunk=64, remat="none",
+    )
+    print(f"params: {cfg.param_count()/1e6:.1f}M")
+    opt = adamw(3e-4, weight_decay=0.01)
+
+    start = ck.latest_step(args.ckpt_dir)
+    if start is not None:
+        print(f"resuming from checkpoint step {start}")
+        like = jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+        params = ck.restore(args.ckpt_dir, start, like)
+        opt_like = jax.eval_shape(opt.init, params)
+        opt_state = ck.restore(args.ckpt_dir + "_opt", start, opt_like)
+    else:
+        start = 0
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        opt_state = opt.init(params)
+
+    step_fn = jax.jit(
+        make_train_step(lambda p, b: lm_loss(p, cfg, mi, b), opt, clip_norm=1.0)
+    )
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = lm_batch(42, step, args.batch, args.seq, args.vocab)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % 10 == 0 or step == args.steps - 1:
+            tok_s = args.batch * args.seq * (step - start + 1) / (time.time() - t0)
+            print(f"step {step:4d}  loss={float(metrics['loss']):.4f}  "
+                  f"({tok_s:.0f} tok/s)")
+        if step and step % args.ckpt_every == 0:
+            ck.save(args.ckpt_dir, step, params)
+            ck.save(args.ckpt_dir + "_opt", step, opt_state)
+            ck.prune_old(args.ckpt_dir, keep=2)
+            ck.prune_old(args.ckpt_dir + "_opt", keep=2)
+    ck.save(args.ckpt_dir, args.steps - 1, params)
+    ck.save(args.ckpt_dir + "_opt", args.steps - 1, opt_state)
+    print("done — loss should have dropped well below ln(vocab) =",
+          f"{jnp.log(args.vocab):.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""AIRSHIP serve Arch — the paper's own workload as a dry-runnable cell.
+
+Corpus + per-shard subgraphs are row-sharded over ``model`` (scatter-search-
+merge, core/distributed.py); query batches shard over the data axes. The
+serve step is the full constrained graph search (mode=prefer) + one
+all-gather top-k merge.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.archs.base import Arch, CellSpec
+from repro.core.constraints import LabelSetConstraint
+from repro.core.distributed import make_distributed_search
+from repro.core.types import Corpus, GraphIndex, SearchParams, SearchResult, SearchStats
+from repro.distributed.meshinfo import MeshInfo
+
+
+@dataclasses.dataclass(frozen=True)
+class AirshipServeConfig:
+    name: str = "airship-sift1m"
+    n: int = 1_000_000
+    dim: int = 128
+    degree: int = 32
+    n_labels: int = 10
+    sample_per_shard: int = 128
+    params: SearchParams = SearchParams(
+        mode="prefer", k=10, ef_result=128, ef_sat=128, ef_other=128,
+        n_start=32, max_iters=512,
+    )
+
+
+AIRSHIP_SHAPES: Dict[str, dict] = {
+    "serve_256": dict(kind="serve", batch=256),
+    "serve_bulk_8k": dict(kind="serve", batch=8192),
+    # Beyond-paper D4: ADC traversal + exact re-rank (32x fewer HBM bytes
+    # per candidate); m_sub=16 codes shard with the corpus rows.
+    "serve_256_pq": dict(kind="serve", batch=256, pq=True),
+}
+
+
+class AirshipArch(Arch):
+    family = "airship"
+
+    def __init__(self, cfg: AirshipServeConfig, shapes=None):
+        self.name = cfg.name
+        self.cfg = cfg
+        self.shapes = shapes or AIRSHIP_SHAPES
+
+    def shape_names(self):
+        return list(self.shapes)
+
+    def make_cell(self, shape: str, mi: MeshInfo) -> CellSpec:
+        import dataclasses
+
+        cfg = self.cfg
+        sh = self.shapes[shape]
+        b = sh["batch"]
+        use_pq = sh.get("pq", False)
+        n_shards = mi.tp_size
+        n = ((cfg.n + n_shards - 1) // n_shards) * n_shards
+        f32, i32, u32 = jnp.float32, jnp.int32, jnp.uint32
+        n_words = (cfg.n_labels + 31) // 32
+
+        corpus_abs = Corpus(
+            vectors=jax.ShapeDtypeStruct((n, cfg.dim), f32),
+            labels=jax.ShapeDtypeStruct((n,), i32),
+            attrs=None,
+        )
+        graph_abs = GraphIndex(
+            neighbors=jax.ShapeDtypeStruct((n, cfg.degree), i32),
+            sample_ids=jax.ShapeDtypeStruct((n_shards * cfg.sample_per_shard,), i32),
+            entry_point=jax.ShapeDtypeStruct((n_shards,), i32),
+        )
+        queries_abs = jax.ShapeDtypeStruct((b, cfg.dim), f32)
+        cons_abs = LabelSetConstraint(
+            words=jax.ShapeDtypeStruct((b, n_words), u32)
+        )
+
+        params = cfg.params
+        if use_pq:
+            params = dataclasses.replace(params, approx="pq")
+        search = make_distributed_search(
+            mi.mesh, params, batch_axes=mi.dp_axes, with_pq=use_pq
+        )
+        cspec = P(mi.tp_axis)
+        bspec = mi.axes_if_divisible(b, mi.dp_axes)
+        args = (corpus_abs, graph_abs, queries_abs, cons_abs)
+        in_specs = (
+            Corpus(vectors=cspec, labels=cspec, attrs=None),
+            GraphIndex(neighbors=cspec, sample_ids=cspec, entry_point=cspec),
+            P(bspec, None),
+            LabelSetConstraint(words=P(bspec, None)),
+        )
+        if use_pq:
+            from repro.core.pq import PQIndex
+
+            m_sub = 16 if cfg.dim % 16 == 0 else 8
+            pq_abs = PQIndex(
+                codebooks=jax.ShapeDtypeStruct((m_sub, 256, cfg.dim // m_sub), f32),
+                codes=jax.ShapeDtypeStruct((n, m_sub), i32),
+            )
+            args = args + (pq_abs,)
+            in_specs = in_specs + (PQIndex(codebooks=P(), codes=cspec),)
+        return CellSpec(
+            name=f"{self.name}:{shape}",
+            kind="serve",
+            fn=search,
+            args=args,
+            in_specs=in_specs,
+            note="paper workload: constrained ANN serve (scatter-search-merge)"
+            + (" + PQ traversal (D4)" if use_pq else ""),
+        )

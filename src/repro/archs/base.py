@@ -1,0 +1,64 @@
+"""Arch/Cell abstraction: every assigned architecture exposes, per input
+shape, a CellSpec — a jittable step function plus abstract inputs and their
+PartitionSpecs. The dry-run lowers+compiles CellSpecs; smoke tests run
+reduced configs through the same code path on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+
+from repro.distributed.meshinfo import MeshInfo
+
+
+@dataclasses.dataclass
+class CellSpec:
+    name: str  # "<arch>:<shape>"
+    kind: str  # train | serve
+    fn: Callable  # positional-args jittable
+    args: Tuple[Any, ...]  # pytree of jax.ShapeDtypeStruct per positional arg
+    in_specs: Tuple[Any, ...]  # matching pytree of PartitionSpec
+    donate_argnums: Tuple[int, ...] = ()
+    note: str = ""
+
+
+class Arch:
+    """Family base; subclasses implement make_cell + shape_names."""
+
+    name: str = ""
+    family: str = ""
+
+    def shape_names(self) -> list[str]:
+        raise NotImplementedError
+
+    def make_cell(self, shape: str, mi: MeshInfo) -> CellSpec:
+        raise NotImplementedError
+
+
+def abstract(tree):
+    """Map a pytree of arrays/ShapeDtypeStructs to ShapeDtypeStructs."""
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+_REGISTRY: Dict[str, Callable[[], Arch]] = {}
+
+
+def register(name: str, factory: Callable[[], Arch]) -> None:
+    _REGISTRY[name] = factory
+
+
+def get_arch(name: str) -> Arch:
+    if name not in _REGISTRY:
+        import repro.configs  # noqa: F401 — populate registry
+
+    return _REGISTRY[name]()
+
+
+def list_archs() -> list[str]:
+    import repro.configs  # noqa: F401
+
+    return sorted(_REGISTRY)

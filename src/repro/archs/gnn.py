@@ -1,0 +1,144 @@
+"""GNN-family Arch (MACE): the four assigned graph regimes.
+
+  * full_graph_sm  — cora-scale full-batch (replicated; trivial memory)
+  * minibatch_lg   — reddit-scale sampled training: real fanout sampler
+                     feeds fixed-shape subgraphs (see models/gnn/sampler.py)
+  * ogb_products   — 2.4M x 62M full-batch via the dst-partitioned layout
+  * molecule       — batched small graphs (128 molecules, segment readout)
+
+Non-molecular graphs carry no 3-D coordinates; positions are synthesized
+(DESIGN.md §5) and `d_feat` enters through the species/feature projection.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.archs.base import Arch, CellSpec
+from repro.distributed.meshinfo import MeshInfo
+from repro.models.gnn import mace as gm
+from repro.models.gnn.distributed import dst_partitioned_loss
+from repro.models.gnn.sampler import subgraph_sizes
+from repro.train.optimizer import adamw
+from repro.train.train_step import make_train_step
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+GNN_SHAPES: Dict[str, dict] = {
+    "full_graph_sm": dict(
+        kind="train", n_nodes=2708, n_edges=10556, d_feat=1433, mode="simple"
+    ),
+    "minibatch_lg": dict(
+        kind="train", batch_nodes=1024, fanouts=(15, 10), d_feat=602, mode="sampled"
+    ),
+    "ogb_products": dict(
+        kind="train", n_nodes=2_449_029, n_edges=61_859_140, d_feat=100,
+        mode="dst_partitioned",
+    ),
+    "molecule": dict(
+        kind="train", n_nodes=30, n_edges=64, batch=128, mode="batched"
+    ),
+}
+
+
+class GNNArch(Arch):
+    family = "gnn"
+
+    def __init__(self, cfg: gm.MACEConfig, shapes: Dict[str, dict] | None = None):
+        self.name = cfg.name
+        self.base_cfg = cfg
+        self.shapes = shapes or GNN_SHAPES
+
+    def shape_names(self):
+        return list(self.shapes)
+
+    def _cfg_for(self, sh: dict) -> gm.MACEConfig:
+        import dataclasses
+
+        d_feat = sh.get("d_feat", 0)
+        compute = jnp.bfloat16 if sh["mode"] == "dst_partitioned" else jnp.float32
+        return dataclasses.replace(
+            self.base_cfg, d_feat=d_feat, compute_dtype=compute
+        )
+
+    def _batch_abs(self, sh: dict, mi: MeshInfo):
+        mode = sh["mode"]
+        n_all = mi.mesh.size
+        if mode == "sampled":
+            n, e = subgraph_sizes(sh["batch_nodes"], sh["fanouts"])
+        elif mode == "batched":
+            n = sh["n_nodes"] * sh["batch"]
+            e = sh["n_edges"] * sh["batch"]
+        else:
+            n, e = sh["n_nodes"], sh["n_edges"]
+        if mode == "dst_partitioned":
+            n = _round_up(n, n_all)
+            e = _round_up(e, n_all)
+        f32, i32 = jnp.float32, jnp.int32
+        batch = {
+            "positions": jax.ShapeDtypeStruct((n, 3), f32),
+            "senders": jax.ShapeDtypeStruct((e,), i32),
+            "energy": jax.ShapeDtypeStruct((sh.get("batch", 1),), f32),
+            "forces": jax.ShapeDtypeStruct((n, 3), f32),
+        }
+        d_feat = sh.get("d_feat", 0)
+        if d_feat:
+            batch["node_feat"] = jax.ShapeDtypeStruct((n, d_feat), f32)
+        else:
+            batch["species"] = jax.ShapeDtypeStruct((n,), i32)
+        if mode == "dst_partitioned":
+            batch["receivers_local"] = jax.ShapeDtypeStruct((e,), i32)
+        else:
+            batch["receivers"] = jax.ShapeDtypeStruct((e,), i32)
+        if mode == "batched":
+            batch["node_graph"] = jax.ShapeDtypeStruct((n,), i32)
+        return batch
+
+    def _batch_specs(self, sh: dict, batch_abs: dict, mi: MeshInfo):
+        mode = sh["mode"]
+        all_axes = mi.dp_axes + (mi.tp_axis,)
+        specs = {}
+        for k, v in batch_abs.items():
+            if mode == "dst_partitioned" and k in ("senders", "receivers_local"):
+                specs[k] = P(all_axes)
+            else:
+                specs[k] = P(*([None] * len(v.shape)))
+        return specs
+
+    def make_cell(self, shape: str, mi: MeshInfo) -> CellSpec:
+        sh = self.shapes[shape]
+        cfg = self._cfg_for(sh)
+        params_abs = jax.eval_shape(lambda: gm.init_params(jax.random.PRNGKey(0), cfg))
+        pspecs = gm.param_specs(cfg, mi)
+        opt = adamw(lr=1e-3)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        opt_specs = opt.state_specs(pspecs, params_abs)
+
+        mode = sh["mode"]
+        if mode == "dst_partitioned":
+            loss_fn = lambda p, batch: dst_partitioned_loss(p, cfg, mi, batch)
+        else:
+            loss_fn = lambda p, batch: gm.loss(p, cfg, batch)
+        if mode == "batched":
+            def loss_fn(p, batch, _cfg=cfg):
+                b2 = dict(batch, n_graphs=sh["batch"])
+                return gm.loss(p, _cfg, b2)
+
+        step = make_train_step(loss_fn, opt, clip_norm=1.0)
+        batch_abs = self._batch_abs(sh, mi)
+        batch_specs = self._batch_specs(sh, batch_abs, mi)
+        return CellSpec(
+            name=f"{self.name}:{shape}",
+            kind="train",
+            fn=step,
+            args=(params_abs, opt_abs, batch_abs),
+            in_specs=(pspecs, opt_specs, batch_specs),
+            donate_argnums=(0, 1),
+        )

@@ -1,0 +1,119 @@
+"""LM-family Arch: train_4k / prefill_32k / decode_32k / long_500k cells.
+
+long_500k note (DESIGN.md §5): all five assigned LM archs are pure
+full-attention, so quadratic *prefill* at 524k is skipped per the
+assignment; the cell lowers ``serve_step`` (one-token decode over a 524k
+KV cache), which is linear in S and runs with sequence-sharded KV.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.archs.base import Arch, CellSpec, abstract
+from repro.distributed.meshinfo import MeshInfo
+from repro.models.transformer import model as tm
+from repro.train.optimizer import adafactor, adamw
+from repro.train.train_step import make_train_step
+
+LM_SHAPES: Dict[str, dict] = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="serve", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="serve", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="serve", seq_len=524288, global_batch=1),
+}
+
+
+class LMArch(Arch):
+    family = "lm"
+
+    def __init__(
+        self,
+        cfg: tm.TransformerConfig,
+        optimizer: str = "adafactor",
+        shapes: Dict[str, dict] | None = None,
+        grad_accum: int = 1,
+    ):
+        self.name = cfg.name
+        self.cfg = cfg
+        self.optimizer_name = optimizer
+        self.shapes = shapes or LM_SHAPES
+        self.grad_accum = grad_accum
+
+    def shape_names(self):
+        return list(self.shapes)
+
+    def _optimizer(self):
+        if self.optimizer_name == "adafactor":
+            return adafactor(lr=1e-3, momentum=0.9)
+        return adamw(lr=3e-4, weight_decay=0.1)
+
+    def _abstract_params(self):
+        return jax.eval_shape(lambda: tm.init_params(jax.random.PRNGKey(0), self.cfg))
+
+    def make_cell(self, shape: str, mi: MeshInfo) -> CellSpec:
+        cfg = self.cfg
+        sh = self.shapes[shape]
+        b, s = sh["global_batch"], sh["seq_len"]
+        params_abs = self._abstract_params()
+        pspecs = tm.param_specs(cfg, mi)
+        name = f"{self.name}:{shape}"
+
+        if sh["kind"] == "train":
+            opt = self._optimizer()
+            opt_abs = jax.eval_shape(opt.init, params_abs)
+            opt_specs = opt.state_specs(pspecs, params_abs)
+            loss_fn = lambda p, batch: tm.lm_loss(p, cfg, mi, batch)
+            step = make_train_step(
+                loss_fn, opt, clip_norm=1.0, grad_accum=self.grad_accum
+            )
+            batch_abs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+            batch_specs = {"tokens": P(mi.dp_axes, None)}
+            return CellSpec(
+                name=name,
+                kind="train",
+                fn=step,
+                args=(params_abs, opt_abs, batch_abs),
+                in_specs=(pspecs, opt_specs, batch_specs),
+                donate_argnums=(0, 1),
+            )
+
+        if shape.startswith("prefill"):
+            fn = lambda p, tokens: tm.prefill_logits(p, cfg, mi, tokens)
+            toks = jax.ShapeDtypeStruct((b, s), jnp.int32)
+            return CellSpec(
+                name=name,
+                kind="serve",
+                fn=fn,
+                args=(params_abs, toks),
+                in_specs=(pspecs, P(mi.dp_axes, None)),
+            )
+
+        # decode cells: one new token against an S-token KV cache.
+        cache_abs = tm.cache_shape(cfg, b, s)
+        cache_specs = tm.cache_specs(cfg, mi, b, s)
+        fn = lambda p, cache, tokens: tm.decode_step(p, cfg, mi, cache, tokens)
+        toks = jax.ShapeDtypeStruct((b,), jnp.int32)
+        note = (
+            "long-context decode: linear in S; quadratic 500k prefill skipped "
+            "(pure full-attention arch)"
+            if shape == "long_500k"
+            else ""
+        )
+        return CellSpec(
+            name=name,
+            kind="serve",
+            fn=fn,
+            args=(params_abs, cache_abs, toks),
+            in_specs=(
+                pspecs,
+                cache_specs,
+                P(mi.axes_if_divisible(b, mi.dp_axes)),
+            ),
+            donate_argnums=(1,),
+            note=note,
+        )

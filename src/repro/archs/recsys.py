@@ -1,0 +1,164 @@
+"""RecSys-family Arch: train_batch / serve_p99 / serve_bulk / retrieval_cand.
+
+retrieval_cand (batch=1 x 1M candidates): for the two-tower arch this is a
+user-tower forward + sharded candidate matmul + top-k — the brute-force path
+AIRSHIP's constrained graph search replaces (the integration is exercised in
+examples/constrained_serving.py). For the ranking archs (dlrm/deepfm/sasrec)
+it is bulk scoring of 1M candidate feature rows for one request context.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.archs.base import Arch, CellSpec
+from repro.distributed.meshinfo import MeshInfo
+from repro.models.recsys import models as rs
+from repro.train.optimizer import adamw
+from repro.train.train_step import make_train_step
+
+RECSYS_SHAPES: Dict[str, dict] = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="serve", batch=1, n_candidates=1_000_000),
+}
+
+_INIT = {
+    "dlrm": rs.dlrm_init,
+    "deepfm": rs.deepfm_init,
+    "sasrec": rs.sasrec_init,
+    "two_tower": rs.two_tower_init,
+}
+_SPECS = {
+    "dlrm": rs.dlrm_specs,
+    "deepfm": rs.deepfm_specs,
+    "sasrec": rs.sasrec_specs,
+    "two_tower": rs.two_tower_specs,
+}
+_LOSS = {
+    "dlrm": rs.dlrm_loss,
+    "deepfm": rs.deepfm_loss,
+    "sasrec": rs.sasrec_loss,
+    "two_tower": rs.two_tower_loss,
+}
+
+
+class RecsysArch(Arch):
+    family = "recsys"
+
+    def __init__(self, cfg: rs.RecsysConfig, shapes: Dict[str, dict] | None = None):
+        self.name = cfg.name
+        self.cfg = cfg
+        self.shapes = shapes or RECSYS_SHAPES
+
+    def shape_names(self):
+        return list(self.shapes)
+
+    def _batch_abs(self, batch: int, *, serve: bool = False, candidates: int = 0):
+        cfg = self.cfg
+        i32, f32 = jnp.int32, jnp.float32
+        m = cfg.model
+        if m == "dlrm":
+            out = {
+                "dense": jax.ShapeDtypeStruct((batch, cfg.n_dense), f32),
+                "sparse": jax.ShapeDtypeStruct((batch, len(cfg.vocab_sizes)), i32),
+            }
+            if not serve:
+                out["label"] = jax.ShapeDtypeStruct((batch,), f32)
+            return out
+        if m == "deepfm":
+            out = {"sparse": jax.ShapeDtypeStruct((batch, len(cfg.vocab_sizes)), i32)}
+            if not serve:
+                out["label"] = jax.ShapeDtypeStruct((batch,), f32)
+            return out
+        if m == "sasrec":
+            out = {"seq": jax.ShapeDtypeStruct((batch, cfg.seq_len), i32)}
+            if serve:
+                out["candidates"] = jax.ShapeDtypeStruct(
+                    (batch, candidates or 100), i32
+                )
+            else:
+                out["pos"] = jax.ShapeDtypeStruct((batch, cfg.seq_len), i32)
+                out["neg"] = jax.ShapeDtypeStruct((batch, cfg.seq_len), i32)
+            return out
+        # two_tower
+        out = {
+            "user_id": jax.ShapeDtypeStruct((batch,), i32),
+            "hist": jax.ShapeDtypeStruct((batch, cfg.hist_len), i32),
+        }
+        if candidates:
+            out["candidates"] = jax.ShapeDtypeStruct(
+                (candidates, cfg.tower_mlp[-1]), f32
+            )
+        else:
+            out["item_id"] = jax.ShapeDtypeStruct((batch,), i32)
+        return out
+
+    def _batch_specs(self, batch_abs, mi: MeshInfo):
+        specs = {}
+        for k, v in batch_abs.items():
+            if k == "candidates" and v.ndim == 2 and v.dtype == jnp.float32:
+                # candidate embedding matrix: shard rows over model axis
+                specs[k] = P(mi.axes_if_divisible(v.shape[0], (mi.tp_axis,)), None)
+            else:
+                lead = mi.axes_if_divisible(v.shape[0], mi.dp_axes)
+                specs[k] = P(*((lead,) + (None,) * (len(v.shape) - 1)))
+        return specs
+
+    def make_cell(self, shape: str, mi: MeshInfo) -> CellSpec:
+        cfg = self.cfg
+        sh = self.shapes[shape]
+        b = sh["batch"]
+        params_abs = jax.eval_shape(
+            lambda: _INIT[cfg.model](jax.random.PRNGKey(0), cfg)
+        )
+        pspecs = _SPECS[cfg.model](cfg, mi)
+        name = f"{self.name}:{shape}"
+
+        if sh["kind"] == "train":
+            opt = adamw(lr=1e-3)
+            opt_abs = jax.eval_shape(opt.init, params_abs)
+            opt_specs = opt.state_specs(pspecs, params_abs)
+            loss_fn = lambda p, batch: _LOSS[cfg.model](p, cfg, mi, batch)
+            step = make_train_step(loss_fn, opt)
+            batch_abs = self._batch_abs(b)
+            return CellSpec(
+                name=name,
+                kind="train",
+                fn=step,
+                args=(params_abs, opt_abs, batch_abs),
+                in_specs=(pspecs, opt_specs, self._batch_specs(batch_abs, mi)),
+                donate_argnums=(0, 1),
+            )
+
+        n_cand = sh.get("n_candidates", 0)
+        if cfg.model == "two_tower":
+            if n_cand:
+                fn = lambda p, batch: rs.two_tower_score_candidates(p, cfg, mi, batch)
+                batch_abs = self._batch_abs(b, serve=True, candidates=n_cand)
+            else:
+                def fn(p, batch):
+                    u = rs.two_tower_user(p, cfg, mi, batch)
+                    v = rs.two_tower_item(p, cfg, mi, batch["item_id"])
+                    return jnp.sum(u * v, axis=-1)
+
+                batch_abs = self._batch_abs(b)
+        elif cfg.model == "sasrec":
+            fn = lambda p, batch: rs.sasrec_serve(p, cfg, mi, batch)
+            batch_abs = self._batch_abs(b, serve=True, candidates=n_cand or 100)
+        else:
+            fwd = rs.dlrm_forward if cfg.model == "dlrm" else rs.deepfm_forward
+            bb = n_cand if n_cand else b
+            fn = lambda p, batch: jax.nn.sigmoid(fwd(p, cfg, mi, batch))
+            batch_abs = self._batch_abs(bb, serve=True)
+        return CellSpec(
+            name=name,
+            kind="serve",
+            fn=fn,
+            args=(params_abs, batch_abs),
+            in_specs=(pspecs, self._batch_specs(batch_abs, mi)),
+        )

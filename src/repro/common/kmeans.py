@@ -1,0 +1,35 @@
+"""Blocked Lloyd's k-means in pure JAX (used by PQ codebook training and by
+the synthetic-label pipeline that reproduces the paper's SIFT labeling)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.distances import squared_l2
+
+Array = jax.Array
+
+
+@partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans(rng: Array, x: Array, k: int, iters: int = 25) -> tuple[Array, Array]:
+    """Returns (centroids (k, d), assignment (n,) int32)."""
+    n = x.shape[0]
+    init_idx = jax.random.choice(rng, n, (k,), replace=False)
+    cent = x[init_idx].astype(jnp.float32)
+
+    def step(cent, _):
+        d = squared_l2(x, cent)  # (n, k)
+        assign = jnp.argmin(d, axis=-1)
+        one_hot = jax.nn.one_hot(assign, k, dtype=jnp.float32)  # (n, k)
+        counts = jnp.sum(one_hot, axis=0)  # (k,)
+        sums = one_hot.T @ x.astype(jnp.float32)  # (k, d)
+        new = sums / jnp.maximum(counts[:, None], 1.0)
+        # Keep empty clusters where they were.
+        new = jnp.where(counts[:, None] > 0, new, cent)
+        return new, None
+
+    cent, _ = jax.lax.scan(step, cent, None, length=iters)
+    assign = jnp.argmin(squared_l2(x, cent), axis=-1).astype(jnp.int32)
+    return cent, assign

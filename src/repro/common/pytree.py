@@ -1,0 +1,66 @@
+"""Tiny pytree-dataclass helper (flax.struct-like, no external deps).
+
+Usage::
+
+    @pytree_dataclass
+    class State:
+        x: jax.Array
+        n: int = static_field(default=0)   # static (aux) field
+
+Static fields become part of the pytree aux data (hashable, compared for
+equality when jitting); array fields are children.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, TypeVar
+
+import jax
+
+_T = TypeVar("_T")
+
+_STATIC_MARK = "__repro_static__"
+
+
+def static_field(**kwargs: Any) -> Any:
+    """A dataclass field treated as static (pytree aux data)."""
+    metadata = dict(kwargs.pop("metadata", {}) or {})
+    metadata[_STATIC_MARK] = True
+    return dataclasses.field(metadata=metadata, **kwargs)
+
+
+def pytree_dataclass(cls: type[_T]) -> type[_T]:
+    """Decorator: frozen dataclass registered as a JAX pytree."""
+    cls = dataclasses.dataclass(frozen=True)(cls)
+    fields = dataclasses.fields(cls)
+    child_names = tuple(
+        f.name for f in fields if not f.metadata.get(_STATIC_MARK, False)
+    )
+    static_names = tuple(
+        f.name for f in fields if f.metadata.get(_STATIC_MARK, False)
+    )
+
+    def flatten(obj):
+        children = tuple(getattr(obj, n) for n in child_names)
+        aux = tuple(getattr(obj, n) for n in static_names)
+        return children, aux
+
+    def flatten_with_keys(obj):
+        children = tuple(
+            (jax.tree_util.GetAttrKey(n), getattr(obj, n)) for n in child_names
+        )
+        aux = tuple(getattr(obj, n) for n in static_names)
+        return children, aux
+
+    def unflatten(aux, children):
+        kwargs = dict(zip(child_names, children))
+        kwargs.update(dict(zip(static_names, aux)))
+        return cls(**kwargs)
+
+    jax.tree_util.register_pytree_with_keys(cls, flatten_with_keys, unflatten, flatten)
+
+    def replace(self: _T, **updates: Any) -> _T:
+        return dataclasses.replace(self, **updates)
+
+    cls.replace = replace  # type: ignore[attr-defined]
+    return cls

@@ -1,0 +1,42 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+10 assigned architectures + the paper's own AIRSHIP serve workload.
+"""
+from repro.archs.base import register
+from repro.configs import lm_configs as lm
+from repro.configs import other_configs as oc
+
+ASSIGNED = (
+    "deepseek-v2-236b",
+    "deepseek-v3-671b",
+    "command-r-plus-104b",
+    "granite-3-2b",
+    "command-r-35b",
+    "mace",
+    "two-tower-retrieval",
+    "deepfm",
+    "sasrec",
+    "dlrm-mlperf",
+)
+
+register("deepseek-v2-236b", lm.deepseek_v2_236b)
+register("deepseek-v3-671b", lm.deepseek_v3_671b)
+register("command-r-plus-104b", lm.command_r_plus_104b)
+register("command-r-35b", lm.command_r_35b)
+register("granite-3-2b", lm.granite_3_2b)
+register("mace", oc.mace)
+register("dlrm-mlperf", oc.dlrm_mlperf)
+register("deepfm", oc.deepfm)
+register("sasrec", oc.sasrec)
+register("two-tower-retrieval", oc.two_tower_retrieval)
+register("airship-sift1m", oc.airship_sift1m)
+
+# Reduced smoke variants (same family code paths, CPU-sized).
+register("smoke-gqa", lambda: lm.smoke_lm("gqa"))
+register("smoke-mla-moe", lambda: lm.smoke_lm("mla", moe=True, mtp=True))
+register("smoke-mace", oc.smoke_mace)
+register("smoke-dlrm", lambda: oc.smoke_recsys("dlrm"))
+register("smoke-deepfm", lambda: oc.smoke_recsys("deepfm"))
+register("smoke-sasrec", lambda: oc.smoke_recsys("sasrec"))
+register("smoke-two-tower", lambda: oc.smoke_recsys("two_tower"))
+register("smoke-airship", oc.smoke_airship)

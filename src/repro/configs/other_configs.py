@@ -1,0 +1,155 @@
+"""MACE, the four recsys archs, and the paper's own AIRSHIP serve config."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.archs.airship import AirshipArch, AirshipServeConfig
+from repro.archs.gnn import GNNArch
+from repro.archs.recsys import RecsysArch
+from repro.core.types import SearchParams
+from repro.models.gnn.mace import MACEConfig
+from repro.models.recsys.models import RecsysConfig
+
+# MLPerf DLRM (Criteo 1TB) categorical vocab sizes — 26 fields.
+CRITEO_VOCABS = (
+    39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63, 38532951,
+    2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14, 39979771,
+    25641295, 39664984, 585935, 12972, 108, 36,
+)
+
+# DeepFM on Criteo-style features: 13 bucketized numeric (vocab 1024) +
+# 26 categorical hashed to <=1M rows (hash-trick, standard DeepFM practice).
+DEEPFM_VOCABS = tuple([1024] * 13 + [min(v, 1_000_000) for v in CRITEO_VOCABS])
+
+
+def mace() -> GNNArch:
+    # [arXiv:2206.07697]: 2 interaction layers, 128 channels, l_max=2,
+    # correlation order 3, 8 Bessel RBFs, E(3)-equivariant.
+    return GNNArch(
+        MACEConfig(
+            name="mace",
+            n_layers=2,
+            d_hidden=128,
+            l_max=2,
+            correlation_order=3,
+            n_rbf=8,
+        )
+    )
+
+
+def smoke_mace() -> GNNArch:
+    shapes = {
+        "full_graph_sm": dict(kind="train", n_nodes=64, n_edges=256, d_feat=16, mode="simple"),
+        "minibatch_lg": dict(kind="train", batch_nodes=8, fanouts=(3, 2), d_feat=16, mode="sampled"),
+        "ogb_products": dict(kind="train", n_nodes=128, n_edges=512, d_feat=8, mode="dst_partitioned"),
+        "molecule": dict(kind="train", n_nodes=6, n_edges=12, batch=4, mode="batched"),
+    }
+    return GNNArch(
+        MACEConfig(name="smoke-mace", n_layers=2, d_hidden=8, n_rbf=4), shapes=shapes
+    )
+
+
+def dlrm_mlperf() -> RecsysArch:
+    # [arXiv:1906.00091] MLPerf config: 13 dense, 26 sparse, dim 128,
+    # bottom 512-256-128, top 1024-1024-512-256-1, dot interaction.
+    return RecsysArch(
+        RecsysConfig(
+            name="dlrm-mlperf",
+            model="dlrm",
+            embed_dim=128,
+            vocab_sizes=CRITEO_VOCABS,
+            n_dense=13,
+            bot_mlp=(512, 256, 128),
+            top_mlp=(1024, 1024, 512, 256, 1),
+        )
+    )
+
+
+def deepfm() -> RecsysArch:
+    # [arXiv:1703.04247]: 39 fields, dim 10, MLP 400-400-400, FM interaction.
+    return RecsysArch(
+        RecsysConfig(
+            name="deepfm",
+            model="deepfm",
+            embed_dim=10,
+            vocab_sizes=DEEPFM_VOCABS,
+            mlp=(400, 400, 400),
+        )
+    )
+
+
+def sasrec() -> RecsysArch:
+    # [arXiv:1808.09781]: dim 50, 2 blocks, 1 head, seq 50. Item vocab set
+    # to 1M (industrial scale; vocab is not pinned by the paper config) so
+    # retrieval_cand (1M candidates) is well-defined.
+    return RecsysArch(
+        RecsysConfig(
+            name="sasrec",
+            model="sasrec",
+            embed_dim=50,
+            seq_len=50,
+            n_blocks=2,
+            n_heads=1,
+            item_vocab=1_000_000,
+        )
+    )
+
+
+def two_tower_retrieval() -> RecsysArch:
+    # [RecSys'19 YouTube]: dim 256, towers 1024-512-256, dot interaction.
+    return RecsysArch(
+        RecsysConfig(
+            name="two-tower-retrieval",
+            model="two_tower",
+            embed_dim=256,
+            tower_mlp=(1024, 512, 256),
+            item_vocab=50_000_000,
+            user_vocab=50_000_000,
+            hist_len=50,
+        )
+    )
+
+
+def smoke_recsys(model: str) -> RecsysArch:
+    shapes = {
+        "train_batch": dict(kind="train", batch=16),
+        "serve_p99": dict(kind="serve", batch=8),
+        "serve_bulk": dict(kind="serve", batch=32),
+        "retrieval_cand": dict(kind="serve", batch=1, n_candidates=256),
+    }
+    cfgs = {
+        "dlrm": RecsysConfig(
+            name="smoke-dlrm", model="dlrm", embed_dim=8,
+            vocab_sizes=(100, 50, 30), n_dense=4, bot_mlp=(16, 8), top_mlp=(16, 1),
+        ),
+        "deepfm": RecsysConfig(
+            name="smoke-deepfm", model="deepfm", embed_dim=5,
+            vocab_sizes=(40,) * 6, mlp=(16, 16),
+        ),
+        "sasrec": RecsysConfig(
+            name="smoke-sasrec", model="sasrec", embed_dim=16,
+            seq_len=10, n_blocks=2, n_heads=1, item_vocab=200,
+        ),
+        "two_tower": RecsysConfig(
+            name="smoke-two-tower", model="two_tower", embed_dim=16,
+            tower_mlp=(32, 8), item_vocab=500, user_vocab=300, hist_len=5,
+        ),
+    }
+    return RecsysArch(cfgs[model], shapes=shapes)
+
+
+def airship_sift1m() -> AirshipArch:
+    # The paper's evaluation scale: 1M 128-d vectors, 10 labels (SIFT1M +
+    # k-means labeling protocol, §3 'Data').
+    return AirshipArch(AirshipServeConfig())
+
+
+def smoke_airship() -> AirshipArch:
+    cfg = AirshipServeConfig(
+        name="smoke-airship", n=2048, dim=16, degree=8, sample_per_shard=32,
+        params=SearchParams(
+            mode="prefer", k=5, ef_result=32, ef_sat=32, ef_other=32,
+            n_start=8, max_iters=64,
+        ),
+    )
+    return AirshipArch(cfg, shapes={"serve_256": dict(kind="serve", batch=16)})

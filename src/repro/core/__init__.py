@@ -1,0 +1,53 @@
+# AIRSHIP — constrained approximate similarity search on proximity graph.
+# The paper's contribution lives here: batched lock-step graph search with
+# two-frontier alternation, start-point selection, biased queue preference,
+# and the Eq.-1 alter_ratio estimator; plus the baselines it is evaluated
+# against (vanilla filtered search, PQ linear scan, 3-stage pipeline) and the
+# scatter-search-merge distributed layout.
+from repro.core.alter_ratio import estimate_alter_ratio
+from repro.core.constraints import (
+    LabelSetConstraint,
+    RangeConstraint,
+    equal_constraint,
+    label_set_from_lists,
+    make_satisfied_fn,
+    selectivity,
+    unequal_pct_constraint,
+)
+from repro.core.distributed import make_distributed_search, shard_corpus_for_mesh
+from repro.core.exact import exact_constrained_search, recall
+from repro.core.pipeline import three_stage_pipeline
+from repro.core.pq import PQIndex, pq_constrained_search, pq_train
+from repro.core.search import constrained_search
+from repro.core.types import (
+    Corpus,
+    GraphIndex,
+    SearchParams,
+    SearchResult,
+    SearchStats,
+)
+
+__all__ = [
+    "Corpus",
+    "GraphIndex",
+    "LabelSetConstraint",
+    "PQIndex",
+    "RangeConstraint",
+    "SearchParams",
+    "SearchResult",
+    "SearchStats",
+    "constrained_search",
+    "equal_constraint",
+    "estimate_alter_ratio",
+    "exact_constrained_search",
+    "label_set_from_lists",
+    "make_distributed_search",
+    "make_satisfied_fn",
+    "pq_constrained_search",
+    "pq_train",
+    "recall",
+    "selectivity",
+    "shard_corpus_for_mesh",
+    "three_stage_pipeline",
+    "unequal_pct_constraint",
+]

@@ -1,0 +1,51 @@
+"""alter_ratio estimation (paper §2.4, Eq. 1).
+
+The proximity graph approximates a kNN graph and each adjacency row is
+distance-sorted at build time, so the first ``k`` edges of a vertex *are* its
+approximate k nearest neighbors — Eq. 1 then needs zero distance evaluations
+at query time:
+
+    alter_ratio = mean over sampled satisfied vertices v of
+                  |{satisfied u : u in top-k edges of v}| / k
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Corpus, GraphIndex, SatisfiedFn
+
+Array = jax.Array
+
+
+def estimate_alter_ratio(
+    graph: GraphIndex,
+    satisfied: SatisfiedFn,
+    sample_sat_mask: Array,
+    k: int,
+    default: float = 0.5,
+) -> Array:
+    """Per-query alter_ratio estimate.
+
+    sample_sat_mask: (B, S) bool — which of ``graph.sample_ids`` satisfy each
+    query's constraint (already computed by the start-point selection; reused
+    here for free).
+
+    Returns (B,) float32 in [0, 1]; ``default`` when a query has no satisfied
+    sample vertex (Assumption 1 violated within the sample).
+    """
+    sample = graph.sample_ids  # (S,)
+    b = sample_sat_mask.shape[0]
+    k = min(k, graph.degree)
+    nbrs = graph.neighbors[sample, :k]  # (S, k)
+    nbrs_b = jnp.broadcast_to(nbrs[None], (b,) + nbrs.shape)  # (B, S, k)
+    nb_sat = satisfied(nbrs_b.reshape(b, -1)).reshape(b, sample.shape[0], k)
+    valid = (nbrs_b >= 0)
+    # Fraction of satisfied among the (valid) top-k edges of each sample vertex.
+    frac = jnp.sum((nb_sat & valid).astype(jnp.float32), axis=-1) / jnp.maximum(
+        jnp.sum(valid.astype(jnp.float32), axis=-1), 1.0
+    )  # (B, S)
+    m = sample_sat_mask.astype(jnp.float32)
+    n_sat = jnp.sum(m, axis=-1)  # (B,)
+    est = jnp.sum(frac * m, axis=-1) / jnp.maximum(n_sat, 1.0)
+    return jnp.where(n_sat > 0, est, jnp.float32(default))

@@ -1,0 +1,187 @@
+"""Query-constraint representations.
+
+The paper models the constraint as an arbitrary user-defined predicate
+``f(v) -> bool``. On TPU we need the predicate to be (a) vectorizable over
+candidate ids and (b) expressible as per-query *data* so that one compiled
+search serves every query. Three families cover the paper's experiments and
+the common production cases, plus an escape hatch for arbitrary jnp UDFs:
+
+  * ``LabelSetConstraint`` — per-query bitmask over label ids. Covers the
+    paper's ``equal`` and ``unequal-X%`` constraint families and any
+    category-membership filter (up to a few thousand distinct labels).
+  * ``RangeConstraint`` — per-query [lo, hi] window over one numeric
+    attribute column.
+  * ``udf_satisfied_fn`` — wraps any jnp-traceable predicate over corpus
+    attributes (compiled per distinct UDF, like the paper's templated C++).
+
+Every family lowers to a ``SatisfiedFn: (B, M) ids -> (B, M) bool`` closed
+over the corpus attribute arrays; the search core only sees that interface.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.pytree import pytree_dataclass
+from repro.core.types import Corpus, SatisfiedFn
+
+Array = jax.Array
+
+WORD_BITS = 32
+
+
+@pytree_dataclass
+class LabelSetConstraint:
+    """Per-query allowed-label set as a bitmask: (B, ceil(L/32)) uint32."""
+
+    words: Array
+
+    @property
+    def batch(self) -> int:
+        return self.words.shape[0]
+
+
+@pytree_dataclass
+class RangeConstraint:
+    """Per-query numeric window over attribute column ``col`` (static)."""
+
+    lo: Array  # (B,)
+    hi: Array  # (B,)
+    col: Array  # () int32 — attribute column index
+
+
+def _label_words(n_labels: int) -> int:
+    return (n_labels + WORD_BITS - 1) // WORD_BITS
+
+
+def label_set_from_lists(
+    allowed: Sequence[Sequence[int]], n_labels: int
+) -> LabelSetConstraint:
+    """Host-side builder from explicit python label lists."""
+    w = _label_words(n_labels)
+    out = np.zeros((len(allowed), w), dtype=np.uint32)
+    for i, labels in enumerate(allowed):
+        for lab in labels:
+            out[i, lab // WORD_BITS] |= np.uint32(1) << np.uint32(lab % WORD_BITS)
+    return LabelSetConstraint(words=jnp.asarray(out))
+
+
+def equal_constraint(query_labels: Array, n_labels: int) -> LabelSetConstraint:
+    """Paper §3 'equal': results must share the query's label."""
+    b = query_labels.shape[0]
+    w = _label_words(n_labels)
+    words = jnp.zeros((b, w), dtype=jnp.uint32)
+    widx = query_labels // WORD_BITS
+    bit = jnp.uint32(1) << (query_labels % WORD_BITS).astype(jnp.uint32)
+    return LabelSetConstraint(
+        words=words.at[jnp.arange(b), widx].set(bit)
+    )
+
+
+def unequal_pct_constraint(
+    rng: Array, query_labels: Array, n_labels: int, pct: float
+) -> LabelSetConstraint:
+    """Paper §3 'unequal-X%': allow a random X% of labels, all != query label.
+
+    ``pct`` in (0, 100]. At least one label is always allowed.
+    """
+    b = query_labels.shape[0]
+    n_allowed = max(1, int(round(n_labels * pct / 100.0)))
+    # Random scores; the query's own label is pushed to the back so the top
+    # n_allowed picks are all unequal.
+    scores = jax.random.uniform(rng, (b, n_labels))
+    scores = scores.at[jnp.arange(b), query_labels].set(jnp.inf)
+    picked = jnp.argsort(scores, axis=-1)[:, :n_allowed]  # (B, n_allowed)
+    w = _label_words(n_labels)
+    words = jnp.zeros((b, w), dtype=jnp.uint32)
+    widx = picked // WORD_BITS
+    bits = jnp.uint32(1) << (picked % WORD_BITS).astype(jnp.uint32)
+    rows = jnp.broadcast_to(jnp.arange(b)[:, None], picked.shape)
+    # Distinct labels -> distinct (word,bit); add == or.
+    return LabelSetConstraint(words=words.at[rows, widx].add(bits))
+
+
+def label_satisfied_fn(
+    constraint: LabelSetConstraint, corpus: Corpus
+) -> SatisfiedFn:
+    labels = corpus.labels
+
+    def satisfied(ids: Array) -> Array:  # (B, M) -> (B, M)
+        safe = jnp.maximum(ids, 0)
+        lab = labels[safe]  # (B, M)
+        widx = lab // WORD_BITS
+        bit = (lab % WORD_BITS).astype(jnp.uint32)
+        word = jnp.take_along_axis(constraint.words, widx, axis=-1)
+        ok = ((word >> bit) & jnp.uint32(1)).astype(bool)
+        return jnp.where(ids >= 0, ok, False)
+
+    return satisfied
+
+
+def range_satisfied_fn(constraint: RangeConstraint, corpus: Corpus) -> SatisfiedFn:
+    if corpus.attrs is None:
+        raise ValueError("corpus has no numeric attributes")
+    attrs = corpus.attrs
+
+    def satisfied(ids: Array) -> Array:
+        safe = jnp.maximum(ids, 0)
+        val = attrs[safe, constraint.col]  # (B, M)
+        ok = (val >= constraint.lo[:, None]) & (val <= constraint.hi[:, None])
+        return jnp.where(ids >= 0, ok, False)
+
+    return satisfied
+
+
+def udf_satisfied_fn(
+    udf: Callable[[Array, Array], Array], corpus: Corpus
+) -> SatisfiedFn:
+    """Arbitrary jnp predicate ``udf(labels, attrs_row) -> bool``, vmapped.
+
+    The UDF receives the candidate's label (scalar) and attribute row (m,)
+    and must be jnp-traceable. One compiled search per distinct UDF — the
+    same cost model as the paper's templated C++ filter.
+    """
+    labels = corpus.labels
+    attrs = (
+        corpus.attrs
+        if corpus.attrs is not None
+        else jnp.zeros((corpus.n, 0), jnp.float32)
+    )
+    per_item = jax.vmap(jax.vmap(udf))
+
+    def satisfied(ids: Array) -> Array:
+        safe = jnp.maximum(ids, 0)
+        ok = per_item(labels[safe], attrs[safe])
+        return jnp.where(ids >= 0, ok, False)
+
+    return satisfied
+
+
+def make_satisfied_fn(constraint, corpus: Corpus) -> SatisfiedFn:
+    if isinstance(constraint, LabelSetConstraint):
+        return label_satisfied_fn(constraint, corpus)
+    if isinstance(constraint, RangeConstraint):
+        return range_satisfied_fn(constraint, corpus)
+    if callable(constraint):
+        return udf_satisfied_fn(constraint, corpus)
+    raise TypeError(f"unsupported constraint: {type(constraint)}")
+
+
+def selectivity(constraint, corpus: Corpus) -> Array:
+    """(B,) fraction of the corpus satisfying each query's constraint.
+
+    Linear scan — used by Assumption-1 fallback logic and by benchmarks.
+    """
+    fn = make_satisfied_fn(constraint, corpus)
+    ids = jnp.arange(corpus.n, dtype=jnp.int32)[None, :]
+    if isinstance(constraint, LabelSetConstraint):
+        b = constraint.batch
+    elif isinstance(constraint, RangeConstraint):
+        b = constraint.lo.shape[0]
+    else:
+        b = 1
+    ids = jnp.broadcast_to(ids, (b, corpus.n))
+    return jnp.mean(fn(ids).astype(jnp.float32), axis=-1)

@@ -1,0 +1,134 @@
+"""Distributed constrained search: scatter-search-merge over the mesh.
+
+Layout (see DESIGN.md §4):
+  * corpus rows + their *local* proximity subgraph are sharded over the
+    ``model`` axis (each device owns an independent subgraph whose neighbor
+    ids are local),
+  * the query batch is sharded over the ``data`` (and optionally ``pod``)
+    axes and replicated within each model group,
+  * every shard runs the full AIRSHIP search on its rows, then the global
+    top-k is one `all_gather(K)` + local merge per batch — the only
+    collective on the serving path.
+
+This is the standard production layout for distributed graph-ANN (per-shard
+indexes + result merge); it keeps the graph walk entirely local so no
+pointer-chasing ever crosses the interconnect.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.constraints import LabelSetConstraint
+from repro.core.search import constrained_search
+from repro.core.types import Corpus, GraphIndex, SearchParams, SearchResult, SearchStats
+
+Array = jax.Array
+
+
+def merge_topk(dists: Array, ids: Array, k: int) -> tuple[Array, Array]:
+    """Merge per-shard results: (B, P, K) -> (B, k) global best."""
+    b = dists.shape[0]
+    flat_d = dists.reshape(b, -1)
+    flat_i = ids.reshape(b, -1)
+    neg, pos = jax.lax.top_k(-flat_d, k)
+    out_i = jnp.take_along_axis(flat_i, pos, axis=-1)
+    return -neg, jnp.where(jnp.isfinite(-neg), out_i, -1)
+
+
+def make_distributed_search(
+    mesh: Mesh,
+    params: SearchParams,
+    *,
+    corpus_axis: str = "model",
+    batch_axes: Sequence[str] = ("data",),
+    with_pq: bool = False,
+):
+    """Build a jitted distributed search fn for a given mesh.
+
+    The returned fn takes (corpus, graph, queries, constraint[, pq_index])
+    where corpus / graph hold the *global* arrays (sharded row-wise over
+    ``corpus_axis``; neighbor ids are shard-local) and queries / constraint
+    are batch-sharded. With ``with_pq`` (params.approx == "pq"), the PQ code
+    matrix shards with the corpus rows and codebooks replicate.
+    """
+    batch_axes = tuple(batch_axes)
+    corpus_spec = P(corpus_axis)
+    batch_spec = P(batch_axes)
+
+    in_specs = (
+        Corpus(vectors=corpus_spec, labels=corpus_spec, attrs=None),
+        GraphIndex(
+            neighbors=corpus_spec, sample_ids=corpus_spec, entry_point=corpus_spec
+        ),
+        P(batch_axes, None),  # queries
+        LabelSetConstraint(words=P(batch_axes, None)),
+    )
+    if with_pq:
+        from repro.core.pq import PQIndex
+
+        in_specs = in_specs + (
+            PQIndex(codebooks=P(), codes=corpus_spec),
+        )
+    out_specs = SearchResult(
+        dists=P(batch_axes, None),
+        ids=P(batch_axes, None),
+        stats=SearchStats(
+            dist_evals=P(batch_axes),
+            hops=P(batch_axes),
+            visited=P(batch_axes),
+            iters=P(),
+        ),
+    )
+
+    def shard_fn(corpus, graph, queries, constraint, *pq):
+        n_local = corpus.vectors.shape[0]
+        shard = jax.lax.axis_index(corpus_axis)
+        res = constrained_search(
+            corpus, graph, queries, constraint, params,
+            pq_index=pq[0] if pq else None,
+        )
+        # Local ids -> global ids (row-sharded partition => offset).
+        gids = jnp.where(res.ids >= 0, res.ids + shard * n_local, -1)
+        # One collective: gather every shard's K best, merge locally.
+        all_d = jax.lax.all_gather(res.dists, corpus_axis, axis=1)  # (B, P, K)
+        all_i = jax.lax.all_gather(gids, corpus_axis, axis=1)
+        out_d, out_i = merge_topk(all_d, all_i, params.k)
+        stats = SearchStats(
+            dist_evals=jax.lax.psum(res.stats.dist_evals, corpus_axis),
+            hops=jax.lax.pmax(res.stats.hops, corpus_axis),
+            visited=jax.lax.psum(res.stats.visited, corpus_axis),
+            iters=jax.lax.pmax(res.stats.iters, corpus_axis),
+        )
+        return SearchResult(dists=out_d, ids=out_i, stats=stats)
+
+    sharded = jax.shard_map(
+        shard_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False,
+    )
+    return jax.jit(sharded)
+
+
+def shard_corpus_for_mesh(
+    corpus: Corpus, graph: GraphIndex, mesh: Mesh, corpus_axis: str = "model"
+):
+    """Device-put global arrays with the row-sharded layout expected above."""
+    cspec = NamedSharding(mesh, P(corpus_axis))
+    rep = NamedSharding(mesh, P())
+    corpus_s = Corpus(
+        vectors=jax.device_put(corpus.vectors, cspec),
+        labels=jax.device_put(corpus.labels, cspec),
+        attrs=None,
+    )
+    del rep
+    graph_s = GraphIndex(
+        neighbors=jax.device_put(graph.neighbors, cspec),
+        sample_ids=jax.device_put(graph.sample_ids, cspec),
+        entry_point=jax.device_put(graph.entry_point, cspec),
+    )
+    return corpus_s, graph_s

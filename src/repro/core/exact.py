@@ -1,0 +1,70 @@
+"""Exact (brute-force) constrained search — the recall oracle and the
+Assumption-1 fallback (paper §2.2: when fewer than p% of vectors satisfy the
+constraint, a linear scan + brute-force ranking is the right tool).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.distances import squared_l2
+from repro.core.constraints import make_satisfied_fn
+from repro.core.types import Corpus
+
+Array = jax.Array
+
+
+@partial(jax.jit, static_argnames=("k", "block"))
+def exact_constrained_search(
+    corpus: Corpus, queries: Array, constraint, k: int, block: int = 65536
+) -> tuple[Array, Array]:
+    """Blocked exact constrained top-k. Returns ((B,k) dists, (B,k) ids).
+
+    Streams the corpus in ``block``-row chunks to bound the (B, n) score
+    matrix footprint; running top-k is merged per block.
+    """
+    satisfied = make_satisfied_fn(constraint, corpus)
+    b = queries.shape[0]
+    n = corpus.n
+    n_blocks = (n + block - 1) // block
+    pad = n_blocks * block - n
+
+    vecs = jnp.pad(corpus.vectors, ((0, pad), (0, 0)))
+    ids_all = jnp.arange(n_blocks * block, dtype=jnp.int32)
+
+    def body(carry, blk):
+        best_d, best_i = carry
+        rows = jax.lax.dynamic_slice_in_dim(vecs, blk * block, block, axis=0)
+        ids = jax.lax.dynamic_slice_in_dim(ids_all, blk * block, block, axis=0)
+        d = squared_l2(queries, rows)  # (B, block)
+        ids_b = jnp.broadcast_to(ids[None], (b, block))
+        ok = satisfied(ids_b) & (ids_b < n)
+        d = jnp.where(ok, d, jnp.inf)
+        merged_d = jnp.concatenate([best_d, d], axis=-1)
+        merged_i = jnp.concatenate([best_i, ids_b], axis=-1)
+        neg, pos = jax.lax.top_k(-merged_d, k)
+        return (-neg, jnp.take_along_axis(merged_i, pos, axis=-1)), None
+
+    init = (
+        jnp.full((b, k), jnp.inf, jnp.float32),
+        jnp.full((b, k), -1, jnp.int32),
+    )
+    (best_d, best_i), _ = jax.lax.scan(body, init, jnp.arange(n_blocks))
+    best_i = jnp.where(jnp.isfinite(best_d), best_i, -1)
+    return best_d, best_i
+
+
+def recall(found_ids: Array, true_ids: Array) -> Array:
+    """Paper §3 recall: |A ∩ B| / |B| per query, averaged.
+
+    Padding (-1) in ``true_ids`` (fewer than k satisfied vectors exist) is
+    excluded from B.
+    """
+    hits = (found_ids[:, :, None] == true_ids[:, None, :]) & (
+        true_ids[:, None, :] >= 0
+    )
+    inter = jnp.sum(jnp.any(hits, axis=1), axis=-1)
+    denom = jnp.maximum(jnp.sum(true_ids >= 0, axis=-1), 1)
+    return jnp.mean(inter / denom)

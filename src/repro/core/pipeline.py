@@ -1,0 +1,66 @@
+"""The original three-stage pipeline (paper Fig. 1, upper path).
+
+Stage 1: unconstrained ANN retrieves ``s`` candidates; stage 2 filters them by
+the constraint; stage 3 re-ranks the survivors to top-k. This is the baseline
+AIRSHIP replaces — implemented here so benchmarks can quantify the defect the
+paper identifies (``c < k`` failures and the wasted over-retrieval factor).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.constraints import LabelSetConstraint, make_satisfied_fn
+from repro.core.search import constrained_search
+from repro.core.types import Corpus, GraphIndex, SearchParams
+
+Array = jax.Array
+
+
+def _allpass_constraint(batch: int, n_label_words: int = 64) -> LabelSetConstraint:
+    """Bitmask accepting every label (stage-1 unconstrained search).
+
+    Covers label ids < 64*32 = 2048 — all experiment protocols here.
+    """
+    return LabelSetConstraint(
+        words=jnp.full((batch, n_label_words), 0xFFFFFFFF, jnp.uint32)
+    )
+
+
+@partial(jax.jit, static_argnames=("s", "k", "ef"))
+def three_stage_pipeline(
+    corpus: Corpus,
+    graph: GraphIndex,
+    queries: Array,
+    constraint,
+    s: int,
+    k: int,
+    ef: int = 0,
+):
+    """Returns (dists (B,k), ids (B,k), n_survived (B,)).
+
+    ``n_survived < k`` is exactly the pipeline failure mode the paper
+    motivates with: the ANN stage retrieved s candidates but fewer than k
+    satisfied the constraint.
+    """
+    ef = ef or max(2 * s, 64)
+    # Stage 1: unconstrained top-s (vanilla search with an all-pass filter).
+    params = SearchParams(
+        mode="vanilla", k=s, ef_result=max(s, 64), ef_sat=8, ef_other=ef,
+        max_iters=4 * ef,
+    )
+    res = constrained_search(
+        corpus, graph, queries, _allpass_constraint(queries.shape[0]), params
+    )
+    # Stage 2: filter the s candidates.
+    satisfied = make_satisfied_fn(constraint, corpus)
+    ok = satisfied(res.ids) & (res.ids >= 0)
+    n_survived = jnp.sum(ok, axis=-1).astype(jnp.int32)
+    # Stage 3: re-rank survivors (they are already distance-sorted) -> top-k.
+    d = jnp.where(ok, res.dists, jnp.inf)
+    neg, pos = jax.lax.top_k(-d, k)
+    ids = jnp.take_along_axis(res.ids, pos, axis=-1)
+    ids = jnp.where(jnp.isfinite(-neg), ids, -1)
+    return -neg, ids, n_survived

@@ -1,0 +1,87 @@
+"""Product-quantization baseline (paper §3 'PQ', Jégou et al. 2011).
+
+The paper's PQ baseline does a constrained *linear scan*: every vector's
+constraint is checked, and the surviving vectors are ranked by asymmetric
+distance (ADC) on the quantized codes. The ADC table scan is the hot loop —
+`repro.kernels.pq_adc` provides the Pallas kernel; this module holds codebook
+training, encoding, and the jnp scan used as its oracle.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.kmeans import kmeans
+from repro.common.pytree import pytree_dataclass
+from repro.core.constraints import make_satisfied_fn
+from repro.core.types import Corpus
+
+Array = jax.Array
+
+
+@pytree_dataclass
+class PQIndex:
+    codebooks: Array  # (m_sub, n_cent, d_sub) f32
+    codes: Array  # (n, m_sub) int32 (values < n_cent)
+
+
+def pq_train(
+    rng: Array, vectors: Array, m_sub: int = 16, n_cent: int = 256, iters: int = 20
+) -> PQIndex:
+    n, d = vectors.shape
+    if d % m_sub != 0:
+        raise ValueError(f"d={d} not divisible by m_sub={m_sub}")
+    d_sub = d // m_sub
+    sub = vectors.reshape(n, m_sub, d_sub).transpose(1, 0, 2)  # (m_sub, n, d_sub)
+    rngs = jax.random.split(rng, m_sub)
+    cents, assigns = jax.vmap(lambda r, x: kmeans(r, x, n_cent, iters))(rngs, sub)
+    return PQIndex(codebooks=cents, codes=assigns.T.astype(jnp.int32))
+
+
+def adc_table(index: PQIndex, queries: Array) -> Array:
+    """(B, d) -> (B, m_sub, n_cent) LUT of squared subspace distances."""
+    b = queries.shape[0]
+    m_sub, n_cent, d_sub = index.codebooks.shape
+    qs = queries.reshape(b, m_sub, d_sub).astype(jnp.float32)
+    diff = qs[:, :, None, :] - index.codebooks[None]  # (B, m_sub, n_cent, d_sub)
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def adc_scan(index: PQIndex, lut: Array, use_kernel: bool = False) -> Array:
+    """(B, m_sub, n_cent) LUT -> (B, n) approximate squared distances."""
+    if use_kernel:
+        from repro.kernels.pq_adc.ops import pq_adc
+
+        return pq_adc(lut, index.codes)
+    # (n, m_sub) codes gather into (B, n, m_sub) then reduce.
+    gathered = jnp.take_along_axis(
+        lut[:, None, :, :],  # (B, 1, m_sub, n_cent)
+        index.codes.T[None, None, :, :].transpose(0, 3, 2, 1),  # (1, n, m_sub, 1)
+        axis=-1,
+    )[..., 0]
+    return jnp.sum(gathered, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("k", "use_kernel"))
+def pq_constrained_search(
+    corpus: Corpus,
+    index: PQIndex,
+    queries: Array,
+    constraint,
+    k: int,
+    use_kernel: bool = False,
+) -> tuple[Array, Array]:
+    """Constrained linear PQ scan: filter all n vectors, rank by ADC."""
+    satisfied = make_satisfied_fn(constraint, corpus)
+    b = queries.shape[0]
+    n = corpus.n
+    lut = adc_table(index, queries)
+    d = adc_scan(index, lut, use_kernel=use_kernel)  # (B, n)
+    ids = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None], (b, n))
+    d = jnp.where(satisfied(ids), d, jnp.inf)
+    neg, pos = jax.lax.top_k(-d, k)
+    found = jnp.where(jnp.isfinite(-neg), pos.astype(jnp.int32), -1)
+    return -neg, found

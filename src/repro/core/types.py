@@ -1,0 +1,109 @@
+"""Core value types for the constrained-search system."""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import pytree_dataclass, static_field
+
+Array = jax.Array
+
+
+@pytree_dataclass
+class Corpus:
+    """Base vectors plus their attributes.
+
+    vectors: (n, d) float
+    labels:  (n,)   int32 — the categorical attribute used by the paper's
+             equal / unequal-X% constraint families
+    attrs:   (n, m) float32 — optional numeric attributes for range UDFs
+    """
+
+    vectors: Array
+    labels: Array
+    attrs: Optional[Array] = None
+
+    @property
+    def n(self) -> int:
+        return self.vectors.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.vectors.shape[1]
+
+
+@pytree_dataclass
+class GraphIndex:
+    """Proximity-graph index.
+
+    neighbors: (n, deg) int32 adjacency, rows sorted ascending by distance
+               to the owning vertex (required by the alter_ratio estimator,
+               Eq. 1), padded with -1.
+    sample_ids: (s,) int32 — pre-drawn corpus sample for AIRSHIP-Start.
+    entry_point: () int32 — medoid-ish global entry vertex.
+    """
+
+    neighbors: Array
+    sample_ids: Array
+    entry_point: Array
+
+    @property
+    def degree(self) -> int:
+        return self.neighbors.shape[1]
+
+
+@pytree_dataclass
+class SearchParams:
+    """Static search configuration (hashable — part of the jit cache key)."""
+
+    mode: str = static_field(default="prefer")  # vanilla|start|alter|prefer
+    k: int = static_field(default=10)
+    # Result-list capacity used for the termination test. Alg. 1/2 use
+    # exactly k ("|topk| = K and now_dist > topk.peek_max()"); production
+    # graph searches sweep an HNSW-style ef >= k for the QPS/recall
+    # trade-off. 0 -> max(k, 64).
+    ef_result: int = static_field(default=0)
+    ef_sat: int = static_field(default=128)
+    ef_other: int = static_field(default=128)
+    n_start: int = static_field(default=32)
+    max_iters: int = static_field(default=512)
+    # None -> estimate per-query via the Eq.-1 kNN statistic.
+    alter_ratio: Optional[float] = static_field(default=None)
+    alter_ratio_k: int = static_field(default=16)
+    use_kernel: bool = static_field(default=False)
+    # Beyond-paper: traverse with PQ/ADC approximate distances (32x fewer
+    # HBM bytes per candidate at d=128/m_sub=16), then exact re-rank of the
+    # ef_result survivors. Requires passing pq_index to constrained_search.
+    approx: str = static_field(default="exact")  # exact | pq
+
+    def __post_init__(self):
+        if self.mode not in ("vanilla", "start", "alter", "prefer"):
+            raise ValueError(f"unknown search mode: {self.mode}")
+        if self.approx not in ("exact", "pq"):
+            raise ValueError(f"unknown approx mode: {self.approx}")
+
+    @property
+    def result_capacity(self) -> int:
+        return self.ef_result if self.ef_result > 0 else max(self.k, 64)
+
+
+@pytree_dataclass
+class SearchStats:
+    """Per-query instrumentation (hardware-independent cost measures)."""
+
+    dist_evals: Array  # (B,) int32 — distance computations performed
+    hops: Array  # (B,) int32 — vertices expanded
+    visited: Array  # (B,) int32 — vertices touched
+    iters: Array  # ()  int32 — lock-step iterations of the batch
+
+
+@pytree_dataclass
+class SearchResult:
+    dists: Array  # (B, K) f32 ascending, +inf padded when fewer than K found
+    ids: Array  # (B, K) int32, -1 padded
+    stats: SearchStats
+
+
+SatisfiedFn = Callable[[Array], Array]  # (B, M) ids -> (B, M) bool

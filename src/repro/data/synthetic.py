@@ -1,0 +1,108 @@
+"""Synthetic corpora reproducing the paper's data protocol (§3, 'Data').
+
+The paper uses SIFT1M with k-means (k=10) cluster-ids as labels, optionally
+randomized: with probability R% a vector gets a uniformly random label
+instead of its cluster id. This module generates cluster-structured vectors
+directly (offline container — no downloads), applies the same k-means
+labeling + R% randomization, and synthesizes queries with labels generated
+"in the same fashion as the base vectors".
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.kmeans import kmeans
+from repro.core.types import Corpus
+
+Array = jax.Array
+
+
+def clustered_vectors(
+    rng: Array,
+    n: int,
+    d: int,
+    n_clusters: int,
+    *,
+    spread: float = 0.15,
+    anisotropic: bool = False,
+) -> tuple[Array, Array]:
+    """Gaussian blobs on the unit sphere; returns (vectors (n,d), true (n,))."""
+    r_cent, r_assign, r_noise, r_cov = jax.random.split(rng, 4)
+    centers = jax.random.normal(r_cent, (n_clusters, d))
+    centers = centers / jnp.linalg.norm(centers, axis=-1, keepdims=True)
+    assign = jax.random.randint(r_assign, (n,), 0, n_clusters, dtype=jnp.int32)
+    noise = jax.random.normal(r_noise, (n, d)) * spread
+    if anisotropic:
+        # Per-cluster random axis scaling (MNIST-ish uneven class shapes).
+        scales = jax.random.uniform(r_cov, (n_clusters, d), minval=0.3, maxval=1.7)
+        noise = noise * scales[assign]
+    return centers[assign] + noise, assign
+
+
+def kmeans_labels(
+    rng: Array, vectors: Array, k: int, sample: int = 100_000, iters: int = 15
+) -> Array:
+    """Paper labeling: cluster with k-means, label = cluster id.
+
+    k-means is fit on a subsample for speed, then all vectors are assigned.
+    """
+    n = vectors.shape[0]
+    r_s, r_k = jax.random.split(rng)
+    if n > sample:
+        idx = jax.random.choice(r_s, n, (sample,), replace=False)
+        fit = vectors[idx]
+    else:
+        fit = vectors
+    cent, _ = kmeans(r_k, fit, k, iters)
+    from repro.common.distances import squared_l2
+
+    return jnp.argmin(squared_l2(vectors, cent), axis=-1).astype(jnp.int32)
+
+
+def randomize_labels(
+    rng: Array, labels: Array, n_labels: int, pct_random: float
+) -> Array:
+    """R% randomness (paper §3): with prob R%, replace by a uniform label."""
+    if pct_random <= 0:
+        return labels
+    r_mask, r_lab = jax.random.split(rng)
+    coin = jax.random.uniform(r_mask, labels.shape) < (pct_random / 100.0)
+    rand = jax.random.randint(r_lab, labels.shape, 0, n_labels, dtype=labels.dtype)
+    return jnp.where(coin, rand, labels)
+
+
+def make_labeled_corpus(
+    rng: Array,
+    n: int,
+    d: int,
+    n_labels: int,
+    *,
+    pct_random: float = 0.0,
+    spread: float = 0.15,
+    anisotropic: bool = False,
+    use_kmeans_labels: bool = True,
+) -> Corpus:
+    """End-to-end §3 protocol: clustered vectors -> k-means labels -> R%."""
+    r_v, r_k, r_r = jax.random.split(rng, 3)
+    vecs, true = clustered_vectors(
+        r_v, n, d, n_labels, spread=spread, anisotropic=anisotropic
+    )
+    labels = kmeans_labels(r_k, vecs, n_labels) if use_kmeans_labels else true
+    labels = randomize_labels(r_r, labels, n_labels, pct_random)
+    return Corpus(vectors=vecs, labels=labels)
+
+
+def make_queries(
+    rng: Array, corpus: Corpus, n_queries: int, *, jitter: float = 0.05
+) -> tuple[Array, Array]:
+    """Queries drawn near random corpus points; labels inherited (paper:
+    'the label of the query vector is generated in the same fashion')."""
+    r_pick, r_noise = jax.random.split(rng)
+    idx = jax.random.choice(r_pick, corpus.n, (n_queries,), replace=False)
+    q = corpus.vectors[idx] + jax.random.normal(
+        r_noise, (n_queries, corpus.dim)
+    ) * jitter
+    return q, corpus.labels[idx]

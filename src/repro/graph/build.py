@@ -1,0 +1,148 @@
+"""Proximity-graph construction.
+
+Two builders, one contract:
+
+  * ``build_knn_graph`` — blocked *exact* kNN graph (quadratic; the default
+    for n up to a few hundred thousand on this host, and the oracle for the
+    approximate builder),
+  * ``nn_descent`` — iterative neighbor-of-neighbor refinement for large n
+    (near-linear per round; Dong et al., WWW'11), used above the exact
+    builder's practical range.
+
+Both emit the invariants the searcher and the Eq.-1 estimator rely on:
+adjacency rows are distance-ascending, self-free, duplicate-free, and padded
+with -1. ``add_reverse_edges`` optionally symmetrizes (HNSW-style) under the
+same degree bound, which materially improves reachability for clustered data.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.distances import squared_l2
+
+Array = jax.Array
+
+PAD = -1
+
+
+def _dedup_sorted_by_dist(ids: Array, dists: Array, degree: int) -> tuple[Array, Array]:
+    """Per-row: drop duplicate ids / invalid, keep the ``degree`` closest.
+
+    ids: (n, C) int32 (PAD for invalid), dists: (n, C) f32.
+    """
+    invalid = ids < 0
+    d = jnp.where(invalid, jnp.inf, dists)
+    # Sort by id to find duplicates, keep the first (smallest distance wins
+    # later anyway because duplicates share the same distance).
+    id_order = jnp.argsort(jnp.where(invalid, jnp.iinfo(jnp.int32).max, ids), axis=-1)
+    ids_s = jnp.take_along_axis(ids, id_order, axis=-1)
+    d_s = jnp.take_along_axis(d, id_order, axis=-1)
+    dup = jnp.concatenate(
+        [jnp.zeros_like(ids_s[:, :1], bool), ids_s[:, 1:] == ids_s[:, :-1]], axis=-1
+    )
+    d_s = jnp.where(dup, jnp.inf, d_s)
+    # Now sort by distance and trim.
+    order = jnp.argsort(d_s, axis=-1)
+    ids_f = jnp.take_along_axis(ids_s, order, axis=-1)[:, :degree]
+    d_f = jnp.take_along_axis(d_s, order, axis=-1)[:, :degree]
+    ids_f = jnp.where(jnp.isfinite(d_f), ids_f, PAD)
+    return ids_f, d_f
+
+
+@partial(jax.jit, static_argnames=("degree", "block"))
+def build_knn_graph(vectors: Array, degree: int, block: int = 4096) -> Array:
+    """Exact kNN adjacency (n, degree), distance-ascending, self excluded."""
+    n, _ = vectors.shape
+    n_blocks = (n + block - 1) // block
+    pad = n_blocks * block - n
+    padded = jnp.pad(vectors, ((0, pad), (0, 0)))
+
+    def row_block(blk):
+        rows = jax.lax.dynamic_slice_in_dim(padded, blk * block, block, axis=0)
+        d = squared_l2(rows, vectors)  # (block, n)
+        rid = blk * block + jnp.arange(block)
+        cid = jnp.arange(n)
+        d = jnp.where(cid[None, :] == rid[:, None], jnp.inf, d)  # no self
+        d = jnp.where(rid[:, None] < n, d, jnp.inf)  # padding rows
+        neg, idx = jax.lax.top_k(-d, degree)
+        dist = -neg
+        idx = jnp.where(jnp.isfinite(dist), idx, PAD)
+        return idx.astype(jnp.int32), dist
+
+    idx, dist = jax.lax.map(row_block, jnp.arange(n_blocks))
+    del dist
+    return idx.reshape(-1, degree)[:n]
+
+
+@partial(jax.jit, static_argnames=("degree", "iters", "n_extra"))
+def nn_descent(
+    rng: Array, vectors: Array, degree: int, iters: int = 8, n_extra: int = 2
+) -> Array:
+    """NN-descent approximate kNN graph.
+
+    Each round considers, per vertex: current neighbors, a sample of
+    neighbors-of-neighbors (``n_extra`` per neighbor), and fresh random
+    vertices; keeps the ``degree`` closest.
+    """
+    n, _ = vectors.shape
+
+    def dist_rows(ids: Array) -> Array:  # (n, C) -> (n, C)
+        rows = vectors[jnp.maximum(ids, 0)]
+        diff = rows - vectors[:, None, :]
+        d = jnp.sum(diff * diff, axis=-1)
+        self_or_pad = (ids == jnp.arange(n)[:, None]) | (ids < 0)
+        return jnp.where(self_or_pad, jnp.inf, d)
+
+    k0 = jax.random.randint(rng, (n, degree), 0, n, dtype=jnp.int32)
+    nbrs, _ = _dedup_sorted_by_dist(k0, dist_rows(k0), degree)
+
+    def round_fn(carry, r):
+        nbrs = carry
+        rng_r = jax.random.fold_in(rng, r)
+        safe = jnp.maximum(nbrs, 0)
+        # neighbor-of-neighbor sample: for each neighbor take n_extra of its edges
+        cols = jax.random.randint(rng_r, (n, degree, n_extra), 0, degree)
+        nn2 = jnp.take_along_axis(
+            nbrs[safe], cols, axis=-1
+        ).reshape(n, degree * n_extra)
+        rand = jax.random.randint(
+            jax.random.fold_in(rng_r, 1), (n, degree), 0, n, dtype=jnp.int32
+        )
+        cand = jnp.concatenate([nbrs, nn2, rand], axis=-1)
+        new, _ = _dedup_sorted_by_dist(cand, dist_rows(cand), degree)
+        return new, None
+
+    nbrs, _ = jax.lax.scan(round_fn, nbrs, jnp.arange(iters))
+    return nbrs
+
+
+def add_reverse_edges(neighbors: Array, vectors: Array, degree: int) -> Array:
+    """Symmetrize under the degree bound (host-side; build-time only)."""
+    nbrs = np.asarray(neighbors)
+    n, deg = nbrs.shape
+    rev_lists: list[list[int]] = [[] for _ in range(n)]
+    for u in range(n):
+        for v in nbrs[u]:
+            if v >= 0:
+                rev_lists[v].append(u)
+    max_rev = max(1, max(len(r) for r in rev_lists))
+    rev = np.full((n, max_rev), PAD, dtype=np.int32)
+    for u, lst in enumerate(rev_lists):
+        rev[u, : len(lst)] = lst
+    cand = jnp.concatenate([jnp.asarray(nbrs), jnp.asarray(rev)], axis=-1)
+    rows = jnp.asarray(vectors)[jnp.maximum(cand, 0)]
+    d = jnp.sum((rows - jnp.asarray(vectors)[:, None, :]) ** 2, axis=-1)
+    d = jnp.where((cand < 0) | (cand == jnp.arange(n)[:, None]), jnp.inf, d)
+    out, _ = _dedup_sorted_by_dist(cand, d, degree)
+    return out
+
+
+def medoid(vectors: Array) -> Array:
+    """Approximate medoid: the vector closest to the corpus mean."""
+    mean = jnp.mean(vectors.astype(jnp.float32), axis=0, keepdims=True)
+    d = squared_l2(mean, vectors)[0]
+    return jnp.argmin(d).astype(jnp.int32)

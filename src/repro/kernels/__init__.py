@@ -1,0 +1,5 @@
+# Pallas TPU kernels for the compute hot-spots of the constrained-search
+# system. Each subpackage ships <name>.py (pl.pallas_call + BlockSpec),
+# ops.py (jit'd public wrapper with a pure-jnp fallback) and ref.py (the
+# oracle the tests assert against). On this CPU container the kernels run
+# in interpret mode; BlockSpecs target TPU v5e VMEM/MXU geometry.

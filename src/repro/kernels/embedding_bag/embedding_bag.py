@@ -1,0 +1,62 @@
+"""EmbeddingBag (sum-mode) kernel — the recsys hot path.
+
+JAX has no native EmbeddingBag; the framework's reference path is
+``jnp.take`` + ``jax.ops.segment_sum``. This kernel fuses the two: for a bag
+matrix IDS (B, L) over a table (V, D) it accumulates sum_l table[IDS[b, l]]
+directly in a VMEM accumulator tile, one DMA'd table row per grid step,
+scalar-prefetched ids driving the row index_map (same gather idiom as
+``gather_distance``). Padding ids (< 0) contribute zero.
+
+Out-block revisiting across the innermost grid axis keeps the accumulator
+resident in VMEM for the whole bag — the (B, L, D) gathered intermediate the
+jnp path materializes never exists.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _kernel(ids_ref, row_ref, out_ref, *, bag: int):
+    b = pl.program_id(0)
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    valid = (ids_ref[b, l] >= 0).astype(jnp.float32)
+    out_ref[...] += valid * row_ref[...].astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag_kernel(
+    table: Array, ids: Array, *, interpret: bool = False
+) -> Array:
+    """(V, D) table, (B, L) int32 ids -> (B, D) f32 bag sums."""
+    _, dim = table.shape
+    b, bag = ids.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, bag),
+        in_specs=[
+            # Padding ids (< 0) are clamped in the index_map; the kernel
+            # zero-weights them using the *unclamped* prefetched table.
+            pl.BlockSpec(
+                (1, dim), lambda i, j, ids_pref: (jnp.maximum(ids_pref[i, j], 0), 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, dim), lambda i, j, ids_pref: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, bag=bag),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, dim), jnp.float32),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), table)

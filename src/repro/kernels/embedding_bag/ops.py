@@ -1,0 +1,32 @@
+"""Public EmbeddingBag wrapper: sum / mean modes, kernel or jnp path."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.embedding_bag import embedding_bag_kernel
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+Array = jax.Array
+
+
+def embedding_bag(
+    table: Array,
+    ids: Array,
+    *,
+    mode: str = "sum",
+    force_kernel: bool = False,
+) -> Array:
+    backend = jax.default_backend()
+    if backend == "tpu":
+        out = embedding_bag_kernel(table, ids)
+    elif force_kernel:
+        out = embedding_bag_kernel(table, ids, interpret=True)
+    else:
+        out = embedding_bag_ref(table, ids)
+    if mode == "mean":
+        counts = jnp.maximum(jnp.sum((ids >= 0), axis=-1, keepdims=True), 1)
+        out = out / counts
+    elif mode != "sum":
+        raise ValueError(f"unknown mode {mode}")
+    return out

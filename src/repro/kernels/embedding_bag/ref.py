@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for embedding_bag (the take + mask + sum formulation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def embedding_bag_ref(table: Array, ids: Array) -> Array:
+    rows = table[jnp.maximum(ids, 0)].astype(jnp.float32)  # (B, L, D)
+    mask = (ids >= 0).astype(jnp.float32)[..., None]
+    return jnp.sum(rows * mask, axis=1)

@@ -1,0 +1,64 @@
+"""Fused gather + distance kernel — the inner step of the graph search.
+
+For a batch of queries Q (B, d) and per-query neighbor id lists IDS (B, M),
+computes D[b, m] = ||Q[b] - corpus[IDS[b, m]]||^2 without materializing the
+(B, M, d) gathered tensor in HBM.
+
+TPU mapping: the id matrix is *scalar-prefetched* (SMEM) and drives the
+corpus BlockSpec index_map, so each grid step DMAs exactly one corpus row
+(1, d) from HBM into VMEM; Pallas double-buffers these row copies across the
+(B, M) grid, which is the canonical TPU gather pattern. The query row rides
+along at block (1, d) and the distance is a VPU reduction. This kernel is
+HBM-bandwidth-bound by construction — see EXPERIMENTS.md §Roofline.
+
+Padding ids (< 0) are redirected to row 0 and reported as +inf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _kernel(ids_ref, q_ref, row_ref, out_ref):
+    b = pl.program_id(0)
+    m = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32)  # (1, d)
+    row = row_ref[...].astype(jnp.float32)  # (1, d)
+    diff = q - row
+    d = jnp.sum(diff * diff)
+    pad = ids_ref[b, m] < 0
+    out_ref[0, 0] = jnp.where(pad, jnp.inf, d)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_distance_kernel(
+    queries: Array, corpus: Array, ids: Array, *, interpret: bool = False
+) -> Array:
+    """(B, d), (n, d), (B, M) int32 -> (B, M) f32 squared distances."""
+    b, d = queries.shape
+    _, m = ids.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, m),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j, ids_pref: (i, 0)),
+            # The gather: block row chosen by the prefetched id table
+            # (padding ids clamped here; masked to +inf in the kernel).
+            pl.BlockSpec(
+                (1, d), lambda i, j, ids_pref: (jnp.maximum(ids_pref[i, j], 0), 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j, ids_pref: (i, j)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), queries, corpus)

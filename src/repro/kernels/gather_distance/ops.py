@@ -1,0 +1,20 @@
+"""Public wrapper: Pallas on TPU, jnp gather elsewhere (interpret for tests)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.gather_distance.gather_distance import gather_distance_kernel
+from repro.kernels.gather_distance.ref import gather_distance_ref
+
+Array = jax.Array
+
+
+def gather_distance(
+    queries: Array, corpus: Array, ids: Array, *, force_kernel: bool = False
+) -> Array:
+    backend = jax.default_backend()
+    if backend == "tpu":
+        return gather_distance_kernel(queries, corpus, ids)
+    if force_kernel:
+        return gather_distance_kernel(queries, corpus, ids, interpret=True)
+    return gather_distance_ref(queries, corpus, ids)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for gather_distance."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def gather_distance_ref(queries: Array, corpus: Array, ids: Array) -> Array:
+    rows = corpus[jnp.maximum(ids, 0)].astype(jnp.float32)  # (B, M, d)
+    diff = rows - queries.astype(jnp.float32)[:, None, :]
+    d = jnp.sum(diff * diff, axis=-1)
+    return jnp.where(ids >= 0, d, jnp.inf)

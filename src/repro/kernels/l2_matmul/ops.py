@@ -1,0 +1,22 @@
+"""Public wrapper for the pairwise-distance kernel.
+
+Selects the Pallas kernel on TPU, interpret-mode Pallas when forced, and the
+jnp matmul expansion otherwise (CPU default — interpret mode is for tests).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.common.distances import squared_l2
+from repro.kernels.l2_matmul.l2_matmul import l2_matmul
+
+Array = jax.Array
+
+
+def pairwise_sqdist(q: Array, x: Array, *, force_kernel: bool = False) -> Array:
+    backend = jax.default_backend()
+    if backend == "tpu":
+        return l2_matmul(q, x)
+    if force_kernel:
+        return l2_matmul(q, x, interpret=True)
+    return squared_l2(q, x)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the l2_matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def l2_matmul_ref(q: Array, x: Array) -> Array:
+    """Naive elementwise pairwise squared L2 (no matmul trick)."""
+    diff = q.astype(jnp.float32)[:, None, :] - x.astype(jnp.float32)[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)

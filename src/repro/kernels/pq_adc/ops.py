@@ -1,0 +1,18 @@
+"""Public wrapper for the ADC scan."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.pq_adc.pq_adc import pq_adc_kernel
+from repro.kernels.pq_adc.ref import pq_adc_ref
+
+Array = jax.Array
+
+
+def pq_adc(lut: Array, codes: Array, *, force_kernel: bool = False) -> Array:
+    backend = jax.default_backend()
+    if backend == "tpu":
+        return pq_adc_kernel(lut, codes)
+    if force_kernel:
+        return pq_adc_kernel(lut, codes, interpret=True)
+    return pq_adc_ref(lut, codes)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for pq_adc."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def pq_adc_ref(lut: Array, codes: Array) -> Array:
+    """(B, m_sub, n_cent) x (N, m_sub) -> (B, N)."""
+    # lut[b, s, codes[v, s]] summed over s.
+    per_sub = lut[:, jnp.arange(codes.shape[1])[None, :], codes]  # (B, N, m_sub)
+    return jnp.sum(per_sub, axis=-1)

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state. Single pod: (16, 16) = 256 chips ("data",
+"model"); multi-pod: (2, 16, 16) = 512 chips ("pod", "data", "model").
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.distributed.meshinfo import MeshInfo
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_production_meshinfo(*, multi_pod: bool = False) -> MeshInfo:
+    return MeshInfo(mesh=make_production_mesh(multi_pod=multi_pod))
+
+
+def make_test_mesh(n_devices: int | None = None, model: int = 1):
+    """Small mesh over however many (host) devices exist — for tests."""
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"), devices=devs[: data * model])

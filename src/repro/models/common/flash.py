@@ -1,0 +1,191 @@
+"""FlashAttention-2-style chunked attention with a custom VJP.
+
+Forward: online-softmax scan over KV chunks (never materializes the
+(Sq, Skv) score matrix); saves only (q, k, v, out, lse).
+Backward: recomputes p per chunk from the saved lse and accumulates
+dq / dk / dv — the FA2 recompute schedule. Without the custom VJP,
+jax.grad of the forward scan stacks every chunk's f32 scores+mask
+(+13 GB/device measured on DeepSeek-V3 train_4k; EXPERIMENTS.md §Perf).
+
+Sharding: GSPMD does not reliably propagate head sharding into the scan's
+f32 carries, so the (b, hkv, g, sq[, d]) intermediates are constrained
+explicitly — KV-head sharding when Hkv divides the model axis, group
+sharding when G does, else query-sequence (context-parallel) sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnMeta:
+    causal: bool
+    q_offset: int
+    chunk: int
+    soft_cap: float
+    mi: Any  # MeshInfo (hashable) or None
+
+
+def _constrainer(meta: AttnMeta, hkv: int, g: int):
+    mi = meta.mi
+    if mi is None or mi.tp_size <= 1:
+        return lambda x: x
+    tp, dp = mi.tp_axis, mi.dp_axes
+    if hkv % mi.tp_size == 0:
+        c_spec = (dp, tp, None, None)
+    elif g % mi.tp_size == 0:
+        c_spec = (dp, None, tp, None)
+    else:
+        # Neither Hkv nor G divides the model axis (e.g. 8-KV-head GQA on a
+        # 16-way mesh). GSPMD derives a mixed (hkv x g) sub-axis sharding
+        # that PartitionSpec cannot express; forcing query-sequence sharding
+        # here fought that propagation and triggered involuntary full
+        # rematerialization (+20 GB temp, +41 GB collectives per layer on
+        # command-r-plus — EXPERIMENTS.md §Perf B1). Leave it to GSPMD.
+        return lambda x: x
+
+    def _c(x):
+        return mi.constrain(x, *(c_spec + (None,) * (x.ndim - 4)))
+
+    return _c
+
+
+def _fwd_core(q: Array, k: Array, v: Array, meta: AttnMeta):
+    b, sq, h, dh = q.shape
+    _, skv, hkv, _ = k.shape
+    dhv = v.shape[-1]
+    g = h // hkv
+    _c = _constrainer(meta, hkv, g)
+    qg = q.reshape(b, sq, hkv, g, dh)
+    scale = 1.0 / math.sqrt(dh)
+    chunk = min(meta.chunk, skv)
+    n_chunks = (skv + chunk - 1) // chunk
+    pad = n_chunks * chunk - skv
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    q_pos = meta.q_offset + jnp.arange(sq)
+
+    def step(carry, idx):
+        m, l, acc = carry
+        kc = jax.lax.dynamic_slice_in_dim(kp, idx * chunk, chunk, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(vp, idx * chunk, chunk, axis=1)
+        s = jnp.einsum(
+            "bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), kc.astype(jnp.float32)
+        ) * scale
+        s = _c(s)
+        if meta.soft_cap > 0:
+            s = meta.soft_cap * jnp.tanh(s / meta.soft_cap)
+        kv_pos = idx * chunk + jnp.arange(chunk)
+        valid = kv_pos[None, :] < skv
+        if meta.causal:
+            valid = valid & (kv_pos[None, :] <= q_pos[:, None])
+        s = jnp.where(valid[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(valid[None, None, None], p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        _c(jnp.full((b, hkv, g, sq), -jnp.inf, jnp.float32)),
+        _c(jnp.zeros((b, hkv, g, sq), jnp.float32)),
+        _c(jnp.zeros((b, hkv, g, sq, dhv), jnp.float32)),
+    )
+    (m, l, acc), _ = jax.lax.scan(step, init, jnp.arange(n_chunks))
+    out5 = acc / jnp.maximum(l, 1e-30)[..., None]  # (b, hkv, g, sq, dhv)
+    lse = jnp.where(
+        (l > 0) & jnp.isfinite(m), m + jnp.log(jnp.maximum(l, 1e-30)), -jnp.inf
+    )
+    out = out5.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dhv).astype(q.dtype)
+    return out, lse  # lse: (b, hkv, g, sq)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def flash_attention(q: Array, k: Array, v: Array, meta: AttnMeta) -> Array:
+    return _fwd_core(q, k, v, meta)[0]
+
+
+def _fa_fwd(q, k, v, meta):
+    out, lse = _fwd_core(q, k, v, meta)
+    return out, (q, k, v, out, lse)
+
+
+def _fa_bwd(meta: AttnMeta, res, dout):
+    q, k, v, out, lse = res
+    b, sq, h, dh = q.shape
+    _, skv, hkv, _ = k.shape
+    dhv = v.shape[-1]
+    g = h // hkv
+    _c = _constrainer(meta, hkv, g)
+    scale = 1.0 / math.sqrt(dh)
+    chunk = min(meta.chunk, skv)
+    n_chunks = (skv + chunk - 1) // chunk
+    pad = n_chunks * chunk - skv
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    q_pos = meta.q_offset + jnp.arange(sq)
+
+    qg = q.reshape(b, sq, hkv, g, dh).astype(jnp.float32)
+    og = out.reshape(b, sq, hkv, g, dhv).transpose(0, 2, 3, 1, 4).astype(jnp.float32)
+    dog = dout.reshape(b, sq, hkv, g, dhv).transpose(0, 2, 3, 1, 4).astype(jnp.float32)
+    dmass = jnp.sum(dog * og, axis=-1)  # (b, hkv, g, sq) — FA2's D term
+    lse_safe = jnp.where(jnp.isfinite(lse), lse, 0.0)
+    lse_finite = jnp.isfinite(lse)
+
+    def step(dq, idx):
+        kc = jax.lax.dynamic_slice_in_dim(kp, idx * chunk, chunk, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(vp, idx * chunk, chunk, axis=1)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kc.astype(jnp.float32)) * scale
+        s = _c(s)
+        if meta.soft_cap > 0:
+            t = jnp.tanh(s / meta.soft_cap)
+            s_eff = meta.soft_cap * t
+            dtanh = 1.0 - t * t
+        else:
+            s_eff = s
+            dtanh = None
+        kv_pos = idx * chunk + jnp.arange(chunk)
+        valid = kv_pos[None, :] < skv
+        if meta.causal:
+            valid = valid & (kv_pos[None, :] <= q_pos[:, None])
+        p = jnp.where(
+            valid[None, None, None] & lse_finite[..., None],
+            jnp.exp(s_eff - lse_safe[..., None]),
+            0.0,
+        )
+        p = _c(p)
+        dv_c = jnp.einsum("bhgqk,bhgqd->bkhd", p, dog)
+        dp = jnp.einsum("bhgqd,bkhd->bhgqk", dog, vc.astype(jnp.float32))
+        ds = p * (dp - dmass[..., None])
+        if dtanh is not None:
+            ds = ds * dtanh
+        ds = _c(ds)
+        dq_new = dq + jnp.einsum("bhgqk,bkhd->bqhgd", ds, kc.astype(jnp.float32)) * scale
+        dk_c = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qg) * scale
+        return dq_new, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((b, sq, hkv, g, dh), jnp.float32)
+    dq, (dk_chunks, dv_chunks) = jax.lax.scan(step, dq0, jnp.arange(n_chunks))
+    dq = dq.reshape(b, sq, h, dh).astype(q.dtype)
+    dk = (
+        dk_chunks.transpose(1, 0, 2, 3, 4).reshape(b, n_chunks * chunk, hkv, dh)
+    )[:, :skv].astype(k.dtype)
+    dv = (
+        dv_chunks.transpose(1, 0, 2, 3, 4).reshape(b, n_chunks * chunk, hkv, dhv)
+    )[:, :skv].astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)

@@ -1,0 +1,145 @@
+"""Shared pure-JAX NN building blocks (no flax).
+
+Parameters are nested dicts of arrays; every init_* has a matching spec_*
+that yields the same tree shape filled with `PartitionSpec`s, so models can
+emit (params, shardings) pairs without a module system.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Array = jax.Array
+Params = dict
+
+
+def dense_init(rng: Array, d_in: int, d_out: int, dtype=jnp.float32) -> Params:
+    scale = 1.0 / math.sqrt(d_in)
+    return {"w": jax.random.uniform(rng, (d_in, d_out), dtype, -scale, scale)}
+
+
+def dense_apply(p: Params, x: Array) -> Array:
+    return x @ p["w"].astype(x.dtype)
+
+
+def mlp_init(
+    rng: Array, dims: Sequence[int], dtype=jnp.float32, bias: bool = True
+) -> Params:
+    layers = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        r = jax.random.fold_in(rng, i)
+        layer = dense_init(r, a, b, dtype)
+        if bias:
+            layer["b"] = jnp.zeros((b,), dtype)
+        layers.append(layer)
+    return {"layers": layers}
+
+
+def mlp_apply(p: Params, x: Array, act=jax.nn.relu, final_act: bool = False) -> Array:
+    n = len(p["layers"])
+    for i, layer in enumerate(p["layers"]):
+        x = x @ layer["w"].astype(x.dtype)
+        if "b" in layer:
+            x = x + layer["b"].astype(x.dtype)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def mlp_specs(p_template: Params, spec=P(None, None)) -> Params:
+    layers = []
+    for layer in p_template["layers"]:
+        s = {"w": spec}
+        if "b" in layer:
+            s["b"] = P(None)
+        layers.append(s)
+    return {"layers": layers}
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_apply(p: Params, x: Array, eps: float = 1e-6) -> Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm_apply(p: Params, x: Array, eps: float = 1e-5) -> Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def embedding_init(rng: Array, vocab: int, d: int, dtype=jnp.float32) -> Params:
+    return {"table": jax.random.normal(rng, (vocab, d), dtype) * 0.02}
+
+
+def embedding_apply(p: Params, ids: Array) -> Array:
+    return p["table"][ids]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_frequencies(d_rot: int, theta: float = 10_000.0) -> Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, d_rot, 2, dtype=jnp.float32) / d_rot)
+    )  # (d_rot/2,)
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10_000.0) -> Array:
+    """x: (..., S, H, d_rot); positions: (S,) — head axis required."""
+    d_rot = x.shape[-1]
+    freqs = rope_frequencies(d_rot, theta)  # (d_rot/2,)
+    angles = positions[:, None].astype(jnp.float32) * freqs  # (S, d_rot/2)
+    angles = angles[:, None, :]  # (S, 1, d_rot/2) — broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Memory-bounded attention — thin wrapper over the custom-VJP flash kernel
+# (see repro/models/common/flash.py for the FA2 forward/backward).
+# ---------------------------------------------------------------------------
+def chunked_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool,
+    q_offset: int = 0,
+    chunk: int = 512,
+    logit_soft_cap: float = 0.0,
+    mi=None,
+) -> Array:
+    """q: (B, Sq, H, dh), k/v: (B, Skv, Hkv, dh[v]) -> (B, Sq, H, dhv).
+
+    GQA-aware (H % Hkv == 0) online-softmax attention with a
+    FlashAttention-2 custom VJP; never materializes (Sq, Skv) scores.
+    """
+    from repro.models.common.flash import AttnMeta, flash_attention
+
+    meta = AttnMeta(
+        causal=causal,
+        q_offset=int(q_offset),
+        chunk=chunk,
+        soft_cap=logit_soft_cap,
+        mi=mi,
+    )
+    return flash_attention(q, k, v, meta)

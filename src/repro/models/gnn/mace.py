@@ -1,0 +1,257 @@
+"""MACE — higher-order E(3)-equivariant message passing (arXiv:2206.07697),
+in a Cartesian basis.
+
+For l_max = 2 the real-spherical-harmonic irreps have exact Cartesian
+equivalents: l=0 ↔ scalar, l=1 ↔ vector, l=2 ↔ traceless symmetric matrix.
+We build the ACE A-basis per node as Cartesian moments of the neighbor
+density and form the B-basis by contracting A-tensors up to correlation
+order 3 with learned channel mixings — every Clebsch-Gordan coupling for
+l ≤ 2 is one of the classic Cartesian contractions (dot, trace, T·v, vᵀTv,
+tr(T³)), so equivariance is exact by construction (verified by property
+tests under random rotations). Deviation from the reference torch/e3nn MACE:
+messages are weighted by *scalar* sender features only (the dominant MACE
+path); we note this in DESIGN.md §6.
+
+Graph substrate: message passing is `jax.ops.segment_sum` over an edge list
+(senders/receivers, -1 padded) — JAX has no sparse message-passing engine,
+so this module IS the engine. Edge arrays shard over the data axes; node
+accumulators are combined with one psum per layer (see gnn train_step).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.meshinfo import MeshInfo
+from repro.models.common.modules import dense_init, mlp_apply, mlp_init, mlp_specs
+
+Array = jax.Array
+Params = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class MACEConfig:
+    name: str = "mace"
+    n_layers: int = 2
+    d_hidden: int = 128  # channels K
+    l_max: int = 2
+    correlation_order: int = 3
+    n_rbf: int = 8
+    r_cut: float = 2.5
+    d_feat: int = 0  # input node feature dim; 0 -> species embedding
+    n_species: int = 32
+    d_radial_mlp: int = 64
+    d_readout: int = 16
+    # Rematerialize each interaction layer in the backward pass: the ACE
+    # A-basis is (N, K, 13) floats and the force objective double-backwards
+    # through it — recompute beats storing it (29.9 -> 23.3 GB/chip on
+    # minibatch_lg; EXPERIMENTS.md §Perf).
+    remat_layers: bool = True
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+
+    @property
+    def n_invariants(self) -> int:
+        # order-1: A0 | order-2: A1.A1, tr(A2A2), A0^2 |
+        # order-3: A1.A2.A1, tr(A2^3), A0^3, A0*(A1.A1)
+        return 8
+
+
+def bessel_rbf(dist: Array, n_rbf: int, r_cut: float) -> Array:
+    """Bessel radial basis with smooth polynomial cutoff envelope."""
+    d = jnp.maximum(dist, 1e-9)[..., None]
+    n = jnp.arange(1, n_rbf + 1, dtype=jnp.float32)
+    basis = jnp.sqrt(2.0 / r_cut) * jnp.sin(n * jnp.pi * d / r_cut) / d
+    x = jnp.clip(dist / r_cut, 0.0, 1.0)
+    env = 1.0 - 10.0 * x**3 + 15.0 * x**4 - 6.0 * x**5  # C2-smooth cutoff
+    return basis * env[..., None]
+
+
+def init_params(rng: Array, cfg: MACEConfig) -> Params:
+    ks = jax.random.split(rng, 4 + cfg.n_layers)
+    k_feat = cfg.d_feat if cfg.d_feat else cfg.n_species
+    p: Params = {
+        "embed": dense_init(ks[0], k_feat, cfg.d_hidden, cfg.param_dtype),
+        "readout": mlp_init(
+            ks[1], [cfg.d_hidden, cfg.d_readout, 1], cfg.param_dtype
+        ),
+    }
+    layers = []
+    for i in range(cfg.n_layers):
+        r = ks[4 + i]
+        rs = jax.random.split(r, 4)
+        layers.append(
+            {
+                # radial MLP -> per-l channel weights (3K outputs: l=0,1,2)
+                "radial": mlp_init(
+                    rs[0],
+                    [cfg.n_rbf, cfg.d_radial_mlp, 3 * cfg.d_hidden],
+                    cfg.param_dtype,
+                ),
+                # channel mixings applied to A before taking products
+                "mix_a": dense_init(rs[1], cfg.d_hidden, cfg.d_hidden, cfg.param_dtype),
+                # B-basis -> update
+                "update": dense_init(
+                    rs[2],
+                    cfg.n_invariants * cfg.d_hidden,
+                    cfg.d_hidden,
+                    cfg.param_dtype,
+                ),
+            }
+        )
+    p["layers"] = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    return p
+
+
+def param_specs(cfg: MACEConfig, mi: MeshInfo) -> Params:
+    fs, tp = mi.fsdp_axis, mi.tp_axis
+    layer = {
+        "radial": mlp_specs(
+            {"layers": [{"w": 0, "b": 0}, {"w": 0, "b": 0}]}, P(None, None)
+        ),
+        "mix_a": {"w": P(None, None)},
+        "update": {"w": P(None, None)},
+    }
+    return {
+        "embed": {"w": P(None, None)},
+        "readout": mlp_specs({"layers": [{"w": 0, "b": 0}, {"w": 0, "b": 0}]}, P(None, None)),
+        "layers": jax.tree.map(
+            lambda s: P(*((None,) + tuple(s))),
+            layer,
+            is_leaf=lambda x: isinstance(x, P),
+        ),
+    }
+
+
+def _node_features(params, cfg, batch) -> Array:
+    if cfg.d_feat:
+        return batch["node_feat"].astype(cfg.compute_dtype) @ params["embed"][
+            "w"
+        ].astype(cfg.compute_dtype)
+    onehot = jax.nn.one_hot(batch["species"], cfg.n_species, dtype=cfg.compute_dtype)
+    return onehot @ params["embed"]["w"].astype(cfg.compute_dtype)
+
+
+def _layer(
+    lp: Params,
+    cfg: MACEConfig,
+    h: Array,  # (N, K)
+    positions: Array,  # (N, 3)
+    senders: Array,  # (E,) — -1 padded
+    receivers: Array,  # (E,)
+    n_nodes: int,
+    edge_psum_axes=None,
+) -> Array:
+    k = cfg.d_hidden
+    valid = (senders >= 0) & (receivers >= 0)
+    s = jnp.maximum(senders, 0)
+    r = jnp.maximum(receivers, 0)
+    rvec = positions[r] - positions[s]  # (E, 3)
+    dist = jnp.linalg.norm(rvec + 1e-12, axis=-1)
+    rhat = rvec / jnp.maximum(dist, 1e-9)[..., None]
+
+    rbf = bessel_rbf(dist, cfg.n_rbf, cfg.r_cut)  # (E, n_rbf)
+    rad = mlp_apply(lp["radial"], rbf.astype(h.dtype), act=jax.nn.silu)  # (E, 3K)
+    rad = rad * valid[:, None].astype(rad.dtype)
+    r0, r1, r2 = rad[:, :k], rad[:, k : 2 * k], rad[:, 2 * k :]
+
+    hs = h[s] @ lp["mix_a"]["w"].astype(h.dtype)  # (E, K) mixed sender scalars
+    # Cartesian "spherical harmonics": y1 = rhat, y2 = rhat⊗rhat − I/3.
+    eye = jnp.eye(3, dtype=h.dtype) / 3.0
+    y2 = rhat[:, :, None] * rhat[:, None, :] - eye  # (E, 3, 3)
+
+    m0 = r0 * hs  # (E, K)
+    m1 = (r1 * hs)[:, :, None] * rhat[:, None, :]  # (E, K, 3)
+    m2 = (r2 * hs)[:, :, None, None] * y2[:, None]  # (E, K, 3, 3)
+
+    seg = lambda m: jax.ops.segment_sum(m, r, num_segments=n_nodes)
+    a0, a1, a2 = seg(m0), seg(m1), seg(m2)  # ACE A-basis
+    if edge_psum_axes:
+        a0 = jax.lax.psum(a0, edge_psum_axes)
+        a1 = jax.lax.psum(a1, edge_psum_axes)
+        a2 = jax.lax.psum(a2, edge_psum_axes)
+
+    # B-basis: invariant contractions up to correlation order 3.
+    i_a0 = a0
+    i_11 = jnp.einsum("nki,nki->nk", a1, a1)
+    i_22 = jnp.einsum("nkij,nkij->nk", a2, a2)
+    i_00 = a0 * a0
+    i_121 = jnp.einsum("nki,nkij,nkj->nk", a1, a2, a1)
+    i_222 = jnp.einsum("nkij,nkjl,nkli->nk", a2, a2, a2)
+    i_000 = a0 * a0 * a0
+    i_011 = a0 * i_11
+    feats = jnp.concatenate(
+        [i_a0, i_11, i_22, i_00, i_121, i_222, i_000, i_011], axis=-1
+    )  # (N, 8K)
+    return h + feats @ lp["update"]["w"].astype(h.dtype)
+
+
+def energy(
+    params: Params,
+    cfg: MACEConfig,
+    batch: dict,
+    *,
+    edge_psum_axes=None,
+) -> Array:
+    """Total energy per graph: (G,) for batched graphs, else scalar sum.
+
+    batch: positions (N,3), senders/receivers (E,), species or node_feat,
+    optional node_graph (N,) segment ids + n_graphs.
+    """
+    h = _node_features(params, cfg, batch)
+    n_nodes = batch["positions"].shape[0]
+    layer_fn = (
+        jax.checkpoint(
+            _layer,
+            policy=jax.checkpoint_policies.nothing_saveable,
+            static_argnums=(1, 6, 7),
+        )
+        if cfg.remat_layers
+        else _layer
+    )
+
+    def body(h, lp):
+        return (
+            layer_fn(
+                lp,
+                cfg,
+                h,
+                batch["positions"].astype(cfg.compute_dtype),
+                batch["senders"],
+                batch["receivers"],
+                n_nodes,
+                edge_psum_axes,
+            ),
+            None,
+        )
+
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    node_e = mlp_apply(params["readout"], h, act=jax.nn.silu)[..., 0]  # (N,)
+    if "node_graph" in batch:
+        return jax.ops.segment_sum(
+            node_e, batch["node_graph"], num_segments=batch["n_graphs"]
+        )
+    return jnp.sum(node_e, keepdims=True)
+
+
+def energy_and_forces(params, cfg, batch, **kw):
+    def e_total(pos):
+        return jnp.sum(energy(params, cfg, dict(batch, positions=pos), **kw))
+
+    e, neg_f = jax.value_and_grad(e_total)(batch["positions"])
+    return e, -neg_f
+
+
+def loss(params: Params, cfg: MACEConfig, batch: dict, **kw) -> tuple[Array, dict]:
+    """Energy + force MSE (standard MACE objective)."""
+    e, f = energy_and_forces(params, cfg, batch, **kw)
+    e_target = jnp.sum(batch.get("energy", jnp.zeros(())))
+    f_target = batch.get("forces", jnp.zeros_like(f))
+    e_loss = (e - e_target) ** 2 / jnp.maximum(batch["positions"].shape[0], 1)
+    f_loss = jnp.mean(jnp.sum((f - f_target) ** 2, axis=-1))
+    total = e_loss + f_loss
+    return total, {"loss": total, "e_loss": e_loss, "f_loss": f_loss}

@@ -1,0 +1,83 @@
+"""Uniform-fanout neighbor sampler over CSR adjacency (GraphSAGE-style).
+
+Produces fixed-shape sampled subgraphs for `minibatch_lg`: for seed nodes
+(B,), layer-wise uniform sampling with fanouts (f1, f2, ...) yields a padded
+edge list + the node set, ready for the MACE/GNN train step. Sampling with
+replacement when degree < fanout (standard GraphSAGE behaviour); isolated
+nodes emit self-loops.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@partial(jax.jit, static_argnames=("fanout",))
+def sample_neighbors(
+    rng: Array, indptr: Array, indices: Array, nodes: Array, fanout: int
+) -> Array:
+    """For each node (M,), draw ``fanout`` neighbors uniformly w/ replacement.
+
+    Returns (M, fanout) int32 neighbor ids (self-loop when degree == 0).
+    """
+    start = indptr[nodes]  # (M,)
+    deg = indptr[nodes + 1] - start
+    draw = jax.random.randint(rng, (nodes.shape[0], fanout), 0, 1 << 30)
+    offs = draw % jnp.maximum(deg, 1)[:, None]
+    nbr = indices[start[:, None] + offs]
+    return jnp.where(deg[:, None] > 0, nbr, nodes[:, None]).astype(jnp.int32)
+
+
+def sample_subgraph(
+    rng: Array,
+    indptr: Array,
+    indices: Array,
+    seeds: Array,
+    fanouts: Sequence[int],
+):
+    """Layered fanout sampling.
+
+    Returns dict with:
+      nodes    (N_sub,)  — frontier-concatenated node ids (seeds first)
+      senders  (E_sub,)  — LOCAL indices into ``nodes``
+      receivers(E_sub,)  — LOCAL indices into ``nodes``
+    Shapes are static given (len(seeds), fanouts).
+    """
+    frontiers = [seeds.astype(jnp.int32)]
+    senders_l, receivers_l = [], []
+    offset = 0
+    next_offset = seeds.shape[0]
+    for li, f in enumerate(fanouts):
+        r = jax.random.fold_in(rng, li)
+        cur = frontiers[-1]
+        nbr = sample_neighbors(r, indptr, indices, cur, f)  # (M, f)
+        m = cur.shape[0]
+        # Local ids: receivers are the current frontier, senders the new one.
+        recv_local = jnp.repeat(jnp.arange(m, dtype=jnp.int32) + offset, f)
+        send_local = jnp.arange(m * f, dtype=jnp.int32) + next_offset
+        senders_l.append(send_local)
+        receivers_l.append(recv_local)
+        frontiers.append(nbr.reshape(-1))
+        offset = next_offset
+        next_offset += m * f
+    nodes = jnp.concatenate(frontiers)
+    return {
+        "nodes": nodes,
+        "senders": jnp.concatenate(senders_l),
+        "receivers": jnp.concatenate(receivers_l),
+    }
+
+
+def subgraph_sizes(n_seeds: int, fanouts: Sequence[int]) -> tuple[int, int]:
+    """(n_nodes, n_edges) of the padded sampled subgraph."""
+    n_nodes, n_edges, m = n_seeds, 0, n_seeds
+    for f in fanouts:
+        n_edges += m * f
+        m = m * f
+        n_nodes += m
+    return n_nodes, n_edges

@@ -1,0 +1,337 @@
+"""Attention blocks: GQA and MLA (DeepSeek multi-head latent attention),
+each with a training/prefill path (chunked flash) and a decode path over a
+sequence-sharded KV cache with log-sum-exp combination across shards.
+
+Decode sharding: decode cells include B=1 (long_500k), so the cache cannot
+always shard over batch; instead the *sequence* axis of the cache shards
+over the ``model`` mesh axis and each shard computes a partial softmax
+(m, l, o); the exact global softmax is reconstructed with one pmax + two
+psums — flash-decoding's split-KV scheme mapped onto the TPU mesh.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.meshinfo import MeshInfo
+from repro.models.common.modules import (
+    apply_rope,
+    chunked_attention,
+    dense_init,
+    rmsnorm_apply,
+    rmsnorm_init,
+)
+
+Array = jax.Array
+Params = dict
+
+
+# ===========================================================================
+# GQA
+# ===========================================================================
+def gqa_init(rng, cfg) -> Params:
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": dense_init(ks[0], d, h * dh, cfg.param_dtype),
+        "wk": dense_init(ks[1], d, hkv * dh, cfg.param_dtype),
+        "wv": dense_init(ks[2], d, hkv * dh, cfg.param_dtype),
+        "wo": dense_init(ks[3], h * dh, d, cfg.param_dtype),
+    }
+
+
+def gqa_specs(cfg, mi: MeshInfo) -> Params:
+    fs, tp = mi.fsdp_axis, mi.tp_axis
+    return {
+        "wq": {"w": P(fs, tp)},
+        "wk": {"w": P(fs, tp)},
+        "wv": {"w": P(fs, tp)},
+        "wo": {"w": P(tp, fs)},
+    }
+
+
+def gqa_qkv(p: Params, cfg, mi: MeshInfo, x: Array, positions: Array):
+    """x (B,S,D) -> q (B,S,H,dh), k,v (B,S,Hkv,dh), RoPE applied."""
+    b, s, _ = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]["w"].astype(x.dtype)).reshape(b, s, h, dh)
+    k = (x @ p["wk"]["w"].astype(x.dtype)).reshape(b, s, hkv, dh)
+    v = (x @ p["wv"]["w"].astype(x.dtype)).reshape(b, s, hkv, dh)
+    q = mi.constrain(q, mi.dp_axes, None, mi.tp_axis, None)
+    k = mi.constrain(k, mi.dp_axes, None, mi.tp_axis, None)
+    v = mi.constrain(v, mi.dp_axes, None, mi.tp_axis, None)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_train(p: Params, cfg, mi: MeshInfo, x: Array, positions: Array) -> Array:
+    b, s, _ = x.shape
+    q, k, v = gqa_qkv(p, cfg, mi, x, positions)
+    out = chunked_attention(q, k, v, causal=True, chunk=cfg.attn_chunk, mi=mi)
+    out = mi.constrain(out, mi.dp_axes, None, mi.tp_axis, None)
+    return out.reshape(b, s, cfg.n_heads * cfg.head_dim) @ p["wo"]["w"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Split-KV decode with LSE combine (shared by GQA and MLA)
+# ---------------------------------------------------------------------------
+def _lse_combine(m: Array, l: Array, o: Array, axis: Optional[str]):
+    """Combine per-shard partial softmax (m,l,o) exactly across ``axis``."""
+    if axis is None:
+        safe_l = jnp.maximum(l, 1e-30)
+        return o / safe_l[..., None]
+    m_g = jax.lax.pmax(m, axis)
+    m_safe = jnp.where(jnp.isfinite(m_g), m_g, 0.0)
+    corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+    l_g = jax.lax.psum(l * corr, axis)
+    o_g = jax.lax.psum(o * corr[..., None], axis)
+    return o_g / jnp.maximum(l_g, 1e-30)[..., None]
+
+
+DECODE_CHUNK = 8192  # per-shard cache chunk: bounds the f32 score slice
+
+
+def _chunked_partial_softmax(score_fn, value_fn, s_local: int, kv_base, pos,
+                             init_o_shape):
+    """Online softmax over cache chunks; returns partial (m, l, o).
+
+    score_fn(start, size) -> (..., size) f32 scores for that cache slice;
+    value_fn(p, start, size) -> (..., d) the p-weighted value contraction.
+    Keeps the score slice at (..., chunk) instead of (..., S_local) — at
+    524k context the full slice is GBs (EXPERIMENTS.md §Perf F).
+    """
+    chunk = min(DECODE_CHUNK, s_local)
+    n_chunks = (s_local + chunk - 1) // chunk
+    assert s_local % chunk == 0, (s_local, chunk)
+
+    def step(carry, idx):
+        m, l, o = carry
+        start = idx * chunk
+        s = score_fn(start, chunk)  # (..., chunk), -inf masked
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.where(jnp.isfinite(s), jnp.exp(s - m_safe[..., None]), 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        o_new = o * corr[..., None] + value_fn(p, start, chunk)
+        return (m_new, l_new, o_new), None
+
+    init = (
+        jnp.full(init_o_shape[:-1], -jnp.inf, jnp.float32),
+        jnp.zeros(init_o_shape[:-1], jnp.float32),
+        jnp.zeros(init_o_shape, jnp.float32),
+    )
+    (m, l, o), _ = jax.lax.scan(step, init, jnp.arange(n_chunks))
+    return m, l, o
+
+
+def gqa_decode_attend(
+    q: Array,  # (B, H, dh) — current token's queries, all heads
+    k_cache: Array,  # (B, S_local, Hkv, dh) — this shard's cache slice
+    v_cache: Array,
+    k_new: Array,  # (B, Hkv, dh)
+    v_new: Array,
+    pos: Array,  # () int32 — global position being written
+    *,
+    seq_axis: Optional[str],
+    shard_idx: Array,
+) -> tuple[Array, Array, Array]:
+    """One decode step on a sequence-sharded cache. Returns (out, k_c, v_c)."""
+    b, s_local, hkv, dh = k_cache.shape
+    h = q.shape[1]
+    g = h // hkv
+    local_pos = pos - shard_idx * s_local
+    in_range = (local_pos >= 0) & (local_pos < s_local)
+    lp = jnp.clip(local_pos, 0, s_local - 1)
+    k_upd = jax.lax.dynamic_update_slice(k_cache, k_new[:, None], (0, lp, 0, 0))
+    v_upd = jax.lax.dynamic_update_slice(v_cache, v_new[:, None], (0, lp, 0, 0))
+    k_cache = jnp.where(in_range, k_upd, k_cache)
+    v_cache = jnp.where(in_range, v_upd, v_cache)
+
+    qg = q.reshape(b, hkv, g, dh).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(dh)
+
+    # Keep the cache in bf16 end-to-end and accumulate in f32 via
+    # preferred_element_type: upcasting cache slices lets XLA hoist one
+    # full-stack f32 conversion out of the layer scan (+8.6 GB/chip
+    # measured on command-r-plus long_500k; EXPERIMENTS.md §Perf F).
+    def score_fn(start, size):
+        kc = jax.lax.dynamic_slice_in_dim(k_cache, start, size, axis=1)
+        s = jnp.einsum(
+            "bhgd,bshd->bhgs", qg.astype(kc.dtype), kc,
+            preferred_element_type=jnp.float32,
+        ) * scale
+        kv_pos = shard_idx * s_local + start + jnp.arange(size)
+        return jnp.where((kv_pos <= pos)[None, None, None], s, -jnp.inf)
+
+    def value_fn(p, start, size):
+        vc = jax.lax.dynamic_slice_in_dim(v_cache, start, size, axis=1)
+        return jnp.einsum(
+            "bhgs,bshd->bhgd", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32,
+        )
+
+    m, l, o = _chunked_partial_softmax(
+        score_fn, value_fn, s_local, None, pos, (b, hkv, g, dh)
+    )
+    out = _lse_combine(m, l, o, seq_axis)  # (B, Hkv, G, dh)
+    return out.reshape(b, h, dh), k_cache, v_cache
+
+
+# ===========================================================================
+# MLA (DeepSeek-V2/V3 multi-head latent attention)
+# ===========================================================================
+def mla_init(rng, cfg) -> Params:
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv, r = cfg.d_nope, cfg.d_rope, cfg.d_v, cfg.kv_lora_rank
+    ks = jax.random.split(rng, 6)
+    p: Params = {
+        "wkv_a": dense_init(ks[0], d, r + dr, cfg.param_dtype),
+        "kv_norm": rmsnorm_init(r, cfg.param_dtype),
+        "wkv_b": dense_init(ks[1], r, h * (dn + dv), cfg.param_dtype),
+        "wo": dense_init(ks[2], h * dv, d, cfg.param_dtype),
+    }
+    if cfg.q_lora_rank:
+        p["wq_a"] = dense_init(ks[3], d, cfg.q_lora_rank, cfg.param_dtype)
+        p["q_norm"] = rmsnorm_init(cfg.q_lora_rank, cfg.param_dtype)
+        p["wq_b"] = dense_init(ks[4], cfg.q_lora_rank, h * (dn + dr), cfg.param_dtype)
+    else:
+        p["wq"] = dense_init(ks[5], d, h * (dn + dr), cfg.param_dtype)
+    return p
+
+
+def mla_specs(cfg, mi: MeshInfo) -> Params:
+    fs, tp = mi.fsdp_axis, mi.tp_axis
+    p = {
+        "wkv_a": {"w": P(fs, tp)},
+        "kv_norm": {"scale": P(None)},
+        "wkv_b": {"w": P(fs, tp)},
+        "wo": {"w": P(tp, fs)},
+    }
+    if cfg.q_lora_rank:
+        p["wq_a"] = {"w": P(fs, tp)}
+        p["q_norm"] = {"scale": P(None)}
+        p["wq_b"] = {"w": P(fs, tp)}
+    else:
+        p["wq"] = {"w": P(fs, tp)}
+    return p
+
+
+def _mla_q(p: Params, cfg, x: Array):
+    """(B,S,D) -> q_nope (B,S,H,dn), q_rope (B,S,H,dr) (RoPE not yet applied)."""
+    b, s, _ = x.shape
+    h, dn, dr = cfg.n_heads, cfg.d_nope, cfg.d_rope
+    if cfg.q_lora_rank:
+        cq = x @ p["wq_a"]["w"].astype(x.dtype)
+        cq = rmsnorm_apply(p["q_norm"], cq, cfg.norm_eps)
+        q = cq @ p["wq_b"]["w"].astype(x.dtype)
+    else:
+        q = x @ p["wq"]["w"].astype(x.dtype)
+    q = q.reshape(b, s, h, dn + dr)
+    return q[..., :dn], q[..., dn:]
+
+
+def _mla_kv_latent(p: Params, cfg, x: Array):
+    """(B,S,D) -> c_kv (B,S,r) normalized latent, k_rope (B,S,dr) (no RoPE yet)."""
+    r = cfg.kv_lora_rank
+    kv = x @ p["wkv_a"]["w"].astype(x.dtype)
+    c_kv, k_rope = kv[..., :r], kv[..., r:]
+    return rmsnorm_apply(p["kv_norm"], c_kv, cfg.norm_eps), k_rope
+
+
+def mla_train(p: Params, cfg, mi: MeshInfo, x: Array, positions: Array) -> Array:
+    """Expanded (non-absorbed) MLA for training/prefill."""
+    b, s, _ = x.shape
+    h, dn, dr, dv = cfg.n_heads, cfg.d_nope, cfg.d_rope, cfg.d_v
+    q_nope, q_rope = _mla_q(p, cfg, x)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c_kv, k_rope = _mla_kv_latent(p, cfg, x)
+    k_rope = apply_rope(k_rope[..., None, :], positions, cfg.rope_theta)  # (B,S,1,dr)
+    kv = (c_kv @ p["wkv_b"]["w"].astype(x.dtype)).reshape(b, s, h, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, dr))], axis=-1)
+    q = mi.constrain(q, mi.dp_axes, None, mi.tp_axis, None)
+    k = mi.constrain(k, mi.dp_axes, None, mi.tp_axis, None)
+    v = mi.constrain(v, mi.dp_axes, None, mi.tp_axis, None)
+    out = chunked_attention(q, k, v, causal=True, chunk=cfg.attn_chunk, mi=mi)
+    out = mi.constrain(out, mi.dp_axes, None, mi.tp_axis, None)
+    return out.reshape(b, s, h * dv) @ p["wo"]["w"].astype(x.dtype)
+
+
+def mla_decode_attend(
+    p: Params,
+    cfg,
+    x_tok: Array,  # (B, D) — current token's hidden state
+    c_cache: Array,  # (B, S_local, r + dr) — latent cache slice (this shard)
+    pos: Array,
+    *,
+    seq_axis: Optional[str],
+    shard_idx: Array,
+) -> tuple[Array, Array]:
+    """Absorbed-matrix MLA decode on a sequence-sharded latent cache.
+
+    The cache stores only [c_kv ; k_rope] (r + dr per token, no head axis) —
+    MLA's signature memory saving. W_uk is absorbed into the query and W_uv
+    is applied after attention, so per-step FLOPs are H*(r+dr) per cache row.
+    """
+    b, s_local, _ = c_cache.shape
+    h, dn, dr, dv, r = cfg.n_heads, cfg.d_nope, cfg.d_rope, cfg.d_v, cfg.kv_lora_rank
+    x = x_tok[:, None, :]  # (B, 1, D)
+    q_nope, q_rope = _mla_q(p, cfg, x)  # (B,1,H,dn), (B,1,H,dr)
+    q_rope = apply_rope(q_rope, pos[None], cfg.rope_theta)
+    c_new, k_rope_new = _mla_kv_latent(p, cfg, x)  # (B,1,r), (B,1,dr)
+    k_rope_new = apply_rope(k_rope_new[..., None, :], pos[None], cfg.rope_theta)[
+        ..., 0, :
+    ]
+    entry = jnp.concatenate([c_new, k_rope_new], axis=-1)[:, 0]  # (B, r+dr)
+
+    local_pos = pos - shard_idx * s_local
+    in_range = (local_pos >= 0) & (local_pos < s_local)
+    lp = jnp.clip(local_pos, 0, s_local - 1)
+    upd = jax.lax.dynamic_update_slice(c_cache, entry[:, None], (0, lp, 0))
+    c_cache = jnp.where(in_range, upd, c_cache)
+
+    # Absorb W_uk: q_eff[h] = W_uk[h]^T q_nope[h]  -> (B, H, r)
+    wkv_b = p["wkv_b"]["w"].astype(jnp.float32).reshape(r, h, dn + dv)
+    w_uk = wkv_b[..., :dn]  # (r, H, dn)
+    w_uv = wkv_b[..., dn:]  # (r, H, dv)
+    q_eff = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32), w_uk)
+    scale = 1.0 / math.sqrt(dn + dr)
+    cache_dtype = c_cache.dtype
+    q_eff_c = q_eff.astype(cache_dtype)
+    q_rope_c = q_rope[:, 0].astype(cache_dtype)
+
+    def score_fn(start, size):
+        cc = jax.lax.dynamic_slice_in_dim(c_cache, start, size, axis=1)
+        s_lat = jnp.einsum(
+            "bhr,bsr->bhs", q_eff_c, cc[..., :r],
+            preferred_element_type=jnp.float32,
+        )
+        s_rope = jnp.einsum(
+            "bhd,bsd->bhs", q_rope_c, cc[..., r:],
+            preferred_element_type=jnp.float32,
+        )
+        s_all = (s_lat + s_rope) * scale
+        kv_pos = shard_idx * s_local + start + jnp.arange(size)
+        return jnp.where((kv_pos <= pos)[None, None], s_all, -jnp.inf)
+
+    def value_fn(pr, start, size):
+        cc = jax.lax.dynamic_slice_in_dim(c_cache, start, size, axis=1)
+        return jnp.einsum(
+            "bhs,bsr->bhr", pr.astype(cache_dtype), cc[..., :r],
+            preferred_element_type=jnp.float32,
+        )
+
+    m, l, o_lat = _chunked_partial_softmax(
+        score_fn, value_fn, s_local, None, pos, (b, h, r)
+    )
+    o_lat = _lse_combine(m, l, o_lat, seq_axis)
+    out = jnp.einsum("bhr,rhd->bhd", o_lat, w_uv)  # (B, H, dv)
+    out = out.reshape(b, h * dv).astype(x_tok.dtype)
+    return out @ p["wo"]["w"].astype(x_tok.dtype), c_cache

@@ -1,0 +1,70 @@
+"""Collective-byte accounting from compiled HLO text.
+
+cost_analysis() reports FLOPs/bytes but not collective traffic; we parse the
+HLO and sum the operand bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op. This feeds the third
+roofline term (collective_bytes / (chips x link_bw)).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %all-gather.3 = bf16[16,1024,512]{...} all-gather(...)
+_SHAPE_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\]"
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum output bytes of every collective op in an HLO module dump.
+
+    Uses the op's *result* shape (for all-reduce == payload; for all-gather
+    == gathered output; for reduce-scatter == scattered output). A
+    conservative, schedule-independent measure of wire traffic per device.
+    """
+    per_op = defaultdict(int)
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # match op kind as the instruction name after '='
+        m = re.search(r"=.*?\b(" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(", line)
+        if not m:
+            continue
+        kind = m.group(1)
+        if "-done(" in line:
+            continue  # avoid double counting async pairs
+        sm = _SHAPE_RE.search(line)
+        if not sm:
+            continue
+        dtype, dims = sm.group(1), sm.group(2)
+        per_op[kind] += _shape_bytes(dtype, dims)
+        counts[kind] += 1
+    total = sum(per_op.values())
+    return {
+        "per_op_bytes": dict(per_op),
+        "per_op_counts": dict(counts),
+        "total_bytes": total,
+    }

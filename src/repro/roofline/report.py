@@ -1,0 +1,102 @@
+"""Roofline report generator.
+
+Joins the dry-run artifacts (memory analysis, measured collective structure)
+with the analytic model (loop-corrected FLOPs/bytes/collectives) and emits
+the §Roofline markdown table.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Optional
+
+from repro.archs.base import get_arch
+from repro.roofline import model as rm
+
+
+def terms_for_cell(arch_name: str, shape: str, chips: int) -> rm.RooflineTerms:
+    arch = get_arch(arch_name)
+    fam = arch.family
+    sh = arch.shapes[shape]
+    if fam == "lm":
+        cfg = arch.cfg
+        b, s = sh["global_batch"], sh["seq_len"]
+        if sh["kind"] == "train":
+            f, h, c, mf = rm.lm_train_terms(cfg, b, s, chips, arch.grad_accum)
+        elif shape.startswith("prefill"):
+            f, h, c, mf = rm.lm_prefill_terms(cfg, b, s, chips)
+        else:
+            f, h, c, mf = rm.lm_decode_terms(cfg, b, s, chips)
+    elif fam == "gnn":
+        cfg = arch.base_cfg
+        from repro.models.gnn.sampler import subgraph_sizes
+
+        mode = sh["mode"]
+        if mode == "sampled":
+            n, e = subgraph_sizes(sh["batch_nodes"], sh["fanouts"])
+        elif mode == "batched":
+            n, e = sh["n_nodes"] * sh["batch"], sh["n_edges"] * sh["batch"]
+        else:
+            n, e = sh["n_nodes"], sh["n_edges"]
+        f, h, c, mf = rm.mace_terms(cfg, n, e, chips, mode)
+    elif fam == "recsys":
+        cfg = arch.cfg
+        f, h, c, mf = rm.recsys_terms(
+            cfg, sh["batch"], chips, sh["kind"], sh.get("n_candidates", 0)
+        )
+    else:  # airship
+        cfg = arch.cfg
+        f, h, c, mf = rm.airship_terms(cfg, sh["batch"], chips)
+    return rm.RooflineTerms(
+        cell=f"{arch_name}:{shape}",
+        mesh=f"{chips}chips",
+        chips=chips,
+        flops=f,
+        hbm_bytes=h,
+        coll_bytes=c,
+        model_flops=mf,
+    )
+
+
+def load_dryrun(artifact_dir: str):
+    recs = {}
+    for f in glob.glob(os.path.join(artifact_dir, "*.json")):
+        r = json.load(open(f))
+        recs[(r["cell"], r["mesh"])] = r
+    return recs
+
+
+def markdown_table(artifact_dir: str = "artifacts/dryrun", chips: int = 256):
+    """Per-cell roofline table for the single-pod mesh."""
+    recs = load_dryrun(artifact_dir)
+    lines = [
+        "| cell | t_compute | t_memory | t_collective | bottleneck | "
+        "model/HLO flops | roofline fraction | peak GB/chip (measured) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    rows = []
+    for (cell, mesh), rec in sorted(recs.items()):
+        if mesh != "16x16":
+            continue
+        arch_name, shape = cell.split(":")
+        try:
+            t = terms_for_cell(arch_name, shape, chips)
+        except Exception as e:  # noqa: BLE001
+            lines.append(f"| {cell} | model-error: {e} |")
+            continue
+        temp = rec["memory"]["temp_bytes"] or 0
+        args = rec["memory"]["argument_bytes"] or 0
+        rows.append((cell, t, (temp + args) / 1e9))
+        lines.append(
+            f"| {cell} | {t.t_compute*1e3:.2f} ms | {t.t_memory*1e3:.2f} ms | "
+            f"{t.t_collective*1e3:.2f} ms | **{t.bottleneck}** | "
+            f"{t.useful_fraction:.2f} | {t.roofline_fraction:.3f} | "
+            f"{(temp + args)/1e9:.1f} |"
+        )
+    return "\n".join(lines), rows
+
+
+if __name__ == "__main__":
+    table, _ = markdown_table()
+    print(table)

@@ -1,0 +1,192 @@
+"""Optimizers in pure JAX: AdamW and Adafactor.
+
+Adafactor (factored second moment, optional bf16 momentum) is the default
+for the largest configs: DeepSeek-V3 @ 671B with full f32 Adam state would
+need ~8 TB of optimizer memory — factored stats bring the per-chip budget
+inside a v5e's 16 GB at 256 chips (see EXPERIMENTS.md §Dry-run).
+
+Optimizer state lives in a pytree mirroring the params; ``state_specs``
+derives its PartitionSpecs from the param specs so ZeRO-style sharding
+follows the parameters automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (grads, state, params)
+    state_specs: Callable[[Any, Any], Any]  # (param_specs, param_shapes)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def adamw(
+    lr: float = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    state_dtype=jnp.float32,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(state_dtype)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * g32 * g32
+            mhat = m / c1
+            vhat = v / c2
+            step = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(state_dtype)
+            return (-lr * step).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        updates = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"m": new_m, "v": new_v, "count": count}
+
+    def state_specs(param_specs, param_shapes):
+        del param_shapes
+        return {"m": param_specs, "v": param_specs, "count": P()}
+
+    return Optimizer(init=init, update=update, state_specs=state_specs)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern, 2018) — factored over the last two dims
+# ---------------------------------------------------------------------------
+def adafactor(
+    lr: float = 1e-2,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    momentum: Optional[float] = None,
+    momentum_dtype=jnp.bfloat16,
+) -> Optimizer:
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    def init(params):
+        def vr(p):
+            return (
+                jnp.zeros(p.shape[:-1], jnp.float32)
+                if _factored(p)
+                else jnp.zeros(p.shape, jnp.float32)
+            )
+
+        def vc(p):
+            return (
+                jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                if _factored(p)
+                else jnp.zeros((1,), jnp.float32)
+            )
+
+        state = {
+            "vr": jax.tree.map(vr, params),
+            "vc": jax.tree.map(vc, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+        if momentum is not None:
+            state["m"] = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, momentum_dtype), params
+            )
+        return state
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        beta2 = 1.0 - count.astype(jnp.float32) ** (-decay)
+
+        def upd(g, vr, vc, p, m=None):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if _factored(p):
+                vr = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                vhat = (
+                    vr[..., None] / denom[..., None]
+                ) * vc[..., None, :]
+                step = g32 / jnp.sqrt(vhat + eps)
+            else:
+                vr = beta2 * vr + (1 - beta2) * g2
+                step = g32 / jnp.sqrt(vr + eps)
+            # Update clipping (RMS-based), per Adafactor.
+            rms = jnp.sqrt(jnp.mean(step * step) + 1e-30)
+            step = step / jnp.maximum(1.0, rms / clip_threshold)
+            if m is not None:
+                m_new = momentum * m.astype(jnp.float32) + step
+                step = m_new
+                m = m_new.astype(momentum_dtype)
+            out = (-lr * step).astype(p.dtype)
+            return out, vr, vc, m
+
+        if momentum is not None:
+            res = jax.tree.map(upd, grads, state["vr"], state["vc"], params, state["m"])
+        else:
+            res = jax.tree.map(
+                lambda g, vr, vc, p: upd(g, vr, vc, p),
+                grads, state["vr"], state["vc"], params,
+            )
+        is_tup = lambda x: isinstance(x, tuple)
+        updates = jax.tree.map(lambda o: o[0], res, is_leaf=is_tup)
+        new_state = {
+            "vr": jax.tree.map(lambda o: o[1], res, is_leaf=is_tup),
+            "vc": jax.tree.map(lambda o: o[2], res, is_leaf=is_tup),
+            "count": count,
+        }
+        if momentum is not None:
+            new_state["m"] = jax.tree.map(lambda o: o[3], res, is_leaf=is_tup)
+        return updates, new_state
+
+    def state_specs(param_specs, param_shapes):
+        def vr_spec(spec, shape):
+            s = tuple(spec) if spec else ()
+            s = s + (None,) * (len(shape.shape) - len(s))
+            return P(*s[:-1]) if len(shape.shape) >= 2 else P(*s)
+
+        def vc_spec(spec, shape):
+            s = tuple(spec) if spec else ()
+            s = s + (None,) * (len(shape.shape) - len(s))
+            if len(shape.shape) >= 2:
+                return P(*(s[:-2] + (s[-1],)))
+            return P(None)
+
+        is_spec = lambda x: isinstance(x, P)
+        specs = {
+            "vr": jax.tree.map(vr_spec, param_specs, param_shapes, is_leaf=is_spec),
+            "vc": jax.tree.map(vc_spec, param_specs, param_shapes, is_leaf=is_spec),
+            "count": P(),
+        }
+        if momentum is not None:
+            specs["m"] = param_specs
+        return specs
+
+    return Optimizer(init=init, update=update, state_specs=state_specs)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)

@@ -1,0 +1,5 @@
+import os
+
+# Tests run single-device (the dry-run sets 512 host devices itself, in its
+# own process). Keep XLA from grabbing a fat thread pool on the 1-core host.
+os.environ.setdefault("XLA_FLAGS", "")

@@ -1,0 +1,128 @@
+"""Graph builder invariants + constraint families + alter_ratio estimator."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.common.distances import squared_l2
+from repro.core import (
+    Corpus,
+    LabelSetConstraint,
+    RangeConstraint,
+    equal_constraint,
+    estimate_alter_ratio,
+    label_set_from_lists,
+    make_satisfied_fn,
+    unequal_pct_constraint,
+)
+from repro.data.synthetic import make_labeled_corpus
+from repro.graph.build import build_knn_graph, medoid, nn_descent
+from repro.graph.index import build_index
+
+
+def _rand_vectors(n=200, d=8, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+
+
+def test_exact_knn_graph_matches_bruteforce():
+    x = _rand_vectors(120, 6)
+    g = build_knn_graph(x, degree=5, block=32)
+    d = np.array(squared_l2(x, x))
+    np.fill_diagonal(d, np.inf)
+    for i in range(0, 120, 17):
+        # compare by distance (top_k and argsort may break ties differently)
+        expect = np.sort(d[i])[:5]
+        got = np.sort(d[i][np.asarray(g[i])])
+        np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-6)
+
+
+def test_graph_rows_sorted_self_free_unique():
+    x = _rand_vectors(150, 5, seed=1)
+    g = np.asarray(build_knn_graph(x, degree=8))
+    d = np.asarray(squared_l2(x, x))
+    for i, row in enumerate(g):
+        live = row[row >= 0]
+        assert i not in live
+        assert len(live) == len(set(live.tolist()))
+        dist = d[i][live]
+        assert np.all(np.diff(dist) >= -1e-5)  # ascending by distance
+
+
+def test_nn_descent_recall_reasonable():
+    x = _rand_vectors(400, 8, seed=2)
+    exact = np.asarray(build_knn_graph(x, degree=8))
+    approx = np.asarray(nn_descent(jax.random.PRNGKey(3), x, degree=8, iters=10))
+    hits = total = 0
+    for e_row, a_row in zip(exact, approx):
+        hits += len(set(e_row.tolist()) & set(a_row[a_row >= 0].tolist()))
+        total += len(e_row)
+    assert hits / total > 0.6, hits / total
+
+
+def test_medoid_is_central():
+    x = _rand_vectors(300, 4, seed=4)
+    m = int(medoid(x))
+    dm = float(jnp.sum(squared_l2(x[m : m + 1], x)))
+    rand = float(jnp.sum(squared_l2(x[:1], x)))
+    assert dm <= rand * 1.1
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(2, 40), st.data())
+def test_label_set_constraint_matches_membership(n_labels, data):
+    allowed = data.draw(
+        st.lists(st.integers(0, n_labels - 1), min_size=1, max_size=n_labels, unique=True)
+    )
+    cons = label_set_from_lists([allowed], n_labels)
+    labels = jnp.arange(n_labels, dtype=jnp.int32)
+    corpus = Corpus(
+        vectors=jnp.zeros((n_labels, 2)), labels=labels
+    )
+    sat = make_satisfied_fn(cons, corpus)
+    ids = jnp.arange(n_labels, dtype=jnp.int32)[None]
+    got = np.asarray(sat(ids))[0]
+    expect = np.isin(np.arange(n_labels), allowed)
+    np.testing.assert_array_equal(got, expect)
+
+
+def test_unequal_pct_never_includes_query_label():
+    qlab = jnp.arange(10, dtype=jnp.int32) % 7
+    cons = unequal_pct_constraint(jax.random.PRNGKey(0), qlab, 7, 40.0)
+    corpus = Corpus(vectors=jnp.zeros((7, 2)), labels=jnp.arange(7, dtype=jnp.int32))
+    sat = make_satisfied_fn(cons, corpus)
+    own = sat(qlab[:, None])  # query's own label id as candidate
+    assert not bool(jnp.any(own))
+
+
+def test_range_constraint():
+    corpus = Corpus(
+        vectors=jnp.zeros((5, 2)),
+        labels=jnp.zeros((5,), jnp.int32),
+        attrs=jnp.asarray([[0.0], [1.0], [2.0], [3.0], [4.0]]),
+    )
+    cons = RangeConstraint(
+        lo=jnp.asarray([1.0]), hi=jnp.asarray([3.0]), col=jnp.int32(0)
+    )
+    sat = make_satisfied_fn(cons, corpus)
+    got = np.asarray(sat(jnp.arange(5, dtype=jnp.int32)[None]))[0]
+    np.testing.assert_array_equal(got, [False, True, True, True, False])
+
+
+def test_alter_ratio_clustered_vs_random():
+    """§2.4: clustered labels -> ratio near 1; random labels -> ratio ~ p."""
+    rng = jax.random.PRNGKey(0)
+    clustered = make_labeled_corpus(rng, n=2000, d=16, n_labels=5, pct_random=0.0)
+    random_lab = make_labeled_corpus(rng, n=2000, d=16, n_labels=5, pct_random=100.0)
+    out = {}
+    for name, corpus in [("clustered", clustered), ("random", random_lab)]:
+        graph = build_index(jax.random.PRNGKey(1), corpus, degree=8, sample_size=128)
+        qlab = corpus.labels[:8]
+        cons = equal_constraint(qlab, 5)
+        sat = make_satisfied_fn(cons, corpus)
+        sample_ids = jnp.broadcast_to(graph.sample_ids[None], (8, 128))
+        ratio = estimate_alter_ratio(graph, sat, sat(sample_ids), k=8)
+        out[name] = float(jnp.mean(ratio))
+    assert out["clustered"] > 0.7
+    assert out["random"] < 0.45
+    assert 0.0 <= out["random"] and out["clustered"] <= 1.0

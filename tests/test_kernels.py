@@ -1,0 +1,99 @@
+"""Per-kernel allclose sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.embedding_bag.embedding_bag import embedding_bag_kernel
+from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.gather_distance.gather_distance import gather_distance_kernel
+from repro.kernels.gather_distance.ref import gather_distance_ref
+from repro.kernels.l2_matmul.l2_matmul import l2_matmul
+from repro.kernels.l2_matmul.ref import l2_matmul_ref
+from repro.kernels.pq_adc.pq_adc import pq_adc_kernel
+from repro.kernels.pq_adc.ref import pq_adc_ref
+
+
+def key(i):
+    return jax.random.PRNGKey(i)
+
+
+@pytest.mark.parametrize("m,n,d", [(7, 13, 8), (64, 128, 32), (33, 250, 130), (1, 5, 3)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_l2_matmul_shapes(m, n, d, dtype):
+    q = jax.random.normal(key(0), (m, d), dtype)
+    x = jax.random.normal(key(1), (n, d), dtype)
+    out = l2_matmul(q, x, bm=16, bn=32, bk=64, interpret=True)
+    ref = l2_matmul_ref(q, x)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(out, ref, rtol=tol, atol=tol * d)
+
+
+def test_l2_matmul_block_sweep():
+    q = jax.random.normal(key(2), (40, 96))
+    x = jax.random.normal(key(3), (70, 96))
+    ref = l2_matmul_ref(q, x)
+    for bm, bn, bk in [(8, 8, 32), (16, 64, 96), (40, 70, 96), (128, 128, 512)]:
+        out = l2_matmul(q, x, bm=bm, bn=bn, bk=bk, interpret=True)
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-2)
+
+
+def test_l2_matmul_nonnegative_identical_rows():
+    x = jax.random.normal(key(4), (20, 16))
+    out = l2_matmul(x, x, bm=8, bn=8, bk=16, interpret=True)
+    assert float(jnp.min(out)) >= 0.0
+    np.testing.assert_allclose(jnp.diag(out), 0.0, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,m,n,d", [(4, 8, 100, 16), (9, 17, 333, 64), (1, 1, 10, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gather_distance_shapes(b, m, n, d, dtype):
+    q = jax.random.normal(key(5), (b, d), dtype)
+    corpus = jax.random.normal(key(6), (n, d), dtype)
+    ids = jax.random.randint(key(7), (b, m), -2, n)
+    out = gather_distance_kernel(q, corpus, ids, interpret=True)
+    ref = gather_distance_ref(q, corpus, ids)
+    assert bool(jnp.all(jnp.isinf(out) == jnp.isinf(ref)))
+    fin = jnp.isfinite(ref)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        jnp.where(fin, out, 0.0), jnp.where(fin, ref, 0.0), rtol=tol, atol=tol * d
+    )
+
+
+@pytest.mark.parametrize("b,n,m_sub,n_cent", [(2, 50, 4, 8), (3, 257, 16, 256), (1, 1000, 8, 16)])
+def test_pq_adc_shapes(b, n, m_sub, n_cent):
+    lut = jax.random.normal(key(8), (b, m_sub, n_cent))
+    codes = jax.random.randint(key(9), (n, m_sub), 0, n_cent)
+    out = pq_adc_kernel(lut, codes, bn=64, interpret=True)
+    ref = pq_adc_ref(lut, codes)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("v,d,b,bag", [(50, 8, 3, 5), (1000, 64, 7, 20), (10, 128, 2, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_embedding_bag_shapes(v, d, b, bag, dtype):
+    table = jax.random.normal(key(10), (v, d), dtype)
+    ids = jax.random.randint(key(11), (b, bag), -3, v)
+    out = embedding_bag_kernel(table, ids, interpret=True)
+    ref = embedding_bag_ref(table, ids)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(out, ref, rtol=tol, atol=tol * bag)
+
+
+def test_embedding_bag_mean_mode():
+    table = jax.random.normal(key(12), (20, 4))
+    ids = jnp.array([[0, 1, -1, -1], [2, 3, 4, 5]], dtype=jnp.int32)
+    out = embedding_bag(table, ids, mode="mean")
+    expect0 = (table[0] + table[1]) / 2.0
+    expect1 = (table[2] + table[3] + table[4] + table[5]) / 4.0
+    np.testing.assert_allclose(out[0], expect0, rtol=1e-5)
+    np.testing.assert_allclose(out[1], expect1, rtol=1e-5)
+
+
+def test_embedding_bag_all_padding_row():
+    table = jax.random.normal(key(13), (20, 4))
+    ids = jnp.full((2, 3), -1, jnp.int32)
+    out = embedding_bag_kernel(table, ids, interpret=True)
+    np.testing.assert_allclose(out, 0.0, atol=0)

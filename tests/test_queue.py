@@ -1,0 +1,96 @@
+"""Property tests for the fixed-capacity sorted-array priority queues."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import queue as q
+
+
+@st.composite
+def batch_ops(draw):
+    cap = draw(st.integers(2, 16))
+    n_push = draw(st.integers(1, 5))
+    pushes = [
+        draw(
+            st.lists(
+                st.floats(2.0**-20, 2.0**20, width=32), min_size=1, max_size=8
+            )
+        )
+        for _ in range(n_push)
+    ]
+    return cap, pushes
+
+
+@settings(deadline=None, max_examples=30)
+@given(batch_ops())
+def test_queue_matches_sorted_reference(ops):
+    cap, pushes = ops
+    qq = q.queue_init(1, cap)
+    ref: list[float] = []
+    next_id = 0
+    for vals in pushes:
+        ids = jnp.arange(next_id, next_id + len(vals), dtype=jnp.int32)[None]
+        d = jnp.asarray(vals, jnp.float32)[None]
+        qq = q.queue_push(qq, d, ids, jnp.ones_like(d, bool))
+        ref.extend(vals)
+        ref = sorted(ref)[:cap]
+        next_id += len(vals)
+    np.testing.assert_allclose(
+        np.asarray(qq.dists[0][: len(ref)]), np.asarray(ref, np.float32), rtol=1e-6
+    )
+    # queue stays ascending with +inf padding
+    d = np.asarray(qq.dists[0])
+    assert np.all(np.diff(d) >= 0) or np.all(np.isinf(d[np.argsort(d)][len(ref):]))
+
+
+@settings(deadline=None, max_examples=30)
+@given(batch_ops())
+def test_queue_pop_returns_min(ops):
+    cap, pushes = ops
+    qq = q.queue_init(1, cap)
+    for i, vals in enumerate(pushes):
+        ids = jnp.full((1, len(vals)), i, jnp.int32)
+        qq = q.queue_push(
+            qq, jnp.asarray(vals, jnp.float32)[None], ids, jnp.ones((1, len(vals)), bool)
+        )
+    prev = -np.inf
+    while bool(q.queue_nonempty(qq)[0]):
+        qq, d, _ = q.queue_pop(qq, jnp.ones((1,), bool))
+        assert float(d[0]) >= prev  # pops come out ascending
+        prev = float(d[0])
+
+
+def test_pop_on_masked_rows_is_noop():
+    qq = q.queue_init(2, 4)
+    d = jnp.asarray([[1.0, 2.0], [3.0, 4.0]])
+    ids = jnp.asarray([[1, 2], [3, 4]], jnp.int32)
+    qq = q.queue_push(qq, d, ids, jnp.ones((2, 2), bool))
+    qq2, head_d, _ = q.queue_pop(qq, jnp.asarray([True, False]))
+    assert float(qq2.dists[0, 0]) == 2.0  # popped
+    assert float(qq2.dists[1, 0]) == 3.0  # untouched
+
+
+def test_invalid_pushes_are_ignored():
+    qq = q.queue_init(1, 4)
+    qq = q.queue_push(
+        qq,
+        jnp.asarray([[5.0, 1.0]]),
+        jnp.asarray([[7, 8]], jnp.int32),
+        jnp.asarray([[False, True]]),
+    )
+    assert int(q.queue_size(qq)[0]) == 1
+    assert float(qq.dists[0, 0]) == 1.0
+
+
+def test_topk_threshold_inf_until_full():
+    qq = q.queue_init(1, 3)
+    assert np.isinf(float(q.topk_threshold(qq, 3)[0]))
+    qq = q.queue_push(
+        qq,
+        jnp.asarray([[1.0, 2.0, 3.0]]),
+        jnp.asarray([[1, 2, 3]], jnp.int32),
+        jnp.ones((1, 3), bool),
+    )
+    assert float(q.topk_threshold(qq, 3)[0]) == 3.0

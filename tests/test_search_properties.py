@@ -1,0 +1,127 @@
+"""Metamorphic properties of the constrained search.
+
+These hold by the mathematics of L2 + the search's determinism, so any
+violation is a bug in the queues / bitset / traversal — not a data issue.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    SearchParams,
+    constrained_search,
+    equal_constraint,
+    exact_constrained_search,
+    label_set_from_lists,
+    recall,
+)
+from repro.core.types import Corpus, GraphIndex
+from repro.data.synthetic import make_labeled_corpus, make_queries
+from repro.graph.index import build_index
+
+N, D, L = 2000, 12, 6
+
+
+@pytest.fixture(scope="module")
+def world():
+    corpus = make_labeled_corpus(jax.random.PRNGKey(0), n=N, d=D, n_labels=L)
+    graph = build_index(jax.random.PRNGKey(1), corpus, degree=12, sample_size=128)
+    q, qlab = make_queries(jax.random.PRNGKey(2), corpus, 12)
+    return corpus, graph, q, qlab
+
+
+PARAMS = SearchParams(mode="prefer", k=8, ef_result=64, n_start=16, max_iters=400)
+
+
+def test_translation_invariance(world):
+    """Shifting corpus AND queries by the same vector preserves results."""
+    corpus, graph, q, qlab = world
+    cons = equal_constraint(qlab, L)
+    res1 = constrained_search(corpus, graph, q, cons, PARAMS)
+    shift = jnp.full((D,), 3.7)
+    corpus2 = Corpus(vectors=corpus.vectors + shift, labels=corpus.labels)
+    res2 = constrained_search(corpus2, graph, q + shift, cons, PARAMS)
+    np.testing.assert_array_equal(np.asarray(res1.ids), np.asarray(res2.ids))
+    np.testing.assert_allclose(
+        np.asarray(res1.dists), np.asarray(res2.dists), rtol=1e-3, atol=1e-4
+    )
+
+
+def test_scale_equivariance(world):
+    """Scaling all vectors by c scales squared distances by c^2, ids fixed."""
+    corpus, graph, q, qlab = world
+    cons = equal_constraint(qlab, L)
+    res1 = constrained_search(corpus, graph, q, cons, PARAMS)
+    c = 2.5
+    corpus2 = Corpus(vectors=corpus.vectors * c, labels=corpus.labels)
+    res2 = constrained_search(corpus2, graph, q * c, cons, PARAMS)
+    np.testing.assert_array_equal(np.asarray(res1.ids), np.asarray(res2.ids))
+    fin = np.isfinite(np.asarray(res1.dists))
+    np.testing.assert_allclose(
+        np.asarray(res2.dists)[fin], np.asarray(res1.dists)[fin] * c * c,
+        rtol=1e-3,
+    )
+
+
+def test_duplicate_queries_get_identical_rows(world):
+    """Lock-step batching must keep queries independent."""
+    corpus, graph, q, qlab = world
+    qq = jnp.concatenate([q[:4], q[:4]], axis=0)
+    cons = equal_constraint(jnp.concatenate([qlab[:4], qlab[:4]]), L)
+    res = constrained_search(corpus, graph, qq, cons, PARAMS)
+    np.testing.assert_array_equal(np.asarray(res.ids[:4]), np.asarray(res.ids[4:]))
+
+
+def test_constraint_monotonicity_exact(world):
+    """Enlarging the allowed set can only improve exact top-k distances."""
+    corpus, graph, q, qlab = world
+    small = label_set_from_lists([[0]] * q.shape[0], L)
+    big = label_set_from_lists([[0, 1, 2]] * q.shape[0], L)
+    d_small, _ = exact_constrained_search(corpus, q, small, k=8)
+    d_big, _ = exact_constrained_search(corpus, q, big, k=8)
+    fin = np.isfinite(np.asarray(d_small))
+    assert np.all(np.asarray(d_big)[fin] <= np.asarray(d_small)[fin] + 1e-5)
+
+
+def test_graph_results_are_subset_of_satisfied_corpus(world):
+    """No hallucinated ids: every result exists and satisfies."""
+    corpus, graph, q, qlab = world
+    cons = equal_constraint(qlab, L)
+    res = constrained_search(corpus, graph, q, cons, PARAMS)
+    ids = np.asarray(res.ids)
+    assert ids.max() < N
+    labs = np.asarray(corpus.labels)[np.maximum(ids, 0)]
+    assert np.all((labs == np.asarray(qlab)[:, None]) | (ids < 0))
+
+
+def test_exact_search_self_recall(world):
+    corpus, graph, q, qlab = world
+    cons = equal_constraint(qlab, L)
+    _, ti = exact_constrained_search(corpus, q, cons, k=8)
+    assert float(recall(ti, ti)) == 1.0
+
+
+def test_determinism_across_calls(world):
+    corpus, graph, q, qlab = world
+    cons = equal_constraint(qlab, L)
+    r1 = constrained_search(corpus, graph, q, cons, PARAMS)
+    r2 = constrained_search(corpus, graph, q, cons, PARAMS)
+    np.testing.assert_array_equal(np.asarray(r1.ids), np.asarray(r2.ids))
+    np.testing.assert_array_equal(
+        np.asarray(r1.stats.dist_evals), np.asarray(r2.stats.dist_evals)
+    )
+
+
+def test_ef_result_monotonically_nondecreasing_recall(world):
+    """Bigger candidate lists never hurt recall (the QPS/recall knob)."""
+    corpus, graph, q, qlab = world
+    cons = equal_constraint(qlab, L)
+    _, ti = exact_constrained_search(corpus, q, cons, k=8)
+    prev = 0.0
+    for ef in (8, 32, 128):
+        params = SearchParams(mode="prefer", k=8, ef_result=ef, n_start=16,
+                              max_iters=400)
+        r = float(recall(constrained_search(corpus, graph, q, cons, params).ids, ti))
+        assert r >= prev - 0.02, (ef, prev, r)  # tiny tie-break slack
+        prev = r

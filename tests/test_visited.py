@@ -1,0 +1,46 @@
+"""Property tests for the batched bitset visited-set."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import visited as vis
+
+
+@settings(deadline=None, max_examples=40)
+@given(
+    st.integers(1, 200),  # n
+    st.lists(st.integers(0, 199), min_size=1, max_size=50, unique=True),
+)
+def test_bitset_matches_python_set(n, ids):
+    ids = [i for i in ids if i < n]
+    if not ids:
+        return
+    words = vis.visited_init(1, n)
+    arr = jnp.asarray(ids, jnp.int32)[None]
+    fresh = ~vis.visited_test(words, arr)
+    words = vis.visited_set(words, arr, fresh)
+    # everything set is now visited; everything else is not
+    all_ids = jnp.arange(n, dtype=jnp.int32)[None]
+    got = np.asarray(vis.visited_test(words, all_ids))[0]
+    expect = np.zeros(n, bool)
+    expect[ids] = True
+    np.testing.assert_array_equal(got, expect)
+    assert int(vis.visited_count(words)[0]) == len(set(ids))
+
+
+def test_padding_ids_report_visited():
+    words = vis.visited_init(1, 64)
+    assert bool(vis.visited_test(words, jnp.asarray([[-1]], jnp.int32))[0, 0])
+
+
+def test_set_respects_mask_and_duplicate_protection():
+    words = vis.visited_init(1, 64)
+    ids = jnp.asarray([[3, 9]], jnp.int32)
+    words = vis.visited_set(words, ids, jnp.asarray([[True, False]]))
+    got = vis.visited_test(words, jnp.asarray([[3, 9]], jnp.int32))
+    assert bool(got[0, 0]) and not bool(got[0, 1])
+    # re-setting an already-visited id must be masked by the caller contract:
+    fresh = ~vis.visited_test(words, ids)
+    words2 = vis.visited_set(words, ids, fresh)
+    assert int(vis.visited_count(words2)[0]) == 2

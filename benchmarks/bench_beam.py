@@ -1,0 +1,69 @@
+"""Beam-width sweep: lock-step iterations vs. recall (engine, DESIGN.md §5).
+
+Sweeps ``beam_width ∈ {1, 2, 4, 8}`` × modes on the shared synthetic world
+and emits ONE JSON LINE PER CONFIG (not the CSV rows of the other suites)
+so ``BENCH_*.json`` trajectories can track beam speedups field-by-field:
+
+    {"suite": "beam", "mode": "prefer", "beam_width": 4, "iters": ..., ...}
+
+The headline numbers: ``iters`` (lock-step iterations of the whole batch —
+the serial-launch count a TPU pays) should fall ~beam_width×, while
+``recall`` and ``dist_evals`` stay ~flat (the threshold staleness costs
+<1% extra expansions on this corpus).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax.numpy as jnp
+
+from benchmarks.common import constraint, ground_truth, world
+from repro.core import SearchParams, constrained_search, recall
+
+BEAM_WIDTHS = (1, 2, 4, 8)
+MODES = ("vanilla", "prefer")
+
+
+def main(out) -> None:
+    corpus, graph, q, qlab = world()
+    for kind in ("equal", "unequal-20%"):
+        cons = constraint(kind, qlab)
+        _, ti = ground_truth(corpus, q, cons, k=10)
+        for mode in MODES:
+            base_iters = None
+            for w in BEAM_WIDTHS:
+                params = SearchParams(
+                    mode=mode, k=10, ef_result=128, ef_sat=128, ef_other=128,
+                    n_start=32, max_iters=1500, beam_width=w,
+                )
+                res = constrained_search(corpus, graph, q, cons, params)
+                jnp.asarray(res.dists).block_until_ready()
+                t0 = time.perf_counter()
+                res = constrained_search(corpus, graph, q, cons, params)
+                jnp.asarray(res.dists).block_until_ready()
+                dt = time.perf_counter() - t0
+                iters = int(res.stats.iters)
+                if base_iters is None:
+                    base_iters = iters
+                beam_util = jnp.mean(
+                    res.stats.beam_expansions.astype(jnp.float32), axis=0
+                )
+                out(json.dumps({
+                    "suite": "beam",
+                    "constraint": kind,
+                    "mode": mode,
+                    "beam_width": w,
+                    "iters": iters,
+                    "iters_speedup_vs_beam1": round(base_iters / max(iters, 1), 2),
+                    "recall": round(float(recall(res.ids, ti)), 4),
+                    "mean_dist_evals": round(float(jnp.mean(res.stats.dist_evals)), 1),
+                    "mean_hops": round(float(jnp.mean(res.stats.hops)), 1),
+                    "beam_slot_util": [round(float(x), 1) for x in beam_util],
+                    "us_per_call": round(dt * 1e6, 1),
+                    "qps": round(q.shape[0] / dt, 1),
+                }))
+
+
+if __name__ == "__main__":
+    main(print)

@@ -17,13 +17,15 @@ def main() -> None:
     ap.add_argument(
         "--only",
         default="",
-        help="comma list: pipeline,constraints,alter_ratio,clusters,mnist,kernels",
+        help="comma list: pipeline,constraints,alter_ratio,clusters,mnist,"
+        "kernels,beam",
     )
     args = ap.parse_args()
     selected = set(filter(None, args.only.split(",")))
 
     from benchmarks import (
         bench_alter_ratio,
+        bench_beam,
         bench_clusters,
         bench_constraints,
         bench_kernels,
@@ -38,6 +40,9 @@ def main() -> None:
         "clusters": bench_clusters.main,
         "mnist": bench_mnist_like.main,
         "kernels": bench_kernels.main,
+        # bench_beam emits one JSON line per (constraint, mode, beam_width)
+        # config — machine-readable for BENCH_*.json speedup trajectories.
+        "beam": bench_beam.main,
     }
     print("name,us_per_call,derived")
 

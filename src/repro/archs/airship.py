@@ -41,6 +41,9 @@ AIRSHIP_SHAPES: Dict[str, dict] = {
     # Beyond-paper D4: ADC traversal + exact re-rank (32x fewer HBM bytes
     # per candidate); m_sub=16 codes shard with the corpus rows.
     "serve_256_pq": dict(kind="serve", batch=256, pq=True),
+    # Beam-parallel engine (DESIGN.md §5): 4 pops/query/iteration feed the
+    # fused gather 4*deg candidates — ~4x fewer lock-step iterations.
+    "serve_256_beam4": dict(kind="serve", batch=256, beam=4),
 }
 
 
@@ -85,6 +88,8 @@ class AirshipArch(Arch):
         params = cfg.params
         if use_pq:
             params = dataclasses.replace(params, approx="pq")
+        if sh.get("beam", 0) > 1:
+            params = dataclasses.replace(params, beam_width=sh["beam"])
         search = make_distributed_search(
             mi.mesh, params, batch_axes=mi.dp_axes, with_pq=use_pq
         )

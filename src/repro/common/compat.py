@@ -1,0 +1,63 @@
+"""Version-compatibility shims for the jax API surface this repo uses.
+
+The repo targets current jax (top-level ``jax.shard_map`` with
+``check_vma``; dict-returning ``cost_analysis``) but must also run on the
+0.4.x CPU wheels pinned in requirements-dev.txt, where ``shard_map`` still
+lives under ``jax.experimental`` (with ``check_rep``) and
+``Compiled.cost_analysis()`` returns a one-element list of dicts. Every
+call site goes through these wrappers instead of branching locally.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Optional
+
+import jax
+
+
+def shard_map(fn, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` across jax versions (drop-in for the modern call)."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(
+                fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_vma=check_vma,
+            )
+        except TypeError:  # top-level API predating the check_vma rename
+            return jax.shard_map(
+                fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_rep=check_vma,
+            )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh`` across versions (context manager).
+
+    On jax without an ambient-mesh API (0.4.x), this is a no-op context:
+    there, shardings always propagate from explicitly placed arguments and
+    the mesh is bound per shard_map call, so nothing needs activating.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    use_mesh = getattr(jax.sharding, "use_mesh", None)
+    if use_mesh is not None:
+        return use_mesh(mesh)
+    return contextlib.nullcontext(mesh)
+
+
+def cost_analysis_dict(compiled) -> Optional[dict[str, Any]]:
+    """``Compiled.cost_analysis()`` as a flat dict (or None when absent).
+
+    jax 0.4.x returns ``[{...}]`` (one entry per computation); newer jax
+    returns the dict directly.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
+    return cost

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.common.compat import shard_map
 from repro.core.constraints import LabelSetConstraint
 from repro.core.search import constrained_search
 from repro.core.types import Corpus, GraphIndex, SearchParams, SearchResult, SearchStats
@@ -83,6 +84,7 @@ def make_distributed_search(
             hops=P(batch_axes),
             visited=P(batch_axes),
             iters=P(),
+            beam_expansions=P(batch_axes, None),
         ),
     )
 
@@ -104,12 +106,14 @@ def make_distributed_search(
             hops=jax.lax.pmax(res.stats.hops, corpus_axis),
             visited=jax.lax.psum(res.stats.visited, corpus_axis),
             iters=jax.lax.pmax(res.stats.iters, corpus_axis),
+            # Per-slot expansions sum across shards (each shard walks its
+            # own subgraph with the full beam).
+            beam_expansions=jax.lax.psum(res.stats.beam_expansions, corpus_axis),
         )
         return SearchResult(dists=out_d, ids=out_i, stats=stats)
 
-    sharded = jax.shard_map(
+    sharded = shard_map(
         shard_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        check_vma=False,
     )
     return jax.jit(sharded)
 

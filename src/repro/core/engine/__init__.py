@@ -1,0 +1,40 @@
+# Beam-parallel traversal engine (DESIGN.md §5): three separable layers.
+#   policy.py — frontier selection (vanilla/start/alter/prefer as functions)
+#   expand.py — beam pop + one flattened (B, beam*deg) gather+distance
+#   loop.py   — compiled lock-step while_loop: state, termination, stats
+# `constrained_search` is the single entry point; repro.core.search re-exports
+# it so existing callers (pipeline, distributed, archs, examples) are
+# untouched. Future sharded / async serving PRs plug in at this seam.
+from repro.core.engine.expand import (
+    expand_beam,
+    mask_first_occurrence,
+    neighbor_distances,
+    pop_frontier_beam,
+)
+from repro.core.engine.loop import TraversalState, constrained_search, seed_state
+from repro.core.engine.policy import (
+    POLICIES,
+    FrontierPolicy,
+    get_policy,
+    is_two_queue,
+    prefer_policy,
+    ratio_policy,
+    single_queue_policy,
+)
+
+__all__ = [
+    "POLICIES",
+    "FrontierPolicy",
+    "TraversalState",
+    "constrained_search",
+    "expand_beam",
+    "get_policy",
+    "is_two_queue",
+    "mask_first_occurrence",
+    "neighbor_distances",
+    "pop_frontier_beam",
+    "prefer_policy",
+    "ratio_policy",
+    "seed_state",
+    "single_queue_policy",
+]

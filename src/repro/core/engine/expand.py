@@ -1,0 +1,202 @@
+"""Beam expansion: pop ``beam_width`` vertices per query, gather once.
+
+The seed loop popped exactly one vertex per query per lock-step iteration,
+so every iteration fed the fused gather+distance path only ``deg``
+candidates. Here each iteration pops up to ``beam_width`` vertices per
+query (``pop_frontier_beam``) and flattens their adjacency into ONE
+``(B, beam*deg)`` candidate gather (``expand_beam``) through whichever
+distance path is active — jnp fallback, the Pallas ``gather_distance``
+kernel, or PQ/ADC lookup. ``beam_width=1`` reproduces the seed computation
+exactly; wider beams trade per-slot threshold staleness for beam-times
+fewer lock-step iterations (DESIGN.md §5).
+
+Correctness note: two vertices popped in the same beam may share an
+unvisited neighbor, so the flattened id list can contain duplicates. The
+visited bitset uses scatter-ADD (valid only for duplicate-free rows,
+core/visited.py) and the frontiers must not hold a vertex twice, so
+``mask_first_occurrence`` keeps only the first copy. It is skipped at
+``beam_width=1`` where adjacency rows are duplicate-free by construction.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.distances import batched_rowwise_sqdist
+from repro.core import queue as q
+from repro.core import visited as vis
+from repro.core.engine.policy import get_policy, is_two_queue
+
+Array = jax.Array
+
+
+def neighbor_distances(
+    queries: Array,
+    corpus_vectors: Array,
+    nbrs: Array,
+    use_kernel: bool,
+    pq_codes: Optional[Array] = None,
+    lut: Optional[Array] = None,
+) -> Array:
+    """(B, d) x (n, d) x (B, M) ids -> (B, M) squared distances.
+
+    With (pq_codes, lut) set, distances are PQ/ADC approximations: gather
+    m_sub code bytes per candidate instead of d floats (32x fewer HBM bytes
+    at d=128, m_sub=16) and sum per-subspace LUT entries.
+    """
+    if lut is not None:
+        safe = jnp.maximum(nbrs, 0)
+        codes = pq_codes[safe]  # (B, M, m_sub)
+        # d[b,m] = sum_s lut[b, s, codes[b,m,s]]
+        gathered = jnp.take_along_axis(
+            lut[:, None, :, :],  # (B, 1, m_sub, n_cent)
+            codes[..., None],  # (B, M, m_sub, 1)
+            axis=-1,
+        )[..., 0]
+        return jnp.sum(gathered, axis=-1)
+    if use_kernel:
+        from repro.kernels.gather_distance.ops import gather_distance
+
+        return gather_distance(queries, corpus_vectors, nbrs)
+    safe = jnp.maximum(nbrs, 0)
+    rows = corpus_vectors[safe]  # (B, M, d)
+    return batched_rowwise_sqdist(queries, rows)
+
+
+def mask_first_occurrence(ids: Array, valid: Array) -> Array:
+    """Clear ``valid`` on all but the first copy of each id per row.
+
+    ids/valid: (B, M). O(M^2) pairwise compare — at M = beam*deg <= 512
+    this is a cheap boolean VPU block next to the (B, M, d) gather; a
+    sort-based unique becomes worthwhile only far beyond that.
+    """
+    m = ids.shape[-1]
+    eq = ids[:, :, None] == ids[:, None, :]  # (B, M, M)
+    earlier = jnp.tril(jnp.ones((m, m), bool), k=-1)
+    dup = jnp.any(eq & earlier[None] & valid[:, None, :], axis=-1)
+    return valid & ~dup
+
+
+def pop_frontier_beam(
+    mode: str,
+    sat: q.BatchedQueue,
+    oth: q.BatchedQueue,
+    done: Array,
+    cnt_sat: Array,
+    cnt_total: Array,
+    ratio: Array,
+    thr: Array,
+    beam_width: int,
+) -> Tuple[
+    q.BatchedQueue, q.BatchedQueue, Array, Array, Array, Array, Array, Array
+]:
+    """Pop up to ``beam_width`` vertices per query under the mode's policy.
+
+    Termination is Alg. 1/2's threshold test against ``thr`` — the top-k
+    bound captured at the START of the iteration (beam lock-step
+    semantics: slots within one beam do not see each other's result-list
+    updates). A slot whose pop exceeds ``thr`` marks the query done; later
+    slots of a done query neither pop nor expand. Frontier exhaustion is
+    only final when observed at iteration start (slot 0): frontiers that
+    run short MID-beam merely skip the remaining slots, because this
+    iteration's expansion of the earlier slots may refill them.
+
+    Returns (sat, oth, now_d (B, W), now_i (B, W), sel_sat (B, W),
+    expand (B, W), done (B,), cnt_sat, cnt_total). Counters count actual
+    pops — including the one that trips the threshold, as in the seed.
+    """
+    if not is_two_queue(mode):
+        # Single-frontier fast path: one shifted copy pops the whole beam.
+        done_now = done | ~(q.queue_nonempty(sat) | q.queue_nonempty(oth))
+        live = ~done_now
+        oth, now_d, now_i = q.queue_pop_n(oth, beam_width, live)
+        popped = live[:, None] & jnp.isfinite(now_d)
+        # Only a genuinely popped vertex can trip Alg. 1/2 termination; a
+        # frontier that merely ran short mid-beam (INF padding slots) is
+        # refilled by this very iteration's expansion — if it stays empty,
+        # next iteration's done_now check finishes the query.
+        over = popped & (now_d > thr[:, None])
+        # Pops come out ascending: once a slot exceeds thr (or hits queue
+        # padding) every later slot does too — cumulative stop.
+        stop = jnp.cumsum((over | ~popped).astype(jnp.int32), -1) > 0
+        expand = live[:, None] & ~stop
+        done = done_now | jnp.any(over, axis=-1)
+        cnt_total = cnt_total + jnp.sum(popped, -1, dtype=jnp.int32)
+        sel_sat = jnp.zeros_like(expand)
+        return sat, oth, now_d, now_i, sel_sat, expand, done, cnt_sat, cnt_total
+
+    # Two-frontier path: the policy re-reads heads and counters after every
+    # pop, so slots are peeled one at a time (beam_width is static & small).
+    policy = get_policy(mode)
+    slots_d, slots_i, slots_sel, slots_expand = [], [], [], []
+    for j in range(beam_width):
+        empty = ~(q.queue_nonempty(sat) | q.queue_nonempty(oth))
+        if j == 0:
+            # Empty at iteration START is final — the previous iteration's
+            # expansion already ran and pushed nothing (Alg. 1/2).
+            done = done | empty
+            blocked = done
+        else:
+            # Empty MID-beam only skips the remaining slots: this
+            # iteration's expansion of the earlier slots may refill the
+            # frontiers, so the query must survive to the next iteration.
+            blocked = done | empty
+        sel = policy(sat, oth, cnt_sat, cnt_total, ratio)
+        live = ~blocked
+        sat, sat_d, sat_i = q.queue_pop(sat, sel & live)
+        oth, oth_d, oth_i = q.queue_pop(oth, ~sel & live)
+        now_d = jnp.where(sel, sat_d, oth_d)
+        now_i = jnp.where(sel, sat_i, oth_i)
+        cnt_total = cnt_total + live.astype(jnp.int32)
+        cnt_sat = cnt_sat + (sel & live).astype(jnp.int32)
+        over = live & (now_d > thr)  # threshold crossings alone are sticky
+        done = done | over
+        slots_d.append(now_d)
+        slots_i.append(now_i)
+        slots_sel.append(sel)
+        slots_expand.append(live & ~over)
+    return (
+        sat,
+        oth,
+        jnp.stack(slots_d, axis=-1),
+        jnp.stack(slots_i, axis=-1),
+        jnp.stack(slots_sel, axis=-1),
+        jnp.stack(slots_expand, axis=-1),
+        done,
+        cnt_sat,
+        cnt_total,
+    )
+
+
+def expand_beam(
+    neighbors: Array,
+    queries: Array,
+    corpus_vectors: Array,
+    now_i: Array,
+    expand: Array,
+    visited: Array,
+    use_kernel: bool,
+    pq_codes: Optional[Array] = None,
+    lut: Optional[Array] = None,
+) -> Tuple[Array, Array, Array]:
+    """Flatten the beam's adjacency into one (B, beam*deg) candidate batch.
+
+    now_i/expand: (B, W). Returns (nbrs (B, W*deg) ids, d_nb (B, W*deg)
+    distances, fresh (B, W*deg) push mask — valid, unvisited, first
+    occurrence). One fused gather+distance call per iteration regardless
+    of beam width is the whole point: the kernel sees W*deg candidates.
+    """
+    b, w = now_i.shape
+    deg = neighbors.shape[-1]
+    safe = jnp.maximum(now_i, 0)
+    nbrs = neighbors[safe].reshape(b, w * deg)
+    nb_valid = (nbrs >= 0) & jnp.repeat(expand, deg, axis=-1)
+    fresh = nb_valid & ~vis.visited_test(visited, nbrs)
+    if w > 1:
+        fresh = mask_first_occurrence(nbrs, fresh)
+    d_nb = neighbor_distances(
+        queries, corpus_vectors, nbrs, use_kernel, pq_codes, lut
+    )
+    return nbrs, d_nb, fresh

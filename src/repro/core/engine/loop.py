@@ -1,0 +1,265 @@
+"""The compiled traversal loop: state, termination, stats (DESIGN.md §5).
+
+One `lax.while_loop` advances the whole query batch in lock-step. Each
+iteration delegates to the two sibling layers — ``policy`` decides which
+frontier feeds each beam slot, ``expand`` pops the beam and performs the
+single flattened gather+distance — and this module owns everything that
+survives between iterations: queue/bitset state, the per-query done masks,
+the Alg. 1/2 threshold termination, and the instrumentation counters.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.distances import squared_l2
+from repro.common.pytree import pytree_dataclass
+from repro.core import queue as q
+from repro.core import visited as vis
+from repro.core.alter_ratio import estimate_alter_ratio
+from repro.core.constraints import make_satisfied_fn
+from repro.core.engine.expand import (
+    expand_beam,
+    neighbor_distances,
+    pop_frontier_beam,
+)
+from repro.core.engine.policy import is_two_queue
+from repro.core.types import (
+    Corpus,
+    GraphIndex,
+    SearchParams,
+    SearchResult,
+    SearchStats,
+)
+
+Array = jax.Array
+
+
+@pytree_dataclass
+class TraversalState:
+    sat: q.BatchedQueue
+    oth: q.BatchedQueue
+    topk: q.BatchedQueue
+    visited: Array  # (B, W) uint32
+    cnt_sat: Array  # (B,) int32
+    cnt_total: Array  # (B,) int32
+    dist_evals: Array  # (B,) int32
+    hops: Array  # (B,) int32
+    beam_expanded: Array  # (B, beam_width) int32
+    done: Array  # (B,) bool
+    iters: Array  # () int32
+
+
+def seed_state(
+    corpus: Corpus,
+    graph: GraphIndex,
+    queries: Array,
+    satisfied,
+    params: SearchParams,
+    rng: Optional[Array],
+    pq_codes: Optional[Array] = None,
+    lut: Optional[Array] = None,
+) -> tuple[TraversalState, Array]:
+    """Initialize queues/visited per mode; returns (state, alter_ratio (B,))."""
+    b = queries.shape[0]
+    n = corpus.n
+    state = TraversalState(
+        sat=q.queue_init(b, params.ef_sat),
+        oth=q.queue_init(b, params.ef_other),
+        topk=q.queue_init(b, params.result_capacity),
+        visited=vis.visited_init(b, n),
+        cnt_sat=jnp.zeros((b,), jnp.int32),
+        cnt_total=jnp.zeros((b,), jnp.int32),
+        dist_evals=jnp.zeros((b,), jnp.int32),
+        hops=jnp.zeros((b,), jnp.int32),
+        beam_expanded=jnp.zeros((b, params.beam_width), jnp.int32),
+        done=jnp.zeros((b,), bool),
+        iters=jnp.int32(0),
+    )
+
+    # --- global entry vertex (always seeded; exploration anchor + fallback) ---
+    if params.mode == "vanilla" and rng is not None:
+        entry = jax.random.randint(rng, (b,), 0, n, dtype=jnp.int32)
+    else:
+        entry = jnp.broadcast_to(graph.entry_point.astype(jnp.int32), (b,))
+    d_entry = neighbor_distances(
+        queries, corpus.vectors, entry[:, None], params.use_kernel, pq_codes, lut
+    )  # (B, 1)
+    state = state.replace(
+        oth=q.queue_push(state.oth, d_entry, entry[:, None], jnp.ones((b, 1), bool)),
+        visited=vis.visited_set(state.visited, entry[:, None], jnp.ones((b, 1), bool)),
+        dist_evals=state.dist_evals + 1,
+    )
+
+    ratio = jnp.full((b,), params.alter_ratio or 0.5, jnp.float32)
+
+    sample = graph.sample_ids  # (S,)
+    s = sample.shape[0]
+    sample_ids_b = jnp.broadcast_to(sample[None, :], (b, s))
+    if lut is not None:
+        d_sample = neighbor_distances(
+            queries, corpus.vectors, sample_ids_b, False, pq_codes, lut
+        )
+    else:
+        sample_vecs = corpus.vectors[sample]  # (S, d)
+        d_sample = squared_l2(queries, sample_vecs)  # (B, S)
+
+    if params.mode == "vanilla":
+        # Flat kNN graphs lack HNSW's hierarchy for long-range navigation;
+        # the standard fix is multi-start from the build-time sample
+        # (UNCONSTRAINED here — the constraint plays no role in vanilla's
+        # seeding, matching the paper's baseline semantics).
+        n_start = min(params.n_start, s)
+        neg_top, top_pos = jax.lax.top_k(-d_sample, n_start)
+        start_d = -neg_top
+        start_ids = jnp.take_along_axis(sample_ids_b, top_pos, axis=-1)
+        fresh = ~vis.visited_test(state.visited, start_ids)
+        state = state.replace(
+            oth=q.queue_push(state.oth, start_d, start_ids, fresh),
+            visited=vis.visited_set(state.visited, start_ids, fresh),
+            dist_evals=state.dist_evals + s,
+        )
+        return state, ratio
+
+    # --- AIRSHIP-Start: filter the pre-drawn sample by the constraint -------
+    sample_sat = satisfied(sample_ids_b)  # (B, S)
+    d_masked = jnp.where(sample_sat, d_sample, jnp.inf)
+
+    n_start = min(params.n_start, s)
+    neg_top, top_pos = jax.lax.top_k(-d_masked, n_start)  # best = smallest dist
+    start_d = -neg_top  # (B, n_start)
+    start_ids = jnp.take_along_axis(sample_ids_b, top_pos, axis=-1)
+    start_valid = jnp.isfinite(start_d)
+    # Entry vertex may coincide with a start — only set genuinely fresh bits.
+    fresh = start_valid & ~vis.visited_test(state.visited, start_ids)
+
+    target = "oth" if params.mode == "start" else "sat"
+    pushed = q.queue_push(getattr(state, target), start_d, start_ids, fresh)
+    state = state.replace(
+        **{target: pushed},
+        visited=vis.visited_set(state.visited, start_ids, fresh),
+        dist_evals=state.dist_evals + s,  # the sample scan costs S distances
+    )
+
+    if params.mode in ("alter", "prefer") and params.alter_ratio is None:
+        ratio = estimate_alter_ratio(
+            graph, satisfied, sample_sat, params.alter_ratio_k
+        )
+    return state, ratio
+
+
+@partial(jax.jit, static_argnames=("params",))
+def constrained_search(
+    corpus: Corpus,
+    graph: GraphIndex,
+    queries: Array,
+    constraint,
+    params: SearchParams,
+    rng: Optional[Array] = None,
+    pq_index=None,
+) -> SearchResult:
+    """Top-k constrained similarity search for a batch of queries.
+
+    queries: (B, d). Returns ascending (B, K) distances/ids; unreachable
+    slots hold (+inf, -1).
+
+    With params.approx == "pq", ``pq_index`` (core.pq.PQIndex) drives the
+    traversal with ADC distances; the ef_result survivors are re-ranked
+    exactly before the final top-k (beyond-paper, EXPERIMENTS.md §Perf D4).
+
+    With params.beam_width > 1, each iteration expands up to ``beam_width``
+    vertices per query through one flattened (B, beam*deg) gather; the
+    termination threshold is evaluated against the top-k list as of the
+    start of the iteration (beam lock-step semantics, DESIGN.md §5).
+    """
+    satisfied = make_satisfied_fn(constraint, corpus)
+    if params.approx == "pq":
+        if pq_index is None:
+            raise ValueError("approx='pq' requires pq_index")
+        from repro.core.pq import adc_table
+
+        pq_codes = pq_index.codes
+        lut = adc_table(pq_index, queries)
+    else:
+        pq_codes = lut = None
+    state, ratio = seed_state(
+        corpus, graph, queries, satisfied, params, rng, pq_codes, lut
+    )
+    two_queue = is_two_queue(params.mode)
+
+    def cond(st: TraversalState) -> Array:
+        return jnp.any(~st.done) & (st.iters < params.max_iters)
+
+    def body(st: TraversalState) -> TraversalState:
+        # --- Alg. 1/2 termination bound, captured at iteration start --------
+        thr = q.topk_threshold(st.topk, params.result_capacity)
+
+        # --- policy + beam pop (engine/policy.py, engine/expand.py) ---------
+        sat, oth, now_d, now_i, sel_sat, expand, done, cnt_sat, cnt_total = (
+            pop_frontier_beam(
+                params.mode, st.sat, st.oth, st.done, st.cnt_sat,
+                st.cnt_total, ratio, thr, params.beam_width,
+            )
+        )
+
+        # --- result update ---------------------------------------------------
+        if two_queue:
+            # the sat frontier only ever holds satisfied vertices.
+            upd = expand & sel_sat
+        else:
+            upd = expand & satisfied(now_i)
+        topk = q.queue_push(st.topk, now_d, now_i, upd)
+
+        # --- one flattened (B, beam*deg) expansion ---------------------------
+        nbrs, d_nb, fresh = expand_beam(
+            graph.neighbors, queries, corpus.vectors, now_i, expand,
+            st.visited, params.use_kernel, pq_codes, lut,
+        )
+        if two_queue:
+            nb_sat = satisfied(nbrs) & fresh
+            sat = q.queue_push(sat, d_nb, nbrs, nb_sat)
+            oth = q.queue_push(oth, d_nb, nbrs, fresh & ~nb_sat)
+        else:
+            oth = q.queue_push(oth, d_nb, nbrs, fresh)
+
+        return TraversalState(
+            sat=sat,
+            oth=oth,
+            topk=topk,
+            visited=vis.visited_set(st.visited, nbrs, fresh),
+            cnt_sat=cnt_sat,
+            cnt_total=cnt_total,
+            dist_evals=st.dist_evals + jnp.sum(fresh, axis=-1, dtype=jnp.int32),
+            hops=st.hops + jnp.sum(expand, axis=-1, dtype=jnp.int32),
+            beam_expanded=st.beam_expanded + expand.astype(jnp.int32),
+            done=done,
+            iters=st.iters + 1,
+        )
+
+    final = jax.lax.while_loop(cond, body, state)
+    stats = SearchStats(
+        dist_evals=final.dist_evals,
+        hops=final.hops,
+        visited=vis.visited_count(final.visited),
+        iters=final.iters,
+        beam_expansions=final.beam_expanded,
+    )
+    out_d, out_i = final.topk.dists, final.topk.ids
+    if params.approx == "pq":
+        # Exact re-rank of the ef_result survivors (ADC ordered the walk;
+        # exact distances order the answer).
+        exact_d = neighbor_distances(queries, corpus.vectors, out_i, False)
+        exact_d = jnp.where(out_i >= 0, exact_d, jnp.inf)
+        order = jnp.argsort(exact_d, axis=-1)
+        out_d = jnp.take_along_axis(exact_d, order, axis=-1)
+        out_i = jnp.take_along_axis(out_i, order, axis=-1)
+        out_i = jnp.where(jnp.isfinite(out_d), out_i, -1)
+    # The ef_result-sized candidate list is truncated to the requested top-k.
+    return SearchResult(
+        dists=out_d[:, : params.k],
+        ids=out_i[:, : params.k],
+        stats=stats,
+    )

@@ -1,0 +1,79 @@
+"""Frontier-selection policies — which queue feeds the next expansion.
+
+Each of the paper's four algorithm variants reduces to one small pure
+function over the two frontier heads and the pop counters, evaluated once
+per beam slot (DESIGN.md §5). A policy maps the current traversal view to a
+``(B,) bool`` mask ``sel_sat`` — True selects the satisfied frontier, False
+the other frontier:
+
+  * ``vanilla`` / ``start`` — single frontier: everything lives in ``oth``,
+    so the policy is the constant False.
+  * ``alter``  — Alg. 3: keep the satisfied share of pops at ``alter_ratio``
+    (``cnt_sat <= ratio * cnt_total``), falling back to whichever queue is
+    non-empty.
+  * ``prefer`` — §2.5: ``alter`` plus an override whenever the best
+    satisfied candidate already beats the best unsatisfied one.
+
+New policies (e.g. learned or per-tenant selection rules) plug in by
+registering a function of the same signature — the loop and expansion
+layers never branch on the mode themselves.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import queue as q
+
+Array = jax.Array
+
+# (sat_queue, oth_queue, cnt_sat (B,), cnt_total (B,), ratio (B,)) -> (B,) bool
+FrontierPolicy = Callable[
+    [q.BatchedQueue, q.BatchedQueue, Array, Array, Array], Array
+]
+
+
+def single_queue_policy(
+    sat: q.BatchedQueue, oth: q.BatchedQueue, cnt_sat, cnt_total, ratio
+) -> Array:
+    """vanilla / start: one frontier — always pop ``oth``."""
+    return jnp.zeros((oth.batch,), bool)
+
+
+def ratio_policy(
+    sat: q.BatchedQueue, oth: q.BatchedQueue, cnt_sat, cnt_total, ratio
+) -> Array:
+    """Alg. 3 alternation: hold the satisfied pop share at ``ratio``."""
+    sat_ne = q.queue_nonempty(sat)
+    oth_ne = q.queue_nonempty(oth)
+    rule = cnt_sat.astype(jnp.float32) <= ratio * cnt_total.astype(jnp.float32)
+    return jnp.where(~oth_ne, True, jnp.where(~sat_ne, False, rule))
+
+
+def prefer_policy(
+    sat: q.BatchedQueue, oth: q.BatchedQueue, cnt_sat, cnt_total, ratio
+) -> Array:
+    """§2.5 biased selection: ratio rule + best-satisfied-head override."""
+    sel = ratio_policy(sat, oth, cnt_sat, cnt_total, ratio)
+    head_sat_d, _ = q.queue_head(sat)
+    head_oth_d, _ = q.queue_head(oth)
+    return sel | (q.queue_nonempty(sat) & (head_sat_d <= head_oth_d))
+
+
+POLICIES: Dict[str, FrontierPolicy] = {
+    "vanilla": single_queue_policy,
+    "start": single_queue_policy,
+    "alter": ratio_policy,
+    "prefer": prefer_policy,
+}
+
+
+def get_policy(mode: str) -> FrontierPolicy:
+    return POLICIES[mode]
+
+
+def is_two_queue(mode: str) -> bool:
+    """Modes that maintain a separate satisfied frontier."""
+    return mode in ("alter", "prefer")

@@ -8,9 +8,10 @@ frontier as a distance-ascending sorted array of static capacity ``C``:
   * ``push`` == concatenate, argsort, truncate back to ``C``
 
 All operations carry a leading batch axis ``B`` (one queue per query) so the
-whole query batch advances in lock-step. Sorting ``C + M`` keys per step is a
-small sorting network on TPU — for typical ``C`` in [64, 512] and graph degree
-``M`` in [16, 64] this is far cheaper than the neighbor-distance gathers.
+whole query batch advances in lock-step (DESIGN.md §2). Sorting ``C + M`` keys
+per step is a small sorting network on TPU — for typical ``C`` in [64, 512]
+and graph degree ``M`` in [16, 64] this is far cheaper than the
+neighbor-distance gathers.
 """
 from __future__ import annotations
 
@@ -69,13 +70,36 @@ def queue_pop(q: BatchedQueue, do_pop: Array) -> tuple[BatchedQueue, Array, Arra
     Rows with ``do_pop == False`` are returned unchanged (their reported
     head is still returned — callers mask on ``do_pop``).
     """
-    head_d, head_i = queue_head(q)
-    shifted_d = jnp.concatenate(
-        [q.dists[:, 1:], jnp.full((q.batch, 1), INF, q.dists.dtype)], axis=-1
-    )
-    shifted_i = jnp.concatenate(
-        [q.ids[:, 1:], jnp.full((q.batch, 1), PAD_ID, q.ids.dtype)], axis=-1
-    )
+    new, head_d, head_i = queue_pop_n(q, 1, do_pop)
+    return new, head_d[:, 0], head_i[:, 0]
+
+
+def queue_pop_n(
+    q: BatchedQueue, n: int, do_pop: Array
+) -> tuple[BatchedQueue, Array, Array]:
+    """Pop the best ``n`` elements of each row where ``do_pop`` (B,) is set.
+
+    Returns (new_queue, (B, n) dists, (B, n) ids), both ascending per row.
+    Empty slots report (+inf, -1); when a row holds fewer than ``n`` live
+    elements the trailing slots are padding. Rows with ``do_pop == False``
+    are returned unchanged (their best ``n`` are still reported — callers
+    mask on ``do_pop``). The beam engine (DESIGN.md §5) uses this to pop a
+    whole beam in one shifted copy instead of ``n`` sequential pops.
+    """
+    c = q.capacity
+    if n >= c:
+        head_d = jnp.pad(q.dists, ((0, 0), (0, n - c)), constant_values=INF)
+        head_i = jnp.pad(q.ids, ((0, 0), (0, n - c)), constant_values=PAD_ID)
+        shifted_d = jnp.full_like(q.dists, INF)
+        shifted_i = jnp.full_like(q.ids, PAD_ID)
+    else:
+        head_d, head_i = q.dists[:, :n], q.ids[:, :n]
+        shifted_d = jnp.concatenate(
+            [q.dists[:, n:], jnp.full((q.batch, n), INF, q.dists.dtype)], axis=-1
+        )
+        shifted_i = jnp.concatenate(
+            [q.ids[:, n:], jnp.full((q.batch, n), PAD_ID, q.ids.dtype)], axis=-1
+        )
     new = BatchedQueue(
         dists=jnp.where(do_pop[:, None], shifted_d, q.dists),
         ids=jnp.where(do_pop[:, None], shifted_i, q.ids),

@@ -1,6 +1,8 @@
 """Batched, lock-step constrained proximity-graph search (AIRSHIP core).
 
-Implements the paper's four algorithm variants behind one compiled loop:
+Facade over the beam-parallel traversal engine (``repro.core.engine``,
+DESIGN.md §5), which implements the paper's four algorithm variants behind
+one compiled loop:
 
   * ``vanilla``  — Alg. 1: single frontier, constraint checked on pop.
   * ``start``    — §2.2: + satisfied starting points from the pre-drawn sample.
@@ -11,305 +13,15 @@ Implements the paper's four algorithm variants behind one compiled loop:
 
 TPU adaptation (see DESIGN.md §2): fixed-capacity sorted-array queues, bitset
 visited, one `lax.while_loop` over the whole query batch with per-query done
-masks, and a fused gather+distance step (Pallas kernel or jnp fallback).
+masks, and a fused gather+distance step (Pallas kernel or jnp fallback) fed
+``beam_width * deg`` candidates per iteration.
+
+The engine split (policy / expand / loop) lives in ``core/engine/``; this
+module only re-exports the public entry point so the historical import path
+``repro.core.search.constrained_search`` keeps working.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
+from repro.core.engine.loop import constrained_search
 
-import jax
-import jax.numpy as jnp
-
-from repro.common.distances import batched_rowwise_sqdist, squared_l2
-from repro.common.pytree import pytree_dataclass
-from repro.core import queue as q
-from repro.core import visited as vis
-from repro.core.alter_ratio import estimate_alter_ratio
-from repro.core.constraints import make_satisfied_fn
-from repro.core.types import (
-    Corpus,
-    GraphIndex,
-    SearchParams,
-    SearchResult,
-    SearchStats,
-)
-
-Array = jax.Array
-
-
-@pytree_dataclass
-class _State:
-    sat: q.BatchedQueue
-    oth: q.BatchedQueue
-    topk: q.BatchedQueue
-    visited: Array  # (B, W) uint32
-    cnt_sat: Array  # (B,) int32
-    cnt_total: Array  # (B,) int32
-    dist_evals: Array  # (B,) int32
-    hops: Array  # (B,) int32
-    done: Array  # (B,) bool
-    iters: Array  # () int32
-
-
-def _neighbor_distances(
-    queries: Array,
-    corpus_vectors: Array,
-    nbrs: Array,
-    use_kernel: bool,
-    pq_codes: Optional[Array] = None,
-    lut: Optional[Array] = None,
-) -> Array:
-    """(B, d) x (n, d) x (B, M) ids -> (B, M) squared distances.
-
-    With (pq_codes, lut) set, distances are PQ/ADC approximations: gather
-    m_sub code bytes per candidate instead of d floats (32x fewer HBM bytes
-    at d=128, m_sub=16) and sum per-subspace LUT entries.
-    """
-    if lut is not None:
-        safe = jnp.maximum(nbrs, 0)
-        codes = pq_codes[safe]  # (B, M, m_sub)
-        # d[b,m] = sum_s lut[b, s, codes[b,m,s]]
-        gathered = jnp.take_along_axis(
-            lut[:, None, :, :],  # (B, 1, m_sub, n_cent)
-            codes[..., None],  # (B, M, m_sub, 1)
-            axis=-1,
-        )[..., 0]
-        return jnp.sum(gathered, axis=-1)
-    if use_kernel:
-        from repro.kernels.gather_distance.ops import gather_distance
-
-        return gather_distance(queries, corpus_vectors, nbrs)
-    safe = jnp.maximum(nbrs, 0)
-    rows = corpus_vectors[safe]  # (B, M, d)
-    return batched_rowwise_sqdist(queries, rows)
-
-
-def _seed_state(
-    corpus: Corpus,
-    graph: GraphIndex,
-    queries: Array,
-    satisfied,
-    params: SearchParams,
-    rng: Optional[Array],
-    pq_codes: Optional[Array] = None,
-    lut: Optional[Array] = None,
-) -> tuple[_State, Array]:
-    """Initialize queues/visited per mode; returns (state, alter_ratio (B,))."""
-    b = queries.shape[0]
-    n = corpus.n
-    state = _State(
-        sat=q.queue_init(b, params.ef_sat),
-        oth=q.queue_init(b, params.ef_other),
-        topk=q.queue_init(b, params.result_capacity),
-        visited=vis.visited_init(b, n),
-        cnt_sat=jnp.zeros((b,), jnp.int32),
-        cnt_total=jnp.zeros((b,), jnp.int32),
-        dist_evals=jnp.zeros((b,), jnp.int32),
-        hops=jnp.zeros((b,), jnp.int32),
-        done=jnp.zeros((b,), bool),
-        iters=jnp.int32(0),
-    )
-
-    # --- global entry vertex (always seeded; exploration anchor + fallback) ---
-    if params.mode == "vanilla" and rng is not None:
-        entry = jax.random.randint(rng, (b,), 0, n, dtype=jnp.int32)
-    else:
-        entry = jnp.broadcast_to(graph.entry_point.astype(jnp.int32), (b,))
-    d_entry = _neighbor_distances(
-        queries, corpus.vectors, entry[:, None], params.use_kernel, pq_codes, lut
-    )  # (B, 1)
-    state = state.replace(
-        oth=q.queue_push(state.oth, d_entry, entry[:, None], jnp.ones((b, 1), bool)),
-        visited=vis.visited_set(state.visited, entry[:, None], jnp.ones((b, 1), bool)),
-        dist_evals=state.dist_evals + 1,
-    )
-
-    ratio = jnp.full((b,), params.alter_ratio or 0.5, jnp.float32)
-
-    sample = graph.sample_ids  # (S,)
-    s = sample.shape[0]
-    sample_ids_b = jnp.broadcast_to(sample[None, :], (b, s))
-    if lut is not None:
-        d_sample = _neighbor_distances(
-            queries, corpus.vectors, sample_ids_b, False, pq_codes, lut
-        )
-    else:
-        sample_vecs = corpus.vectors[sample]  # (S, d)
-        d_sample = squared_l2(queries, sample_vecs)  # (B, S)
-
-    if params.mode == "vanilla":
-        # Flat kNN graphs lack HNSW's hierarchy for long-range navigation;
-        # the standard fix is multi-start from the build-time sample
-        # (UNCONSTRAINED here — the constraint plays no role in vanilla's
-        # seeding, matching the paper's baseline semantics).
-        n_start = min(params.n_start, s)
-        neg_top, top_pos = jax.lax.top_k(-d_sample, n_start)
-        start_d = -neg_top
-        start_ids = jnp.take_along_axis(sample_ids_b, top_pos, axis=-1)
-        fresh = ~vis.visited_test(state.visited, start_ids)
-        state = state.replace(
-            oth=q.queue_push(state.oth, start_d, start_ids, fresh),
-            visited=vis.visited_set(state.visited, start_ids, fresh),
-            dist_evals=state.dist_evals + s,
-        )
-        return state, ratio
-
-    # --- AIRSHIP-Start: filter the pre-drawn sample by the constraint -------
-    sample_sat = satisfied(sample_ids_b)  # (B, S)
-    d_masked = jnp.where(sample_sat, d_sample, jnp.inf)
-
-    n_start = min(params.n_start, s)
-    neg_top, top_pos = jax.lax.top_k(-d_masked, n_start)  # best = smallest dist
-    start_d = -neg_top  # (B, n_start)
-    start_ids = jnp.take_along_axis(sample_ids_b, top_pos, axis=-1)
-    start_valid = jnp.isfinite(start_d)
-    # Entry vertex may coincide with a start — only set genuinely fresh bits.
-    fresh = start_valid & ~vis.visited_test(state.visited, start_ids)
-
-    target = "oth" if params.mode == "start" else "sat"
-    pushed = q.queue_push(getattr(state, target), start_d, start_ids, fresh)
-    state = state.replace(
-        **{target: pushed},
-        visited=vis.visited_set(state.visited, start_ids, fresh),
-        dist_evals=state.dist_evals + s,  # the sample scan costs S distances
-    )
-
-    if params.mode in ("alter", "prefer") and params.alter_ratio is None:
-        ratio = estimate_alter_ratio(
-            graph, satisfied, sample_sat, params.alter_ratio_k
-        )
-    return state, ratio
-
-
-@partial(jax.jit, static_argnames=("params",))
-def constrained_search(
-    corpus: Corpus,
-    graph: GraphIndex,
-    queries: Array,
-    constraint,
-    params: SearchParams,
-    rng: Optional[Array] = None,
-    pq_index=None,
-) -> SearchResult:
-    """Top-k constrained similarity search for a batch of queries.
-
-    queries: (B, d). Returns ascending (B, K) distances/ids; unreachable
-    slots hold (+inf, -1).
-
-    With params.approx == "pq", ``pq_index`` (core.pq.PQIndex) drives the
-    traversal with ADC distances; the ef_result survivors are re-ranked
-    exactly before the final top-k (beyond-paper, EXPERIMENTS.md §Perf D4).
-    """
-    satisfied = make_satisfied_fn(constraint, corpus)
-    if params.approx == "pq":
-        if pq_index is None:
-            raise ValueError("approx='pq' requires pq_index")
-        from repro.core.pq import adc_table
-
-        pq_codes = pq_index.codes
-        lut = adc_table(pq_index, queries)
-    else:
-        pq_codes = lut = None
-    state, ratio = _seed_state(
-        corpus, graph, queries, satisfied, params, rng, pq_codes, lut
-    )
-    two_queue = params.mode in ("alter", "prefer")
-
-    def cond(st: _State) -> Array:
-        return jnp.any(~st.done) & (st.iters < params.max_iters)
-
-    def body(st: _State) -> _State:
-        sat_ne = q.queue_nonempty(st.sat)
-        oth_ne = q.queue_nonempty(st.oth)
-        # A row with both frontiers exhausted is finished.
-        done_now = st.done | ~(sat_ne | oth_ne)
-
-        # --- Alg. 3 (+ §2.5 override): frontier selection -------------------
-        if two_queue:
-            head_sat_d, _ = q.queue_head(st.sat)
-            head_oth_d, _ = q.queue_head(st.oth)
-            ratio_rule = st.cnt_sat.astype(jnp.float32) <= ratio * st.cnt_total.astype(
-                jnp.float32
-            )
-            sel_sat = jnp.where(~oth_ne, True, jnp.where(~sat_ne, False, ratio_rule))
-            if params.mode == "prefer":
-                sel_sat = sel_sat | (sat_ne & (head_sat_d <= head_oth_d))
-        else:
-            sel_sat = jnp.zeros_like(done_now)
-
-        # --- pop the selected frontier --------------------------------------
-        live = ~done_now
-        new_sat, sat_d, sat_i = q.queue_pop(st.sat, sel_sat & live)
-        new_oth, oth_d, oth_i = q.queue_pop(st.oth, ~sel_sat & live)
-        now_d = jnp.where(sel_sat, sat_d, oth_d)
-        now_i = jnp.where(sel_sat, sat_i, oth_i)
-
-        cnt_total = st.cnt_total + live.astype(jnp.int32)
-        cnt_sat = st.cnt_sat + (sel_sat & live).astype(jnp.int32)
-
-        # --- termination test (Alg. 1/2: break *before* the topk update) ----
-        thr = q.topk_threshold(st.topk, params.result_capacity)
-        done_next = done_now | (now_d > thr)
-        expand = ~done_next
-
-        # --- result update ---------------------------------------------------
-        if two_queue:
-            # pq_sat only ever holds satisfied vertices.
-            upd = expand & sel_sat
-        else:
-            upd = expand & satisfied(now_i[:, None])[:, 0]
-        topk = q.queue_push(st.topk, now_d[:, None], now_i[:, None], upd[:, None])
-
-        # --- expansion --------------------------------------------------------
-        safe_now = jnp.maximum(now_i, 0)
-        nbrs = graph.neighbors[safe_now]  # (B, deg)
-        nb_valid = (nbrs >= 0) & expand[:, None]
-        fresh = nb_valid & ~vis.visited_test(st.visited, nbrs)
-        d_nb = _neighbor_distances(
-            queries, corpus.vectors, nbrs, params.use_kernel, pq_codes, lut
-        )
-        if two_queue:
-            nb_sat = satisfied(nbrs) & fresh
-            sat_q = q.queue_push(new_sat, d_nb, nbrs, nb_sat)
-            oth_q = q.queue_push(new_oth, d_nb, nbrs, fresh & ~nb_sat)
-        else:
-            sat_q = new_sat
-            oth_q = q.queue_push(new_oth, d_nb, nbrs, fresh)
-
-        return _State(
-            sat=sat_q,
-            oth=oth_q,
-            topk=topk,
-            visited=vis.visited_set(st.visited, nbrs, fresh),
-            cnt_sat=cnt_sat,
-            cnt_total=cnt_total,
-            dist_evals=st.dist_evals + jnp.sum(fresh, axis=-1, dtype=jnp.int32),
-            hops=st.hops + expand.astype(jnp.int32),
-            done=done_next,
-            iters=st.iters + 1,
-        )
-
-    final = jax.lax.while_loop(cond, body, state)
-    stats = SearchStats(
-        dist_evals=final.dist_evals,
-        hops=final.hops,
-        visited=vis.visited_count(final.visited),
-        iters=final.iters,
-    )
-    out_d, out_i = final.topk.dists, final.topk.ids
-    if params.approx == "pq":
-        # Exact re-rank of the ef_result survivors (ADC ordered the walk;
-        # exact distances order the answer).
-        exact_d = _neighbor_distances(queries, corpus.vectors, out_i, False)
-        exact_d = jnp.where(out_i >= 0, exact_d, jnp.inf)
-        order = jnp.argsort(exact_d, axis=-1)
-        out_d = jnp.take_along_axis(exact_d, order, axis=-1)
-        out_i = jnp.take_along_axis(out_i, order, axis=-1)
-        out_i = jnp.where(jnp.isfinite(out_d), out_i, -1)
-    # The ef_result-sized candidate list is truncated to the requested top-k.
-    return SearchResult(
-        dists=out_d[:, : params.k],
-        ids=out_i[:, : params.k],
-        stats=stats,
-    )
+__all__ = ["constrained_search"]

@@ -69,6 +69,12 @@ class SearchParams:
     ef_other: int = static_field(default=128)
     n_start: int = static_field(default=32)
     max_iters: int = static_field(default=512)
+    # Beam width: vertices popped per query per lock-step iteration
+    # (engine/expand.py). 1 reproduces the paper's one-pop-per-hop loop
+    # bit-for-bit; wider beams amortize the fused gather+distance launch
+    # over beam*deg candidates at the cost of expanding against a
+    # threshold that is one iteration stale (DESIGN.md §5).
+    beam_width: int = static_field(default=1)
     # None -> estimate per-query via the Eq.-1 kNN statistic.
     alter_ratio: Optional[float] = static_field(default=None)
     alter_ratio_k: int = static_field(default=16)
@@ -83,6 +89,8 @@ class SearchParams:
             raise ValueError(f"unknown search mode: {self.mode}")
         if self.approx not in ("exact", "pq"):
             raise ValueError(f"unknown approx mode: {self.approx}")
+        if self.beam_width < 1:
+            raise ValueError(f"beam_width must be >= 1, got {self.beam_width}")
 
     @property
     def result_capacity(self) -> int:
@@ -97,6 +105,14 @@ class SearchStats:
     hops: Array  # (B,) int32 — vertices expanded
     visited: Array  # (B,) int32 — vertices touched
     iters: Array  # ()  int32 — lock-step iterations of the batch
+    # (B, beam_width) int32 — per-beam-slot expansion counts: how many
+    # iterations each slot actually expanded a vertex. Column 0 equals the
+    # single-pop ``hops`` at beam_width=1; trailing columns quantify how
+    # well wide beams stay fed (engine/expand.py). Locally
+    # sum(beam_expansions, -1) == hops; in the distributed merge the two
+    # intentionally diverge — beam_expansions psums across shards (a work
+    # measure, like dist_evals) while hops pmaxes (critical-path measure).
+    beam_expansions: Optional[Array] = None
 
 
 @pytree_dataclass

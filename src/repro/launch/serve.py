@@ -12,6 +12,7 @@ import argparse
 import time
 
 import jax
+from repro.common.compat import set_mesh
 import jax.numpy as jnp
 
 from repro.core import (
@@ -60,7 +61,7 @@ def main():
 
     total_q = 0
     t_start = time.perf_counter()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         for b in range(args.batches):
             q, qlab = make_queries(jax.random.fold_in(jax.random.PRNGKey(2), b),
                                    corpus, args.batch)

@@ -19,6 +19,8 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.common.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.meshinfo import MeshInfo
@@ -110,12 +112,11 @@ def dst_partitioned_energy(
 
     feat_key = "node_feat" if cfg.d_feat else "species"
     edge_spec = P(axes)
-    fn = jax.shard_map(
+    fn = shard_map(
         local_fn,
         mesh=mi.mesh,
         in_specs=(P(), P(), edge_spec, edge_spec),
         out_specs=P(),
-        check_vma=False,
     )
     return fn(
         batch["positions"].astype(cfg.compute_dtype),

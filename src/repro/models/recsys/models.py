@@ -15,6 +15,8 @@ from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.common.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.meshinfo import MeshInfo
@@ -407,12 +409,11 @@ def two_tower_score_candidates(
             )
             return t2, i2
 
-        return jax.shard_map(
+        return shard_map(
             local,
             mesh=mi.mesh,
             in_specs=(P(bspec, None), P(tp, None)),
             out_specs=(P(bspec, None), P(bspec, None)),
-            check_vma=False,
         )(u, cand)
     cand = mi.constrain(cand, mi.tp_axis, None)
     scores = u @ cand.T  # (B, C)

@@ -11,6 +11,8 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.common.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.meshinfo import MeshInfo
@@ -511,7 +513,7 @@ def _gqa_decode_sharded(ap, cfg, mi, h, k_cache, v_cache, pos, seq_axis):
                 seq_axis=seq_axis, shard_idx=jax.lax.axis_index(seq_axis),
             )
 
-        out, k_c, v_c = jax.shard_map(
+        out, k_c, v_c = shard_map(
             inner,
             mesh=mi.mesh,
             in_specs=(
@@ -526,7 +528,6 @@ def _gqa_decode_sharded(ap, cfg, mi, h, k_cache, v_cache, pos, seq_axis):
                 P(bspec, seq_axis, None, None),
                 P(bspec, seq_axis, None, None),
             ),
-            check_vma=False,
         )(q, k_cache, v_cache, k_new, v_new)
     proj = out.reshape(b, hds * dh).astype(h.dtype) @ ap["wo"]["w"].astype(h.dtype)
     return proj, k_c, v_c
@@ -547,12 +548,11 @@ def _mla_decode_sharded(ap, cfg, mi, h, c_cache, pos, seq_axis):
             seq_axis=seq_axis, shard_idx=jax.lax.axis_index(seq_axis),
         )
 
-    out, c_c = jax.shard_map(
+    out, c_c = shard_map(
         inner,
         mesh=mi.mesh,
         in_specs=(P(bspec, None), P(bspec, seq_axis, None)),
         out_specs=(P(bspec, None), P(bspec, seq_axis, None)),
-        check_vma=False,
     )(h, c_cache)
     return out, c_c
 

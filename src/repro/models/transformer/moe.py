@@ -19,6 +19,8 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.common.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.meshinfo import MeshInfo
@@ -136,7 +138,7 @@ def moe_ffn(p: Params, cfg, mi: MeshInfo, x: Array) -> Array:
     tp = mi.tp_axis
     e = cfg.n_experts
     if mi.tp_size > 1 and e % mi.tp_size == 0:
-        local = jax.shard_map(
+        local = shard_map(
             lambda xs, ps, w1, w3, w2: _moe_local(
                 xs, ps, w1, w3, w2, cfg=cfg, tp_axis=tp
             ),
@@ -149,7 +151,6 @@ def moe_ffn(p: Params, cfg, mi: MeshInfo, x: Array) -> Array:
                 P(tp, None, None),
             ),
             out_specs=P(dp, None, None),
-            check_vma=False,
         )
         out = local(
             x,

@@ -49,7 +49,8 @@ def test_roofline_report_terms_all_cells():
             assert np.isfinite(t.roofline_fraction), t.cell
             assert t.bottleneck in ("compute", "memory", "collective")
             n += 1
-    assert n == 43  # 40 assigned + 3 airship (incl. the D4 PQ variant)
+    # 40 assigned + 4 airship (incl. the D4 PQ and beam-engine variants)
+    assert n == 44
 
 
 def test_flash_attention_soft_cap_grads():

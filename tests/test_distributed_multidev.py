@@ -22,6 +22,7 @@ SCRIPT = textwrap.dedent(
     from repro.core import (SearchParams, equal_constraint, exact_constrained_search,
                             make_distributed_search, recall, shard_corpus_for_mesh)
     from repro.core.types import Corpus
+    from repro.common.compat import set_mesh, shard_map
     from repro.data.synthetic import make_labeled_corpus, make_queries
     from repro.graph.index import build_partitioned_index
 
@@ -38,7 +39,7 @@ SCRIPT = textwrap.dedent(
                           ef_other=64, n_start=8, max_iters=300)
     search = make_distributed_search(mesh, params)
     corpus_s, graph_s = shard_corpus_for_mesh(corpus_p, graph_p, mesh)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         res = search(corpus_s, graph_s, q, cons)
     td, ti = exact_constrained_search(corpus_p, q, cons, k=10)
     r = float(recall(res.ids, ti))
@@ -73,8 +74,8 @@ SCRIPT = textwrap.dedent(
         red, err = compressed_tree_psum_mean(gl, "dp")
         exact = jax.tree.map(lambda x: jax.lax.pmean(x, "dp"), gl)
         return red, exact
-    f = jax.shard_map(local, mesh=mesh1d, in_specs=({"w": P("dp")},),
-                       out_specs=({"w": P()}, {"w": P()}), check_vma=False)
+    f = shard_map(local, mesh=mesh1d, in_specs=({"w": P("dp")},),
+                  out_specs=({"w": P()}, {"w": P()}))
     red, exact = f(g)
     rel = float(jnp.max(jnp.abs(red["w"] - exact["w"])) /
                 (jnp.max(jnp.abs(exact["w"])) + 1e-9))
@@ -89,7 +90,7 @@ SCRIPT = textwrap.dedent(
     params_pq = dataclasses.replace(params, approx="pq")
     search_pq = mds(mesh, params_pq, with_pq=True)
     pq_sharded = jax.tree.map(lambda x: x, pq)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         res_pq = search_pq(corpus_s, graph_s, q, cons, pq)
     r_pq = float(recall(res_pq.ids, ti))
     print("DIST_PQ_RECALL", r_pq)
@@ -108,7 +109,7 @@ SCRIPT = textwrap.dedent(
         hist=jax.random.randint(jax.random.PRNGKey(7), (8, 4), -1, 512),
         candidates=jax.random.normal(jax.random.PRNGKey(8), (512, 8)),
     )
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         t1, i1 = jax.jit(lambda p, b: rs.two_tower_score_candidates(
             p, cfg_tt, mi, b, two_phase_topk=False))(p_tt, batch_tt)
         t2, i2 = jax.jit(lambda p, b: rs.two_tower_score_candidates(

@@ -1,0 +1,258 @@
+"""Engine-refactor regression suite: queue_pop_n + beam-parallel traversal.
+
+The golden file ``tests/golden/seed_search_outputs.npz`` was produced by the
+pre-refactor (seed) ``constrained_search`` on the synthetic corpus — the
+engine at ``beam_width=1`` must reproduce it bit-for-bit (ids, dists, and
+every stats counter) for all four modes under both constraint families.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    SearchParams,
+    constrained_search,
+    equal_constraint,
+    exact_constrained_search,
+    recall,
+    unequal_pct_constraint,
+)
+from repro.core import queue as q
+from repro.core.engine import mask_first_occurrence
+from repro.data.synthetic import make_labeled_corpus, make_queries
+from repro.graph.index import build_index
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden", "seed_search_outputs.npz")
+
+# ---------------------------------------------------------------------------
+# queue_pop_n properties
+# ---------------------------------------------------------------------------
+
+
+def _filled_queue(rows):
+    """Build a (len(rows), cap) queue from per-row value lists."""
+    cap = 8
+    qq = q.queue_init(len(rows), cap)
+    width = max(len(r) for r in rows)
+    d = np.full((len(rows), width), np.inf, np.float32)
+    i = np.full((len(rows), width), -1, np.int32)
+    v = np.zeros((len(rows), width), bool)
+    for r, vals in enumerate(rows):
+        d[r, : len(vals)] = vals
+        i[r, : len(vals)] = np.arange(100 * r, 100 * r + len(vals))
+        v[r, : len(vals)] = True
+    return q.queue_push(qq, jnp.asarray(d), jnp.asarray(i), jnp.asarray(v))
+
+
+def test_pop_n_empty_queue_reports_padding():
+    qq = q.queue_init(3, 8)
+    new, d, i = q.queue_pop_n(qq, 4, jnp.ones((3,), bool))
+    assert d.shape == (3, 4) and i.shape == (3, 4)
+    assert np.all(np.isinf(np.asarray(d)))
+    assert np.all(np.asarray(i) == -1)
+    np.testing.assert_array_equal(np.asarray(new.dists), np.asarray(qq.dists))
+
+
+def test_pop_n_more_than_live_entries():
+    qq = _filled_queue([[3.0, 1.0], [5.0]])
+    new, d, i = q.queue_pop_n(qq, 4, jnp.ones((2,), bool))
+    np.testing.assert_allclose(np.asarray(d[0]), [1.0, 3.0, np.inf, np.inf])
+    np.testing.assert_allclose(np.asarray(d[1]), [5.0, np.inf, np.inf, np.inf])
+    assert int(q.queue_size(new)[0]) == 0 and int(q.queue_size(new)[1]) == 0
+
+
+def test_pop_n_masked_rows_pop_nothing():
+    qq = _filled_queue([[1.0, 2.0, 3.0], [4.0, 5.0, 6.0]])
+    new, d, i = q.queue_pop_n(qq, 2, jnp.asarray([True, False]))
+    # both rows still REPORT their best 2 — callers mask on do_pop
+    np.testing.assert_allclose(np.asarray(d), [[1.0, 2.0], [4.0, 5.0]])
+    assert float(new.dists[0, 0]) == 3.0  # popped
+    np.testing.assert_allclose(np.asarray(new.dists[1, :3]), [4.0, 5.0, 6.0])
+
+
+def test_pop_n_ascending_and_matches_sequential_pops():
+    qq = _filled_queue([[7.0, 2.0, 9.0, 4.0, 1.0], [3.0, 8.0, 0.5, 6.0]])
+    live = jnp.ones((2,), bool)
+    new_n, d_n, i_n = q.queue_pop_n(qq, 3, live)
+    seq = qq
+    for j in range(3):
+        seq, d1, i1 = q.queue_pop(seq, live)
+        np.testing.assert_array_equal(np.asarray(d1), np.asarray(d_n[:, j]))
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i_n[:, j]))
+    np.testing.assert_array_equal(np.asarray(seq.dists), np.asarray(new_n.dists))
+    np.testing.assert_array_equal(np.asarray(seq.ids), np.asarray(new_n.ids))
+    d = np.asarray(d_n)
+    assert np.all(np.diff(d, axis=-1) >= 0)  # beam pops come out ascending
+
+
+def test_pop_n_at_and_beyond_capacity():
+    qq = _filled_queue([[1.0, 2.0, 3.0]])
+    for n in (8, 11):  # == capacity, > capacity
+        new, d, i = q.queue_pop_n(qq, n, jnp.ones((1,), bool))
+        assert d.shape == (1, n)
+        np.testing.assert_allclose(np.asarray(d[0, :3]), [1.0, 2.0, 3.0])
+        assert np.all(np.isinf(np.asarray(d[0, 3:])))
+        assert int(q.queue_size(new)[0]) == 0
+
+
+def test_short_frontier_mid_beam_does_not_terminate_single_queue():
+    """A frontier holding fewer than beam_width live entries (all below the
+    threshold) must NOT mark the query done — this iteration's expansion
+    refills it, and only a genuine threshold crossing is sticky."""
+    from repro.core.engine import pop_frontier_beam
+
+    oth = _filled_queue([[1.0, 2.0]])  # 2 live < beam_width=4, both < thr
+    sat = q.queue_init(1, 8)
+    zeros = jnp.zeros((1,), jnp.int32)
+    done0 = jnp.zeros((1,), bool)
+    ratio = jnp.full((1,), 0.5, jnp.float32)
+    thr = jnp.full((1,), 5.0, jnp.float32)
+    *_, expand, done, _, _ = pop_frontier_beam(
+        "vanilla", sat, oth, done0, zeros, zeros, ratio, thr, 4
+    )
+    np.testing.assert_array_equal(np.asarray(expand[0]), [True, True, False, False])
+    assert not bool(done[0])
+    # a real crossing IS sticky: thr below the second element
+    oth2 = _filled_queue([[1.0, 9.0]])
+    *_, expand2, done2, _, _ = pop_frontier_beam(
+        "vanilla", sat, oth2, done0, zeros, zeros, ratio, jnp.full((1,), 5.0), 4
+    )
+    np.testing.assert_array_equal(np.asarray(expand2[0]), [True, False, False, False])
+    assert bool(done2[0])
+
+
+def test_short_frontier_mid_beam_does_not_terminate_two_queue():
+    """Same invariant for alter/prefer: exhausting both frontiers at slot 1
+    of the beam only skips the remaining slots, while exhaustion observed
+    at slot 0 (iteration start) is final."""
+    from repro.core.engine import pop_frontier_beam
+
+    oth = _filled_queue([[1.0]])  # single live entry, below thr=inf
+    sat = q.queue_init(1, 8)
+    zeros = jnp.zeros((1,), jnp.int32)
+    done0 = jnp.zeros((1,), bool)
+    ratio = jnp.full((1,), 0.5, jnp.float32)
+    thr = jnp.full((1,), jnp.inf, jnp.float32)
+    *_, expand, done, _, _ = pop_frontier_beam(
+        "prefer", sat, oth, done0, zeros, zeros, ratio, thr, 4
+    )
+    np.testing.assert_array_equal(np.asarray(expand[0]), [True, False, False, False])
+    assert not bool(done[0])
+    # both empty at iteration START -> done is final (seed semantics)
+    *_, _, done_start, _, _ = pop_frontier_beam(
+        "prefer", q.queue_init(1, 8), q.queue_init(1, 8), done0, zeros, zeros,
+        ratio, thr, 4,
+    )
+    assert bool(done_start[0])
+
+
+def test_mask_first_occurrence_keeps_one_copy():
+    ids = jnp.asarray([[5, 3, 5, 7, 3, 5]], jnp.int32)
+    valid = jnp.asarray([[True, False, True, True, True, True]])
+    out = np.asarray(mask_first_occurrence(ids, valid))
+    # first VALID copy of each id survives; invalid slots never resurrect
+    np.testing.assert_array_equal(out[0], [True, False, False, True, True, False])
+
+
+# ---------------------------------------------------------------------------
+# beam-equivalence vs. the seed implementation (golden outputs)
+# ---------------------------------------------------------------------------
+
+N, D, L = 4000, 24, 10
+
+
+@pytest.fixture(scope="module")
+def world():
+    corpus = make_labeled_corpus(jax.random.PRNGKey(0), n=N, d=D, n_labels=L)
+    graph = build_index(jax.random.PRNGKey(1), corpus, degree=16, sample_size=256)
+    queries, qlab = make_queries(jax.random.PRNGKey(2), corpus, 24)
+    return corpus, graph, queries, qlab
+
+
+def _run(world, mode, cons, beam_width=1):
+    corpus, graph, queries, _ = world
+    params = SearchParams(
+        mode=mode, k=10, ef_result=128, ef_sat=128, ef_other=128,
+        n_start=16, max_iters=800, beam_width=beam_width,
+    )
+    rng = jax.random.PRNGKey(7) if mode == "vanilla" else None
+    return constrained_search(corpus, graph, queries, cons, params, rng=rng)
+
+
+def _constraints(qlab):
+    return {
+        "eq": equal_constraint(qlab, L),
+        "uneq": unequal_pct_constraint(jax.random.PRNGKey(3), qlab, L, 20.0),
+    }
+
+
+@pytest.mark.parametrize("mode", ["vanilla", "start", "alter", "prefer"])
+def test_beam1_matches_seed_bit_for_bit(world, mode):
+    golden = np.load(GOLDEN)
+    for cname, cons in _constraints(world[3]).items():
+        res = _run(world, mode, cons, beam_width=1)
+        tag = f"{mode}_{cname}"
+        np.testing.assert_array_equal(np.asarray(res.ids), golden[f"{tag}_ids"])
+        np.testing.assert_array_equal(np.asarray(res.dists), golden[f"{tag}_dists"])
+        for field, val in (
+            ("dist_evals", res.stats.dist_evals),
+            ("hops", res.stats.hops),
+            ("visited", res.stats.visited),
+            ("iters", res.stats.iters),
+        ):
+            np.testing.assert_array_equal(
+                np.asarray(val), golden[f"{tag}_{field}"], err_msg=f"{tag}.{field}"
+            )
+
+
+def test_beam4_halves_iterations_equal_label_prefer(world):
+    """The acceptance bar: >= 2x fewer lock-step iterations at beam_width=4."""
+    cons = equal_constraint(world[3], L)
+    it1 = int(_run(world, "prefer", cons, beam_width=1).stats.iters)
+    it4 = int(_run(world, "prefer", cons, beam_width=4).stats.iters)
+    assert it4 * 2 <= it1, (it1, it4)
+
+
+@pytest.mark.parametrize("beam_width", [2, 4, 8])
+def test_beam_results_stay_valid_and_accurate(world, beam_width):
+    corpus, graph, queries, qlab = world
+    cons = equal_constraint(qlab, L)
+    _, ti = exact_constrained_search(corpus, queries, cons, k=10)
+    res = _run(world, "prefer", cons, beam_width=beam_width)
+    # recall holds up — wider beams over-expand, they don't under-explore
+    assert float(recall(res.ids, ti)) > 0.9
+    ids = np.asarray(res.ids)
+    d = np.asarray(res.dists)
+    for row_i, row_d in zip(ids, d):
+        live = row_i[row_i >= 0]
+        assert len(live) == len(set(live.tolist()))  # beam dedup held
+        vals = row_d[np.isfinite(row_d)]
+        assert np.all(np.diff(vals) >= -1e-6)
+    labs = np.asarray(corpus.labels)[np.maximum(ids, 0)]
+    assert np.all((labs == np.asarray(qlab)[:, None]) | (ids < 0))
+    # per-slot accounting: slot counts sum to hops, column 0 is the busiest
+    be = np.asarray(res.stats.beam_expansions)
+    assert be.shape == (queries.shape[0], beam_width)
+    np.testing.assert_array_equal(be.sum(-1), np.asarray(res.stats.hops))
+    assert np.all(be[:, 0] >= be[:, -1])
+
+
+def test_beam_works_with_pq_adc_path(world):
+    from repro.core import pq_train
+
+    corpus, graph, queries, qlab = world
+    cons = equal_constraint(qlab, L)
+    pq_index = pq_train(jax.random.PRNGKey(10), corpus.vectors, m_sub=8, n_cent=64)
+    params = SearchParams(
+        mode="prefer", k=10, ef_result=128, n_start=16, max_iters=800,
+        beam_width=4, approx="pq",
+    )
+    res = constrained_search(corpus, graph, queries, cons, params, pq_index=pq_index)
+    d = np.asarray(res.dists)
+    for row in d:
+        vals = row[np.isfinite(row)]
+        assert np.all(np.diff(vals) >= -1e-6)
+    assert np.all(np.asarray(res.ids)[np.isfinite(d)] >= 0)

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.common.compat import cost_analysis_dict
 from repro.distributed.meshinfo import single_device_meshinfo
 from repro.models.transformer.model import TransformerConfig, forward_hidden, init_params
 from repro.roofline.model import (
@@ -31,8 +32,8 @@ def test_xla_cost_analysis_undercounts_scans():
 
     x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
     w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
-    f10 = jax.jit(f_scan).lower(x, w).compile().cost_analysis()["flops"]
-    f1 = jax.jit(f_once).lower(x, w).compile().cost_analysis()["flops"]
+    f10 = cost_analysis_dict(jax.jit(f_scan).lower(x, w).compile())["flops"]
+    f1 = cost_analysis_dict(jax.jit(f_once).lower(x, w).compile())["flops"]
     # the artifact: 10 iterations counted ~once (tiny loop-counter ops only)
     assert f10 < 1.5 * f1
 
@@ -52,7 +53,7 @@ def test_analytic_lm_flops_matches_measured_single_layer():
         h = forward_hidden(p, cfg, MI, t)
         return (h[:, -1] @ p["lm_head"]["w"]).astype(jnp.float32)
 
-    measured = jax.jit(fwd).lower(params, toks).compile().cost_analysis()["flops"]
+    measured = cost_analysis_dict(jax.jit(fwd).lower(params, toks).compile())["flops"]
     f, _, _, mf = lm_prefill_terms(cfg, b, s, chips=1)
     # last-position logits only in the probe; analytic assumes full-seq CE.
     # Compare the dominant matmul component instead.

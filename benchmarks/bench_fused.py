@@ -1,0 +1,249 @@
+"""Fused vs unfused candidate pipeline (ISSUE 2 / EXPERIMENTS.md §Perf PR2).
+
+Two measurements, emitted as JSON lines AND collected into top-level
+``BENCH_PR2.json`` so the perf trajectory starts accumulating:
+
+  * end-to-end: ``constrained_search`` with ``fuse_expand`` on/off at
+    B ∈ {64, 256} — QPS, lock-step iterations, dist_evals, recall (the
+    last three must be IDENTICAL between the paths: same traversal, only
+    the physical execution differs);
+  * candidate-pipeline microbench: ONE iteration's candidate processing in
+    isolation — [gather+distance, metadata gather, visited probe, 3×
+    top_k(C+M) pushes] vs [one fused pass + 1 sort + sorted merges] — the
+    ≥1.5× acceptance target lives here;
+
+plus an analytic HBM-bytes model of the per-candidate traffic the fusion
+removes (the TPU-side quantity this host cannot measure; §Roofline).
+
+Smoke mode (REPRO_BENCH_SMOKE=1, set by ``run.py --smoke``) shrinks every
+shape and additionally pushes one tiny batch through the interpret-mode
+Pallas kernel, so CI exercises the real kernel code path on every push.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import constraint, ground_truth, world
+from repro.core import SearchParams, constrained_search, recall
+from repro.core import queue as q
+from repro.core import visited as vis
+from repro.core.constraints import constraint_tables, make_satisfied_fn
+from repro.data.synthetic import make_queries
+from repro.kernels.fused_expand.ops import fused_expand
+
+
+def _smoke() -> bool:
+    return os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+
+
+def _time(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+# --------------------------------------------------------------------------
+# candidate-pipeline microbench: one iteration's candidate work, isolated
+# --------------------------------------------------------------------------
+
+
+def _pipeline_fns(corpus, tables, satisfied):
+    """Build jitted unfused/fused single-iteration candidate pipelines."""
+
+    @jax.jit
+    def unfused(queries, nbrs, visited, sat_q, oth_q, topk_q, now_d, now_i, upd):
+        # three separate per-candidate passes over HBM ...
+        rows = corpus.vectors[jnp.maximum(nbrs, 0)]
+        d_nb = jnp.sum(
+            (rows - queries[:, None, :].astype(jnp.float32)) ** 2, axis=-1
+        )
+        fresh = (nbrs >= 0) & ~vis.visited_test(visited, nbrs)
+        nb_sat = satisfied(nbrs) & fresh
+        # ... and three top_k(C+M) re-selections
+        topk_q = q.queue_push(topk_q, now_d, now_i, upd)
+        sat_q = q.queue_push(sat_q, d_nb, nbrs, nb_sat)
+        oth_q = q.queue_push(oth_q, d_nb, nbrs, fresh & ~nb_sat)
+        return sat_q.dists, oth_q.dists, topk_q.dists
+
+    @jax.jit
+    def fused(queries, nbrs, visited, sat_q, oth_q, topk_q, now_d, now_i, upd):
+        d_nb, sat_all, fresh = fused_expand(
+            queries, corpus.vectors, nbrs, visited,
+            tables.meta, tables.cons, family=tables.family,
+        )
+        nb_sat = sat_all & fresh
+        run_sat, run_oth = q.partition_sorted_runs(
+            d_nb, nbrs, nb_sat, fresh & ~nb_sat, sat_q.capacity, oth_q.capacity
+        )
+        sat_q = q.queue_merge_sorted(sat_q, *run_sat)
+        oth_q = q.queue_merge_sorted(oth_q, *run_oth)
+        trun_d, trun_i = q.sort_run(now_d, now_i, upd)
+        topk_q = q.queue_merge_sorted(topk_q, trun_d, trun_i)
+        return sat_q.dists, oth_q.dists, topk_q.dists
+
+    return unfused, fused
+
+
+def _microbench(out, results, b, beam, corpus, graph, qs, cons, ef=128):
+    deg = graph.degree
+    m = beam * deg
+    tables = constraint_tables(cons, corpus)
+    satisfied = make_satisfied_fn(cons, corpus)
+    rng = jax.random.PRNGKey(42)
+    nbrs = jax.random.randint(rng, (b, m), -1, corpus.n)
+    visited = jax.random.randint(
+        jax.random.PRNGKey(43), (b, vis.n_words(corpus.n)), 0, 2**31 - 1
+    ).astype(jnp.uint32)
+    filled = jnp.sort(
+        jax.random.uniform(jax.random.PRNGKey(44), (b, ef)) * 10.0, axis=-1
+    )
+    ids = jax.random.randint(jax.random.PRNGKey(45), (b, ef), 0, corpus.n)
+    sat_q = q.BatchedQueue(dists=filled, ids=ids)
+    oth_q = q.BatchedQueue(dists=filled + 0.5, ids=ids)
+    topk_q = q.BatchedQueue(dists=filled * 2.0, ids=ids)
+    now_d = jnp.sort(jax.random.uniform(jax.random.PRNGKey(46), (b, beam)), -1)
+    now_i = jax.random.randint(jax.random.PRNGKey(47), (b, beam), 0, corpus.n)
+    upd = jnp.ones((b, beam), bool)
+
+    unfused, fused = _pipeline_fns(corpus, tables, satisfied)
+    args = (qs, nbrs, visited, sat_q, oth_q, topk_q, now_d, now_i, upd)
+    us_unfused = _time(unfused, *args)
+    us_fused = _time(fused, *args)
+    speedup = us_unfused / max(us_fused, 1e-9)
+
+    d = corpus.dim
+    # Per-candidate HBM traffic (f32 rows, int32 ids/metadata, uint32 words).
+    # Unfused: the id list is re-read by each of the three passes, and the
+    # label + visited words are separate gathers; fused: one pass, the
+    # metadata word rides the row DMA, visited words are VMEM-resident.
+    bytes_unfused = m * (4 * d + 3 * 4 + 4 + 4)
+    bytes_fused = m * (4 * d + 4 + 4)
+    rec = {
+        "suite": "fused",
+        "bench": "candidate_pipeline",
+        "batch": b,
+        "beam": beam,
+        "m_candidates": m,
+        "ef": ef,
+        # standalone one-iteration pipelines on dense-random queues — the
+        # data-INdependent cost of each path (XLA:CPU's TopK is data-
+        # dependent and cheapens on the inf-padded queues of a real
+        # traversal; see the end_to_end records for that regime).
+        "queue_fill": "dense-random",
+        # the >=1.5x acceptance target is asserted on the paper's
+        # iteration shape (beam=1, M=deg); wide-beam rows are auxiliary
+        "acceptance_shape": beam == 1,
+        "unfused_us_per_iter": round(us_unfused, 1),
+        "fused_us_per_iter": round(us_fused, 1),
+        "pipeline_speedup": round(speedup, 2),
+        "hbm_bytes_per_query_unfused": bytes_unfused,
+        "hbm_bytes_per_query_fused": bytes_fused,
+        "hbm_bytes_reduction": round(bytes_unfused / bytes_fused, 3),
+    }
+    out(json.dumps(rec))
+    results.append(rec)
+
+
+def main(out) -> None:
+    smoke = _smoke()
+    n = 2_000 if smoke else 20_000
+    batches = (8,) if smoke else (64, 256)
+    beams = (2,) if smoke else (1, 4)
+    corpus, graph, _, _ = world(n=n)
+    results = []
+
+    if smoke:
+        # Exercise the real Pallas kernel (interpret mode) on a tiny batch
+        # so every CI push compiles + runs the in-kernel constraint path.
+        qs, qlab = make_queries(jax.random.PRNGKey(5), corpus, 4)
+        cons = constraint("equal", qlab)
+        tables = constraint_tables(cons, corpus)
+        ids = jax.random.randint(jax.random.PRNGKey(6), (4, 8), -1, corpus.n)
+        visited = vis.visited_init(4, corpus.n)
+        d, s, f = fused_expand(
+            qs, corpus.vectors, ids, visited, tables.meta, tables.cons,
+            family=tables.family, force_kernel=True, m_blk=8,
+        )
+        out(json.dumps({
+            "suite": "fused", "bench": "kernel_interpret_smoke",
+            "finite_dists": int(jnp.sum(jnp.isfinite(d))),
+            "satisfied": int(jnp.sum(s)), "fresh": int(jnp.sum(f)),
+        }))
+
+    for b in batches:
+        qs, qlab = make_queries(jax.random.PRNGKey(2), corpus, b)
+        cons = constraint("equal", qlab)
+        _, ti = ground_truth(corpus, qs, cons, k=10)
+        for fuse in ("off", "on"):
+            params = SearchParams(
+                mode="prefer", k=10, ef_result=128, ef_sat=128, ef_other=128,
+                n_start=32, max_iters=200 if smoke else 1500,
+                fuse_expand=fuse,
+            )
+            res = constrained_search(corpus, graph, qs, cons, params)
+            jax.block_until_ready(res.dists)
+            t0 = time.perf_counter()
+            res = constrained_search(corpus, graph, qs, cons, params)
+            jax.block_until_ready(res.dists)
+            dt = time.perf_counter() - t0
+            rec = {
+                "suite": "fused",
+                "bench": "end_to_end",
+                "batch": b,
+                "fuse_expand": fuse,
+                "qps": round(b / dt, 1),
+                "iters": int(res.stats.iters),
+                "mean_dist_evals": round(float(jnp.mean(res.stats.dist_evals)), 1),
+                "recall": round(float(recall(res.ids, ti)), 4),
+            }
+            out(json.dumps(rec))
+            results.append(rec)
+        for beam in beams:
+            _microbench(out, results, b, beam, corpus, graph, qs, cons)
+
+    if not smoke:
+        path = os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            "BENCH_PR2.json",
+        )
+        with open(path, "w") as fh:
+            json.dump(
+                {
+                    "issue": "PR2 fused constrained-expansion pipeline",
+                    "host": "single-core CPU container (kernels: jnp ref "
+                            "path; TPU numbers need hardware)",
+                    "corpus": {"n": n, "d": corpus.dim, "degree": graph.degree},
+                    "notes": [
+                        "candidate_pipeline = standalone per-iteration "
+                        "cost on dense-random queues (data-independent); "
+                        "the >=1.5x acceptance target is met there on the "
+                        "paper's iteration shape (beam=1, M=16: 2.4-2.7x) "
+                        "and narrows to ~1.3x at M=64",
+                        "end_to_end fuse_expand=on trails by ~8% on this "
+                        "host: inside lax.while_loop XLA:CPU gives "
+                        "queue_push's native TopK donated-buffer reuse "
+                        "and its cost is data-dependent (cheap on "
+                        "inf-padded queues), while the merge network pays "
+                        "per-iteration copies — which is why "
+                        "fuse_expand=auto resolves to unfused off-TPU "
+                        "(EXPERIMENTS.md §Perf PR2)",
+                    ],
+                    "results": results,
+                },
+                fh, indent=2,
+            )
+            fh.write("\n")
+        out(json.dumps({"suite": "fused", "bench": "artifact", "wrote": path}))
+
+
+if __name__ == "__main__":
+    main(print)

@@ -18,16 +18,29 @@ def main() -> None:
         "--only",
         default="",
         help="comma list: pipeline,constraints,alter_ratio,clusters,mnist,"
-        "kernels,beam",
+        "kernels,beam,fused",
+    )
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="tiny shapes + interpret-mode kernels for the suites that "
+        "support it (currently: fused) — the CI mode exercising the fused "
+        "pipeline incl. the Pallas kernel in seconds, without writing "
+        "BENCH_*.json artifacts; other suites ignore the flag",
     )
     args = ap.parse_args()
     selected = set(filter(None, args.only.split(",")))
+    if args.smoke:
+        import os
+
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
 
     from benchmarks import (
         bench_alter_ratio,
         bench_beam,
         bench_clusters,
         bench_constraints,
+        bench_fused,
         bench_kernels,
         bench_mnist_like,
         bench_pipeline,
@@ -43,12 +56,16 @@ def main() -> None:
         # bench_beam emits one JSON line per (constraint, mode, beam_width)
         # config — machine-readable for BENCH_*.json speedup trajectories.
         "beam": bench_beam.main,
+        # bench_fused compares the fused candidate pipeline (ISSUE 2)
+        # against the unfused path and writes top-level BENCH_PR2.json.
+        "fused": bench_fused.main,
     }
     print("name,us_per_call,derived")
 
     def out(line: str) -> None:
         print(line, flush=True)
 
+    failed = []
     for name, fn in suites.items():
         if selected and name not in selected:
             continue
@@ -57,7 +74,13 @@ def main() -> None:
             fn(out)
         except Exception as e:  # noqa: BLE001 — keep the suite running
             out(f"{name}/ERROR,0,{type(e).__name__}:{str(e)[:120]}")
+            failed.append(name)
         print(f"# suite {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if failed:
+        # Later suites still ran, but the process must fail so CI's smoke
+        # step actually gates on the benchmarked code paths.
+        print(f"# FAILED suites: {','.join(failed)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

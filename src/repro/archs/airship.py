@@ -44,6 +44,11 @@ AIRSHIP_SHAPES: Dict[str, dict] = {
     # Beam-parallel engine (DESIGN.md §5): 4 pops/query/iteration feed the
     # fused gather 4*deg candidates — ~4x fewer lock-step iterations.
     "serve_256_beam4": dict(kind="serve", batch=256, beam=4),
+    # PR2 fused candidate pipeline forced on: one kernels/fused_expand pass
+    # per iteration + sorted-merge frontier updates (EXPERIMENTS.md §Perf
+    # PR2). "auto" would enable it on TPU anyway; the explicit shape keeps
+    # the fused path dry-runnable and cost-model-visible on any backend.
+    "serve_256_fused": dict(kind="serve", batch=256, fuse="on"),
 }
 
 
@@ -90,6 +95,8 @@ class AirshipArch(Arch):
             params = dataclasses.replace(params, approx="pq")
         if sh.get("beam", 0) > 1:
             params = dataclasses.replace(params, beam_width=sh["beam"])
+        if sh.get("fuse"):
+            params = dataclasses.replace(params, fuse_expand=sh["fuse"])
         search = make_distributed_search(
             mi.mesh, params, batch_axes=mi.dp_axes, with_pq=use_pq
         )

@@ -6,8 +6,10 @@
 # scatter-search-merge distributed layout.
 from repro.core.alter_ratio import estimate_alter_ratio
 from repro.core.constraints import (
+    ConstraintTables,
     LabelSetConstraint,
     RangeConstraint,
+    constraint_tables,
     equal_constraint,
     label_set_from_lists,
     make_satisfied_fn,
@@ -28,6 +30,7 @@ from repro.core.types import (
 )
 
 __all__ = [
+    "ConstraintTables",
     "Corpus",
     "GraphIndex",
     "LabelSetConstraint",
@@ -37,6 +40,7 @@ __all__ = [
     "SearchResult",
     "SearchStats",
     "constrained_search",
+    "constraint_tables",
     "equal_constraint",
     "estimate_alter_ratio",
     "exact_constrained_search",

@@ -25,7 +25,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.pytree import pytree_dataclass
+from typing import Optional
+
+from repro.common.pytree import pytree_dataclass, static_field
 from repro.core.types import Corpus, SatisfiedFn
 
 Array = jax.Array
@@ -160,6 +162,48 @@ def udf_satisfied_fn(
     return satisfied
 
 
+@pytree_dataclass
+class ConstraintTables:
+    """Raw table views of a constraint for in-kernel evaluation.
+
+    The fused-expansion kernel (kernels/fused_expand/) cannot call a
+    ``SatisfiedFn`` closure; it needs the underlying arrays: the corpus-side
+    metadata column it gathers per candidate (one 4-byte word alongside the
+    vector row, instead of a second HBM round trip) and the per-query operand
+    it keeps resident in VMEM.
+
+    family: "label" — meta is the (n,) int32 label column, cons the
+            (B, Lw) uint32 allowed-label bitmask words;
+            "range" — meta is the (n,) f32 attribute column, cons the
+            (B, 2) f32 [lo, hi] bounds.
+    """
+
+    meta: Array
+    cons: Array
+    family: str = static_field(default="label")
+
+
+def constraint_tables(constraint, corpus: Corpus) -> Optional[ConstraintTables]:
+    """Raw views for the fused kernel; None when the family needs the
+    unfused path (UDF closures are arbitrary jnp code)."""
+    if isinstance(constraint, LabelSetConstraint):
+        return ConstraintTables(
+            meta=corpus.labels, cons=constraint.words, family="label"
+        )
+    if isinstance(constraint, RangeConstraint):
+        if corpus.attrs is None:
+            raise ValueError("corpus has no numeric attributes")
+        return ConstraintTables(
+            meta=corpus.attrs[:, constraint.col].astype(jnp.float32),
+            cons=jnp.stack(
+                [constraint.lo.astype(jnp.float32),
+                 constraint.hi.astype(jnp.float32)], axis=-1,
+            ),
+            family="range",
+        )
+    return None
+
+
 def make_satisfied_fn(constraint, corpus: Corpus) -> SatisfiedFn:
     if isinstance(constraint, LabelSetConstraint):
         return label_satisfied_fn(constraint, corpus)
@@ -170,18 +214,33 @@ def make_satisfied_fn(constraint, corpus: Corpus) -> SatisfiedFn:
     raise TypeError(f"unsupported constraint: {type(constraint)}")
 
 
-def selectivity(constraint, corpus: Corpus) -> Array:
+def selectivity(constraint, corpus: Corpus, chunk: int = 1 << 16) -> Array:
     """(B,) fraction of the corpus satisfying each query's constraint.
 
     Linear scan — used by Assumption-1 fallback logic and by benchmarks.
+    Chunked over the corpus axis: the one-shot (B, n) id grid + bool mask
+    peaked at ~1 GB transient for B=256, n=1M; scanning ``chunk``-wide
+    windows holds the working set at B*chunk bytes while the satisfied
+    counts accumulate in (B,) int32.
     """
     fn = make_satisfied_fn(constraint, corpus)
-    ids = jnp.arange(corpus.n, dtype=jnp.int32)[None, :]
+    n = corpus.n
     if isinstance(constraint, LabelSetConstraint):
         b = constraint.batch
     elif isinstance(constraint, RangeConstraint):
         b = constraint.lo.shape[0]
     else:
         b = 1
-    ids = jnp.broadcast_to(ids, (b, corpus.n))
-    return jnp.mean(fn(ids).astype(jnp.float32), axis=-1)
+    chunk = min(chunk, n)
+    n_chunks = (n + chunk - 1) // chunk
+    starts = jnp.arange(n_chunks, dtype=jnp.int32) * chunk
+
+    def body(acc, start):
+        ids = start + jnp.arange(chunk, dtype=jnp.int32)
+        # Tail chunk: ids past the corpus report unsatisfied (fn masks < 0).
+        ids = jnp.where(ids < n, ids, -1)
+        ok = fn(jnp.broadcast_to(ids[None, :], (b, chunk)))
+        return acc + jnp.sum(ok, axis=-1, dtype=jnp.int32), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((b,), jnp.int32), starts)
+    return total.astype(jnp.float32) / n

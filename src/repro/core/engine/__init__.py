@@ -7,7 +7,9 @@
 # untouched. Future sharded / async serving PRs plug in at this seam.
 from repro.core.engine.expand import (
     expand_beam,
+    expand_beam_fused,
     mask_first_occurrence,
+    mask_first_occurrence_sorted,
     neighbor_distances,
     pop_frontier_beam,
 )
@@ -28,9 +30,11 @@ __all__ = [
     "TraversalState",
     "constrained_search",
     "expand_beam",
+    "expand_beam_fused",
     "get_policy",
     "is_two_queue",
     "mask_first_occurrence",
+    "mask_first_occurrence_sorted",
     "neighbor_distances",
     "pop_frontier_beam",
     "prefer_policy",

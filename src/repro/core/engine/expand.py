@@ -6,7 +6,9 @@ candidates. Here each iteration pops up to ``beam_width`` vertices per
 query (``pop_frontier_beam``) and flattens their adjacency into ONE
 ``(B, beam*deg)`` candidate gather (``expand_beam``) through whichever
 distance path is active — jnp fallback, the Pallas ``gather_distance``
-kernel, or PQ/ADC lookup. ``beam_width=1`` reproduces the seed computation
+kernel, or PQ/ADC lookup; ``expand_beam_fused`` additionally folds the
+constraint and visited checks into the same pass (kernels/fused_expand/,
+DESIGN.md §6). ``beam_width=1`` reproduces the seed computation
 exactly; wider beams trade per-slot threshold staleness for beam-times
 fewer lock-step iterations (DESIGN.md §5).
 
@@ -66,17 +68,45 @@ def neighbor_distances(
 
 
 def mask_first_occurrence(ids: Array, valid: Array) -> Array:
-    """Clear ``valid`` on all but the first copy of each id per row.
+    """Clear ``valid`` on all but the first *valid* copy of each id per row.
 
-    ids/valid: (B, M). O(M^2) pairwise compare — at M = beam*deg <= 512
-    this is a cheap boolean VPU block next to the (B, M, d) gather; a
-    sort-based unique becomes worthwhile only far beyond that.
+    ids/valid: (B, M). Below M = 128 the O(M^2) pairwise compare is a cheap
+    boolean VPU block next to the candidate gather; beyond that (wide beams x
+    high degree) the (B, M, M) mask dominates, so the O(M log M) sort-based
+    dedup takes over (property-tested equivalent in tests/test_fused_expand).
     """
+    if ids.shape[-1] > 128:
+        return mask_first_occurrence_sorted(ids, valid)
     m = ids.shape[-1]
     eq = ids[:, :, None] == ids[:, None, :]  # (B, M, M)
     earlier = jnp.tril(jnp.ones((m, m), bool), k=-1)
     dup = jnp.any(eq & earlier[None] & valid[:, None, :], axis=-1)
     return valid & ~dup
+
+
+def mask_first_occurrence_sorted(ids: Array, valid: Array) -> Array:
+    """Sort-based dedup: keep each id's first valid slot, O(M log M).
+
+    Stable-argsort groups equal ids while preserving original slot order
+    inside each group; a segmented prefix count of valid slots then flags
+    exactly the group's first valid one. Earlier *invalid* copies never
+    suppress later valid ones — same contract as the pairwise version.
+    """
+    b, m = ids.shape
+    order = jnp.argsort(ids, axis=-1)  # stable: ties keep slot order
+    sid = jnp.take_along_axis(ids, order, axis=-1)
+    sval = jnp.take_along_axis(valid, order, axis=-1)
+    seg_start = jnp.concatenate(
+        [jnp.ones((b, 1), bool), sid[:, 1:] != sid[:, :-1]], axis=-1
+    )
+    nval = sval.astype(jnp.int32)
+    before = jnp.cumsum(nval, axis=-1) - nval  # valids strictly before, global
+    pos = jnp.arange(m, dtype=jnp.int32)[None, :]
+    start_pos = jax.lax.cummax(jnp.where(seg_start, pos, 0), axis=1)
+    before_group = jnp.take_along_axis(before, start_pos, axis=-1)
+    keep_sorted = sval & (before == before_group)  # first valid in its group
+    rows = jnp.arange(b, dtype=jnp.int32)[:, None]
+    return jnp.zeros_like(valid).at[rows, order].set(keep_sorted)
 
 
 def pop_frontier_beam(
@@ -200,3 +230,39 @@ def expand_beam(
         queries, corpus_vectors, nbrs, use_kernel, pq_codes, lut
     )
     return nbrs, d_nb, fresh
+
+
+def expand_beam_fused(
+    neighbors: Array,
+    queries: Array,
+    corpus_vectors: Array,
+    now_i: Array,
+    expand: Array,
+    visited: Array,
+    tables,
+) -> Tuple[Array, Array, Array, Array]:
+    """Fused-pipeline twin of ``expand_beam`` (kernels/fused_expand/).
+
+    One pass emits distances, constraint verdicts, and visited-freshness for
+    the whole (B, beam*deg) candidate batch — the separate ``satisfied()``
+    metadata gather and ``visited_test`` probes of the unfused path fold into
+    the same per-candidate HBM visit as the row gather. ``tables`` is the
+    constraint's raw view (core.constraints.constraint_tables). Non-expanding
+    slots are pre-masked to padding ids so the kernel sees one uniform
+    validity rule. Returns (nbrs, d_nb, sat, fresh); ``sat`` covers every
+    valid candidate and is masked by ``fresh`` at the push site.
+    """
+    from repro.kernels.fused_expand.ops import fused_expand
+
+    b, w = now_i.shape
+    deg = neighbors.shape[-1]
+    safe = jnp.maximum(now_i, 0)
+    nbrs = neighbors[safe].reshape(b, w * deg)
+    nbrs = jnp.where(jnp.repeat(expand, deg, axis=-1), nbrs, -1)
+    d_nb, sat, fresh = fused_expand(
+        queries, corpus_vectors, nbrs, visited,
+        tables.meta, tables.cons, family=tables.family,
+    )
+    if w > 1:
+        fresh = mask_first_occurrence(nbrs, fresh)
+    return nbrs, d_nb, sat, fresh

@@ -20,9 +20,10 @@ from repro.common.pytree import pytree_dataclass
 from repro.core import queue as q
 from repro.core import visited as vis
 from repro.core.alter_ratio import estimate_alter_ratio
-from repro.core.constraints import make_satisfied_fn
+from repro.core.constraints import constraint_tables, make_satisfied_fn
 from repro.core.engine.expand import (
     expand_beam,
+    expand_beam_fused,
     neighbor_distances,
     pop_frontier_beam,
 )
@@ -36,6 +37,33 @@ from repro.core.types import (
 )
 
 Array = jax.Array
+
+
+# Flip to True once the fused kernel has been validated under compiled
+# Mosaic lowering on real hardware (the per-candidate scalar stores and
+# narrow metadata DMAs have only ever run in interpret mode on this
+# container). Until then "auto" never routes a default search through an
+# unproven compile path; the fused pipeline is opt-in via fuse_expand="on".
+FUSE_AUTO_ON_TPU = False
+
+
+def resolve_auto_fuse(fusable: bool, backend: str) -> bool:
+    """fuse_expand == "auto" policy: where does fusing actually win?
+
+    Both paths return bit-identical results (system-tested); the choice is
+    purely physical. On TPU the fused kernel eliminates the separate
+    metadata/visited HBM round trips and the windowed sorted merges are
+    plain VPU work — that is where auto is meant to fuse, gated on
+    ``FUSE_AUTO_ON_TPU`` until hardware validation. On XLA:CPU,
+    measurement says fusing loses: the native TopK a ``queue_push``
+    lowers to is data-dependent (fast on the inf-padded queues real
+    traversals carry) and keeps donated-buffer reuse inside
+    ``lax.while_loop``, while the merge's compare-exchange chain forces
+    per-iteration copies — standalone the merge wins 2–3.5x, in-loop it
+    loses ~2x (EXPERIMENTS.md §Perf PR2). So auto only fuses where the
+    memory system, not the op dispatcher, is the bottleneck.
+    """
+    return fusable and backend == "tpu" and FUSE_AUTO_ON_TPU
 
 
 @pytree_dataclass
@@ -151,7 +179,6 @@ def seed_state(
     return state, ratio
 
 
-@partial(jax.jit, static_argnames=("params",))
 def constrained_search(
     corpus: Corpus,
     graph: GraphIndex,
@@ -166,6 +193,11 @@ def constrained_search(
     queries: (B, d). Returns ascending (B, K) distances/ids; unreachable
     slots hold (+inf, -1).
 
+    LabelSet/Range constraints are traced data (one compiled search serves
+    every query batch); a callable UDF constraint is a static argument —
+    one compiled search per distinct UDF, the paper's templated-C++ cost
+    model (core/constraints.py).
+
     With params.approx == "pq", ``pq_index`` (core.pq.PQIndex) drives the
     traversal with ADC distances; the ef_result survivors are re-ranked
     exactly before the final top-k (beyond-paper, EXPERIMENTS.md §Perf D4).
@@ -174,8 +206,42 @@ def constrained_search(
     vertices per query through one flattened (B, beam*deg) gather; the
     termination threshold is evaluated against the top-k list as of the
     start of the iteration (beam lock-step semantics, DESIGN.md §5).
+
+    With the fused candidate pipeline active (params.fuse_expand, default
+    auto-on for LabelSet/Range + exact distances), each iteration runs
+    gather + distance + constraint + visited masking as ONE pass
+    (kernels/fused_expand/) and updates every queue by sorted merge instead
+    of top_k re-selection (EXPERIMENTS.md §Perf PR2).
     """
+    impl = _search_static_constraint if callable(constraint) else _search
+    return impl(corpus, graph, queries, constraint, params, rng, pq_index)
+
+
+def _constrained_search_impl(
+    corpus: Corpus,
+    graph: GraphIndex,
+    queries: Array,
+    constraint,
+    params: SearchParams,
+    rng: Optional[Array] = None,
+    pq_index=None,
+) -> SearchResult:
     satisfied = make_satisfied_fn(constraint, corpus)
+    # --- fused candidate pipeline (kernels/fused_expand/) -------------------
+    # The kernel evaluates LabelSet/Range constraints against the raw corpus
+    # tables in the same pass as the row gather; UDF closures and PQ/ADC
+    # traversal (approximate distances) stay on the unfused path.
+    tables = constraint_tables(constraint, corpus)
+    fusable = tables is not None and params.approx == "exact"
+    if params.fuse_expand == "on" and not fusable:
+        raise ValueError(
+            "fuse_expand='on' requires a LabelSet/Range constraint and "
+            "approx='exact' (UDF and PQ traversal are unfused)"
+        )
+    fuse = params.fuse_expand == "on" or (
+        params.fuse_expand == "auto"
+        and resolve_auto_fuse(fusable, jax.default_backend())
+    )
     if params.approx == "pq":
         if pq_index is None:
             raise ValueError("approx='pq' requires pq_index")
@@ -211,19 +277,48 @@ def constrained_search(
             upd = expand & sel_sat
         else:
             upd = expand & satisfied(now_i)
-        topk = q.queue_push(st.topk, now_d, now_i, upd)
 
         # --- one flattened (B, beam*deg) expansion ---------------------------
-        nbrs, d_nb, fresh = expand_beam(
-            graph.neighbors, queries, corpus.vectors, now_i, expand,
-            st.visited, params.use_kernel, pq_codes, lut,
-        )
-        if two_queue:
-            nb_sat = satisfied(nbrs) & fresh
-            sat = q.queue_push(sat, d_nb, nbrs, nb_sat)
-            oth = q.queue_push(oth, d_nb, nbrs, fresh & ~nb_sat)
+        if fuse:
+            # Fused pipeline: distances, constraint verdicts, and freshness
+            # in one pass; then ONE bitonic partition-sort of the candidate
+            # batch feeds every frontier via windowed sorted merges
+            # (queue_merge_sorted) — no top_k(C+M) re-selection anywhere in
+            # the iteration (EXPERIMENTS.md §Perf PR2).
+            nbrs, d_nb, nb_sat_all, fresh = expand_beam_fused(
+                graph.neighbors, queries, corpus.vectors, now_i, expand,
+                st.visited, tables,
+            )
+            m = nbrs.shape[-1]
+            if two_queue:
+                nb_sat = nb_sat_all & fresh
+                run_sat, run_oth = q.partition_sorted_runs(
+                    d_nb, nbrs, nb_sat, fresh & ~nb_sat,
+                    sat.capacity, oth.capacity,
+                )
+                sat = q.queue_merge_sorted(sat, *run_sat)
+                oth = q.queue_merge_sorted(oth, *run_oth)
+            else:
+                run_d, run_i = q.sort_run(d_nb, nbrs, fresh)
+                r = min(m, oth.capacity)
+                oth = q.queue_merge_sorted(oth, run_d[:, :r], run_i[:, :r])
+            # The beam pops are W <= beam_width elements; two-queue policies
+            # interleave the sat/oth heads so the run needs its own (tiny)
+            # stable sort before merging into the result list.
+            trun_d, trun_i = q.sort_run(now_d, now_i, upd)
+            topk = q.queue_merge_sorted(st.topk, trun_d, trun_i)
         else:
-            oth = q.queue_push(oth, d_nb, nbrs, fresh)
+            topk = q.queue_push(st.topk, now_d, now_i, upd)
+            nbrs, d_nb, fresh = expand_beam(
+                graph.neighbors, queries, corpus.vectors, now_i, expand,
+                st.visited, params.use_kernel, pq_codes, lut,
+            )
+            if two_queue:
+                nb_sat = satisfied(nbrs) & fresh
+                sat = q.queue_push(sat, d_nb, nbrs, nb_sat)
+                oth = q.queue_push(oth, d_nb, nbrs, fresh & ~nb_sat)
+            else:
+                oth = q.queue_push(oth, d_nb, nbrs, fresh)
 
         return TraversalState(
             sat=sat,
@@ -263,3 +358,9 @@ def constrained_search(
         ids=out_i[:, : params.k],
         stats=stats,
     )
+
+
+_search = partial(jax.jit, static_argnames=("params",))(_constrained_search_impl)
+_search_static_constraint = partial(
+    jax.jit, static_argnames=("params", "constraint")
+)(_constrained_search_impl)

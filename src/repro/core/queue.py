@@ -15,8 +15,11 @@ neighbor-distance gathers.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.common.pytree import pytree_dataclass
 
@@ -125,6 +128,191 @@ def queue_push(
     # TPU top_k lowers to a cheaper selection than the full bitonic sort.
     neg, pos = jax.lax.top_k(-all_d, q.capacity)
     return BatchedQueue(dists=-neg, ids=jnp.take_along_axis(all_i, pos, axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# Sorted-run machinery for the fused candidate pipeline (EXPERIMENTS.md
+# §Perf PR2). Everything below is built from TWO gather-free primitives —
+# lexicographic compare-exchange on (key, pos) pairs, and static shifts —
+# because on both TPU and XLA:CPU the expensive ops in a queue update are
+# comparator sorts and scatters, not elementwise arithmetic. Distances are
+# non-negative f32 (squared L2, +inf padding), so their raw bit patterns
+# are order-preserving as uint32 ("dist bits"); a per-element position
+# makes every (key, pos) pair distinct, which turns the stable-tie-break
+# rules of ``top_k`` into an ordinary total order.
+# ---------------------------------------------------------------------------
+
+_INF_BITS = jnp.uint32(0x7F800000)  # +inf as its f32 bit pattern
+
+
+def _dist_bits(d: Array) -> Array:
+    """Non-negative f32 (incl. +inf) -> order-preserving uint32 key.
+
+    ``+ 0.0`` canonicalizes a hypothetical -0.0 (bit pattern 0x80000000,
+    which would order above +inf) to +0.0 before the bitcast.
+    """
+    return jax.lax.bitcast_convert_type(
+        d.astype(jnp.float32) + 0.0, jnp.uint32
+    )
+
+
+def _bits_dist(u: Array) -> Array:
+    return jax.lax.bitcast_convert_type(u, jnp.float32)
+
+
+def _lexmax(ka, pa, kb, pb):
+    b_gt = (kb > ka) | ((kb == ka) & (pb > pa))
+    return jnp.where(b_gt, kb, ka), jnp.where(b_gt, pb, pa)
+
+
+def _lexmin(ka, pa, kb, pb):
+    b_lt = (kb < ka) | ((kb == ka) & (pb < pa))
+    return jnp.where(b_lt, kb, ka), jnp.where(b_lt, pb, pa)
+
+
+def bitonic_sort_pairs(key: Array, pos: Array) -> tuple[Array, Array]:
+    """Ascending row-sort of (B, n) by (key, pos); n must be a power of two.
+
+    The classic bitonic network: log2(n)*(log2(n)+1)/2 compare-exchange
+    stages, each a reshape + elementwise lexicographic min/max — no
+    comparator sort, no gathers, TPU-vectorizable as-is. ``pos`` uniqueness
+    makes the order total, so the result is deterministic under ties.
+    """
+    b, n = key.shape
+    log_n = int(math.log2(n))
+    assert 1 << log_n == n, f"bitonic sort needs a power-of-two width, got {n}"
+    for blk_log in range(1, log_n + 1):
+        for s_log in range(blk_log - 1, -1, -1):
+            s = 1 << s_log
+            nb = n // (2 * s)
+            # ascending for even blocks of size 2**blk_log, else descending
+            asc = ((jnp.arange(nb) * 2 * s) >> blk_log) % 2 == 0
+            k4 = key.reshape(b, nb, 2, s)
+            p4 = pos.reshape(b, nb, 2, s)
+            a = asc[None, :, None]
+            lo_k, lo_p = _lexmin(k4[:, :, 0], p4[:, :, 0], k4[:, :, 1], p4[:, :, 1])
+            hi_k, hi_p = _lexmax(k4[:, :, 0], p4[:, :, 0], k4[:, :, 1], p4[:, :, 1])
+            key = jnp.stack(
+                [jnp.where(a, lo_k, hi_k), jnp.where(a, hi_k, lo_k)], axis=2
+            ).reshape(b, n)
+            pos = jnp.stack(
+                [jnp.where(a, lo_p, hi_p), jnp.where(a, hi_p, lo_p)], axis=2
+            ).reshape(b, n)
+    return key, pos
+
+
+def sort_run(d: Array, i: Array, valid: Array) -> tuple[Array, Array]:
+    """Mask + sort a small batch into an ascending (+inf, -1)-padded run.
+
+    d/i/valid: (B, M). Stable under distance ties (original index order),
+    i.e. exactly the candidate order ``queue_push`` would honour — the
+    output is a valid ``queue_merge_sorted`` run. Width is padded to the
+    next power of two internally.
+    """
+    b, m = d.shape
+    mp = 1 << max(1, math.ceil(math.log2(m))) if m > 1 else 2
+    key = jnp.where(valid, _dist_bits(d), jnp.uint32(0xFFFFFFFF))
+    pos = jnp.broadcast_to(jnp.arange(m, dtype=jnp.int32)[None, :], (b, m))
+    if mp != m:
+        key = jnp.pad(key, ((0, 0), (0, mp - m)), constant_values=np.uint32(0xFFFFFFFF))
+        pos = jnp.pad(pos, ((0, 0), (0, mp - m)), constant_values=2**30)
+    key, pos = bitonic_sort_pairs(key, pos)
+    key, pos = key[:, :m], pos[:, :m]
+    n_valid = jnp.sum(valid, axis=-1, keepdims=True, dtype=jnp.int32)
+    live = jnp.arange(m, dtype=jnp.int32)[None, :] < n_valid
+    safe = jnp.minimum(pos, m - 1)
+    out_d = jnp.where(live, jnp.take_along_axis(d, safe, axis=-1), INF)
+    out_i = jnp.where(live, jnp.take_along_axis(i, safe, axis=-1), PAD_ID)
+    return out_d, out_i
+
+
+def partition_sorted_runs(
+    d: Array, i: Array, first: Array, second: Array, cap_first: int, cap_second: int
+) -> tuple[tuple[Array, Array], tuple[Array, Array]]:
+    """Split a candidate batch into two ascending runs with ONE sort.
+
+    d/i: (B, M); ``first``/``second``: disjoint membership masks (elements
+    in neither are dropped). Folds the partition into the top key bit —
+    squared distances never use it — so a single bitonic pass yields
+    [first-run | second-run | dropped], each segment ascending and
+    tie-stable in original index order. Runs are truncated to their
+    target queue's capacity (elements beyond rank C can never survive a
+    merge) and padded with (+inf, -1).
+    """
+    b, m = d.shape
+    mp = 1 << max(1, math.ceil(math.log2(m))) if m > 1 else 2
+    bits = _dist_bits(d)
+    key = jnp.where(
+        first, bits,
+        jnp.where(second, bits + jnp.uint32(0x80000000), jnp.uint32(0xFFFFFFFF)),
+    )
+    pos = jnp.broadcast_to(jnp.arange(m, dtype=jnp.int32)[None, :], (b, m))
+    if mp != m:
+        key = jnp.pad(key, ((0, 0), (0, mp - m)), constant_values=np.uint32(0xFFFFFFFF))
+        pos = jnp.pad(pos, ((0, 0), (0, mp - m)), constant_values=2**30)
+    key, pos = bitonic_sort_pairs(key, pos)
+    n_first = jnp.sum(first, axis=-1, keepdims=True, dtype=jnp.int32)
+    n_second = jnp.sum(second, axis=-1, keepdims=True, dtype=jnp.int32)
+
+    def extract(offset, count, width):
+        ar = jnp.arange(width, dtype=jnp.int32)[None, :]
+        seg = jnp.minimum(ar + offset, mp - 1)
+        p = jnp.minimum(jnp.take_along_axis(pos, seg, axis=-1), m - 1)
+        live = ar < count
+        run_d = jnp.where(live, jnp.take_along_axis(d, p, axis=-1), INF)
+        run_i = jnp.where(live, jnp.take_along_axis(i, p, axis=-1), PAD_ID)
+        return run_d, run_i
+
+    zero = jnp.zeros_like(n_first)
+    run1 = extract(zero, n_first, min(m, cap_first))
+    run2 = extract(n_first, n_second, min(m, cap_second))
+    return run1, run2
+
+
+def queue_merge_sorted(
+    q: BatchedQueue, run_d: Array, run_i: Array
+) -> BatchedQueue:
+    """Merge an ascending (+inf, -1)-padded run into the queue; keep best C.
+
+    Bit-for-bit equal to ``queue_push(q, run_d, run_i, isfinite(run_d))``
+    — including every distance-tie (queue element first, then run order),
+    property-tested in tests/test_queue.py — but built as a *windowed
+    min-max merge* instead of a ``top_k`` re-selection over C+M keys:
+    since both sides are sorted, the (j+1)-th smallest of the union is
+
+        merged[j] = min_{t=0..R} max(queue[j-t], run[t-1])
+
+    (out-of-range terms are ∓inf sentinels). Each ``t`` is a static shift
+    plus an elementwise lexicographic min/max on (dist-bits, position)
+    pairs — no gathers, no sort — so the cost is O(C·R) vector ops with a
+    tiny constant. For the fused engine's run lengths (R = beam·deg ≤ 64)
+    this measures 1.3–4.6× faster than the ``top_k(C+M)`` push on CPU and
+    maps onto pure VPU work on TPU (EXPERIMENTS.md §Perf PR2); the
+    re-selection stays the right tool for unsorted pushes.
+    """
+    b, c = q.dists.shape
+    r = run_d.shape[-1]
+    qk = _dist_bits(q.dists)
+    qp = jnp.broadcast_to(jnp.arange(c, dtype=jnp.int32)[None, :], (b, c))
+    rk = _dist_bits(run_d)
+    rp = jnp.broadcast_to(jnp.arange(c, c + r, dtype=jnp.int32)[None, :], (b, r))
+
+    # One left-extension of the queue (−inf sentinels: key 0, pos −1) turns
+    # every shifted term queue[j − t] into a static slice.
+    ext_k = jnp.concatenate([jnp.zeros((b, r), jnp.uint32), qk], axis=-1)
+    ext_p = jnp.concatenate([jnp.full((b, r), -1, jnp.int32), qp], axis=-1)
+    cur_k, cur_p = qk, qp  # t = 0: max(queue[j], run[-1] = -inf) = queue[j]
+    for t in range(1, r + 1):
+        a_k = ext_k[:, r - t : r - t + c]
+        a_p = ext_p[:, r - t : r - t + c]
+        cand_k, cand_p = _lexmax(a_k, a_p, rk[:, t - 1 : t], rp[:, t - 1 : t])
+        cur_k, cur_p = _lexmin(cur_k, cur_p, cand_k, cand_p)
+
+    out_d = _bits_dist(jnp.minimum(cur_k, _INF_BITS))
+    all_i = jnp.concatenate([q.ids, run_i], axis=-1)
+    gathered = jnp.take_along_axis(all_i, cur_p, axis=-1)
+    out_i = jnp.where(jnp.isfinite(out_d), gathered, PAD_ID)
+    return BatchedQueue(dists=out_d, ids=out_i)
 
 
 def queue_worst_finite(q: BatchedQueue) -> Array:

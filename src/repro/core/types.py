@@ -79,6 +79,17 @@ class SearchParams:
     alter_ratio: Optional[float] = static_field(default=None)
     alter_ratio_k: int = static_field(default=16)
     use_kernel: bool = static_field(default=False)
+    # Fused candidate pipeline (kernels/fused_expand/): gather + distance +
+    # constraint + visited masking in one pass, frontier updates via sorted
+    # merges instead of top_k re-selection (engine/loop.py). "auto" targets
+    # TPU only — and only for constraint families with in-kernel evaluation
+    # (LabelSet / Range) under exact distances — gated on the hardware-
+    # validation flag FUSE_AUTO_ON_TPU (engine/loop.py::resolve_auto_fuse);
+    # on other backends native top_k wins in-loop so auto stays unfused
+    # (EXPERIMENTS.md §Perf PR2). UDF constraints and PQ/ADC traversal
+    # always take the unfused path; both paths return bit-identical
+    # results, so "on"/"off" are safe to force anywhere.
+    fuse_expand: str = static_field(default="auto")  # auto | on | off
     # Beyond-paper: traverse with PQ/ADC approximate distances (32x fewer
     # HBM bytes per candidate at d=128/m_sub=16), then exact re-rank of the
     # ef_result survivors. Requires passing pq_index to constrained_search.
@@ -91,6 +102,8 @@ class SearchParams:
             raise ValueError(f"unknown approx mode: {self.approx}")
         if self.beam_width < 1:
             raise ValueError(f"beam_width must be >= 1, got {self.beam_width}")
+        if self.fuse_expand not in ("auto", "on", "off"):
+            raise ValueError(f"unknown fuse_expand mode: {self.fuse_expand}")
 
     @property
     def result_capacity(self) -> int:

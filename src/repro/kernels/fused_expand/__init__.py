@@ -1,0 +1,3 @@
+from repro.kernels.fused_expand.ops import fused_expand
+
+__all__ = ["fused_expand"]

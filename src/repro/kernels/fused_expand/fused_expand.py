@@ -1,0 +1,202 @@
+"""Fused constrained-expansion kernel — the whole candidate pipeline in one pass.
+
+For a batch of queries Q (B, d) and a flattened (B, M = beam*deg) candidate
+id batch, ONE ``pallas_call`` performs what the unfused engine spreads over
+three independent HBM round trips per iteration (EXPERIMENTS.md §Perf PR2):
+
+  * corpus-row gather + squared-L2 distance   (was: gather_distance / jnp)
+  * constraint evaluation against the corpus label / attribute tables
+    (was: a second per-candidate metadata gather in ``satisfied()``)
+  * visited-bitset probe + padding masking    (was: ``visited_test``)
+
+emitting ``(dists, satisfied, fresh)`` without ever materializing the
+(B, M, d) gathered tensor or re-gathering per-candidate metadata.
+
+TPU mapping: the id matrix is *scalar-prefetched* (SMEM) and drives manual
+double-buffered row DMAs — unlike ``gather_distance``'s one-row-per-grid-step
+layout ((B, M) steps, (1, 1) output blocks), the grid here is
+``(B, M / M_blk)`` with lane-aligned ``(1, M_blk)`` output tiles: each grid
+step streams ``M_blk`` corpus rows (plus their 4-byte metadata words) through
+a 2-deep VMEM buffer, overlapping the next row's DMA with the current row's
+VPU distance reduction. The per-query operands (query row, constraint words /
+bounds, visited-bitset words) ride along as (1, ·) VMEM blocks revisited
+across the inner grid axis.
+
+Constraint families (static ``family`` switch, one compiled kernel each):
+
+  * ``"label"`` — LabelSet bitmask: meta table is the (n, 1) int32 label
+    column, per-query operand is the (B, Lw) uint32 allowed-label words.
+  * ``"range"`` — numeric window: meta table is the (n, 1) f32 attribute
+    column, per-query operand is the (B, 2) f32 [lo, hi] bounds.
+
+UDF constraints cannot be evaluated in-kernel and take the unfused path
+(engine/expand.py). Padding ids (< 0) are redirected to row 0 and reported
+as (+inf, 0, 0); ``satisfied``/``fresh`` are int32 masks (cast to bool by
+ops.py) since TPU output tiles are happier as 32-bit lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+WORD_BITS = 32
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def _make_kernel(family: str, m_blk: int):
+    def kernel(
+        ids_ref,  # (B, M) int32, scalar-prefetched (SMEM)
+        q_ref,  # (1, d) query row (VMEM)
+        cons_ref,  # (1, Lw) uint32 words | (1, 2) f32 bounds (VMEM)
+        vis_ref,  # (1, W) uint32 visited words (VMEM)
+        corpus_hbm,  # (n, d) full corpus (ANY/HBM)
+        meta_hbm,  # (n, 1) label/attr column (ANY/HBM)
+        dist_ref,  # (1, M_blk) f32 out
+        sat_ref,  # (1, M_blk) int32 out
+        fresh_ref,  # (1, M_blk) int32 out
+        row_buf,  # (2, 1, d) VMEM scratch — double-buffered corpus rows
+        meta_buf,  # (2, 1, 1) VMEM scratch — double-buffered metadata words
+        row_sem,  # (2,) DMA semaphores
+        meta_sem,  # (2,) DMA semaphores
+    ):
+        i = pl.program_id(0)
+        jb = pl.program_id(1)
+        base = jb * m_blk
+
+        def row_dma(t, slot):
+            cid = jnp.maximum(ids_ref[i, base + t], 0)
+            return pltpu.make_async_copy(
+                corpus_hbm.at[pl.ds(cid, 1), :], row_buf.at[slot], row_sem.at[slot]
+            )
+
+        def meta_dma(t, slot):
+            cid = jnp.maximum(ids_ref[i, base + t], 0)
+            return pltpu.make_async_copy(
+                meta_hbm.at[pl.ds(cid, 1), :], meta_buf.at[slot], meta_sem.at[slot]
+            )
+
+        # Warm up the pipeline: candidate 0's row + metadata in flight.
+        row_dma(0, 0).start()
+        meta_dma(0, 0).start()
+        q = q_ref[...].astype(jnp.float32)  # (1, d)
+
+        def body(t, carry):
+            slot = t % 2
+
+            # Start candidate t+1's DMAs before waiting on candidate t.
+            @pl.when(t + 1 < m_blk)
+            def _():
+                row_dma(t + 1, (t + 1) % 2).start()
+                meta_dma(t + 1, (t + 1) % 2).start()
+
+            row_dma(t, slot).wait()
+            meta_dma(t, slot).wait()
+
+            cid = ids_ref[i, base + t]
+            valid = cid >= 0
+
+            # --- distance: VPU reduction over the freshly landed row -------
+            row = row_buf[slot, 0].astype(jnp.float32)  # (d,)
+            diff = q[0] - row
+            d2 = jnp.sum(diff * diff)
+
+            # --- visited probe: one word of the per-query bitset -----------
+            sid = jnp.maximum(cid, 0)
+            vword = vis_ref[0, sid // WORD_BITS]
+            vbit = (sid % WORD_BITS).astype(jnp.uint32)
+            unvisited = ((vword >> vbit) & jnp.uint32(1)) == jnp.uint32(0)
+
+            # --- constraint on the candidate's metadata word ---------------
+            if family == "label":
+                lab = meta_buf[slot, 0, 0]  # int32 label
+                cword = cons_ref[0, lab // WORD_BITS]
+                cbit = (lab % WORD_BITS).astype(jnp.uint32)
+                ok = ((cword >> cbit) & jnp.uint32(1)) == jnp.uint32(1)
+            else:  # "range"
+                val = meta_buf[slot, 0, 0]  # f32 attribute
+                ok = (val >= cons_ref[0, 0]) & (val <= cons_ref[0, 1])
+
+            dist_ref[0, t] = jnp.where(valid, d2, jnp.inf)
+            sat_ref[0, t] = (valid & ok).astype(jnp.int32)
+            fresh_ref[0, t] = (valid & unvisited).astype(jnp.int32)
+            return carry
+
+        jax.lax.fori_loop(0, m_blk, body, None)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("family", "m_blk", "interpret")
+)
+def fused_expand_kernel(
+    queries: Array,
+    corpus: Array,
+    ids: Array,
+    visited: Array,
+    meta: Array,
+    cons: Array,
+    *,
+    family: str,
+    m_blk: int | None = None,
+    interpret: bool = False,
+) -> tuple[Array, Array, Array]:
+    """(B, d), (n, d), (B, M) i32, (B, W) u32, (n,|n,1) meta, (B, ·) cons
+    -> ((B, M) f32 dists, (B, M) i32 satisfied, (B, M) i32 fresh)."""
+    if family not in ("label", "range"):
+        raise ValueError(f"unsupported in-kernel constraint family: {family}")
+    b, d = queries.shape
+    _, m = ids.shape
+    if m_blk is None:
+        # Lane-aligned output tiles; small beams fall back to one tile.
+        m_blk = min(128, _round_up(m, 8))
+    m_pad = _round_up(m, m_blk)
+    ids = ids.astype(jnp.int32)
+    if m_pad != m:
+        ids = jnp.pad(ids, ((0, 0), (0, m_pad - m)), constant_values=-1)
+    meta2d = meta.reshape(-1, 1)
+    if family == "range":
+        meta2d = meta2d.astype(jnp.float32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, m_pad // m_blk),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j, ids_p: (i, 0)),
+            pl.BlockSpec((1, cons.shape[1]), lambda i, j, ids_p: (i, 0)),
+            pl.BlockSpec((1, visited.shape[1]), lambda i, j, ids_p: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # corpus stays in HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),  # metadata column in HBM
+        ],
+        out_specs=[
+            pl.BlockSpec((1, m_blk), lambda i, j, ids_p: (i, j)),
+            pl.BlockSpec((1, m_blk), lambda i, j, ids_p: (i, j)),
+            pl.BlockSpec((1, m_blk), lambda i, j, ids_p: (i, j)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, 1, d), corpus.dtype),
+            pltpu.VMEM((2, 1, 1), meta2d.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    dists, sat, fresh = pl.pallas_call(
+        _make_kernel(family, m_blk),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, m_pad), jnp.float32),
+            jax.ShapeDtypeStruct((b, m_pad), jnp.int32),
+            jax.ShapeDtypeStruct((b, m_pad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ids, queries, cons, visited, corpus, meta2d)
+    return dists[:, :m], sat[:, :m], fresh[:, :m]

@@ -1,0 +1,44 @@
+"""Public wrapper: Pallas on TPU, jnp oracle elsewhere (interpret for tests)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.fused_expand.fused_expand import fused_expand_kernel
+from repro.kernels.fused_expand.ref import fused_expand_ref
+
+Array = jax.Array
+
+
+def fused_expand(
+    queries: Array,
+    corpus: Array,
+    ids: Array,
+    visited: Array,
+    meta: Array,
+    cons: Array,
+    *,
+    family: str,
+    force_kernel: bool = False,
+    m_blk: int | None = None,
+) -> tuple[Array, Array, Array]:
+    """One pass over a (B, M) candidate batch -> (dists, satisfied, fresh).
+
+    meta is the corpus-side metadata column ((n,) labels for family="label",
+    (n,) f32 attribute values for family="range"); cons the per-query operand
+    ((B, Lw) uint32 words / (B, 2) f32 bounds) — see
+    ``repro.core.constraints.constraint_tables`` for the raw-view builder.
+    """
+    if jax.default_backend() == "tpu":
+        d, s, f = fused_expand_kernel(
+            queries, corpus, ids, visited, meta, cons, family=family, m_blk=m_blk
+        )
+    elif force_kernel:
+        d, s, f = fused_expand_kernel(
+            queries, corpus, ids, visited, meta, cons,
+            family=family, m_blk=m_blk, interpret=True,
+        )
+    else:
+        return fused_expand_ref(
+            queries, corpus, ids, visited, meta, cons, family=family
+        )
+    return d, s.astype(bool), f.astype(bool)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracle for fused_expand.
+
+Distances go through ``batched_rowwise_sqdist`` — the exact primitive the
+unfused engine path uses — so the fused CPU path stays bit-for-bit equal to
+the seed computation (the golden-file guarantee in tests/test_engine_beam.py).
+The visited-probe and constraint checks are integer/compare ops and therefore
+exact by construction; they mirror ``core.visited.visited_test`` and the
+``core.constraints`` satisfied fns without importing them (kernels stay leaf
+modules).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.distances import batched_rowwise_sqdist
+
+Array = jax.Array
+
+WORD_BITS = 32
+
+
+def fused_expand_ref(
+    queries: Array,
+    corpus: Array,
+    ids: Array,
+    visited: Array,
+    meta: Array,
+    cons: Array,
+    *,
+    family: str,
+) -> tuple[Array, Array, Array]:
+    """Same contract as fused_expand_kernel, with bool masks."""
+    safe = jnp.maximum(ids, 0)
+    valid = ids >= 0
+
+    rows = corpus[safe]  # (B, M, d)
+    dists = batched_rowwise_sqdist(queries, rows)
+    dists = jnp.where(valid, dists, jnp.inf)
+
+    vword = jnp.take_along_axis(visited, safe // WORD_BITS, axis=-1)
+    vbit = (safe % WORD_BITS).astype(jnp.uint32)
+    unvisited = ((vword >> vbit) & jnp.uint32(1)) == jnp.uint32(0)
+    fresh = valid & unvisited
+
+    meta_col = meta.reshape(-1)
+    if family == "label":
+        lab = meta_col[safe]  # (B, M) int32
+        cword = jnp.take_along_axis(cons, lab // WORD_BITS, axis=-1)
+        cbit = (lab % WORD_BITS).astype(jnp.uint32)
+        ok = ((cword >> cbit) & jnp.uint32(1)) == jnp.uint32(1)
+    elif family == "range":
+        val = meta_col.astype(jnp.float32)[safe]  # (B, M)
+        ok = (val >= cons[:, 0:1]) & (val <= cons[:, 1:2])
+    else:
+        raise ValueError(f"unsupported in-kernel constraint family: {family}")
+    sat = valid & ok
+    return dists, sat, fresh

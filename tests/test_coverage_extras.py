@@ -49,8 +49,9 @@ def test_roofline_report_terms_all_cells():
             assert np.isfinite(t.roofline_fraction), t.cell
             assert t.bottleneck in ("compute", "memory", "collective")
             n += 1
-    # 40 assigned + 4 airship (incl. the D4 PQ and beam-engine variants)
-    assert n == 44
+    # 40 assigned + 5 airship (incl. the D4 PQ, beam-engine, and PR2
+    # fused-pipeline variants)
+    assert n == 45
 
 
 def test_flash_attention_soft_cap_grads():

@@ -172,11 +172,11 @@ def world():
     return corpus, graph, queries, qlab
 
 
-def _run(world, mode, cons, beam_width=1):
+def _run(world, mode, cons, beam_width=1, fuse="auto"):
     corpus, graph, queries, _ = world
     params = SearchParams(
         mode=mode, k=10, ef_result=128, ef_sat=128, ef_other=128,
-        n_start=16, max_iters=800, beam_width=beam_width,
+        n_start=16, max_iters=800, beam_width=beam_width, fuse_expand=fuse,
     )
     rng = jax.random.PRNGKey(7) if mode == "vanilla" else None
     return constrained_search(corpus, graph, queries, cons, params, rng=rng)
@@ -189,11 +189,15 @@ def _constraints(qlab):
     }
 
 
+@pytest.mark.parametrize("fuse", ["on", "off"])
 @pytest.mark.parametrize("mode", ["vanilla", "start", "alter", "prefer"])
-def test_beam1_matches_seed_bit_for_bit(world, mode):
+def test_beam1_matches_seed_bit_for_bit(world, mode, fuse):
+    """Both candidate pipelines — fused (kernels/fused_expand + sorted
+    merges) and unfused (separate gathers + top_k pushes) — reproduce the
+    pre-refactor seed outputs bit-for-bit, stats counters included."""
     golden = np.load(GOLDEN)
     for cname, cons in _constraints(world[3]).items():
-        res = _run(world, mode, cons, beam_width=1)
+        res = _run(world, mode, cons, beam_width=1, fuse=fuse)
         tag = f"{mode}_{cname}"
         np.testing.assert_array_equal(np.asarray(res.ids), golden[f"{tag}_ids"])
         np.testing.assert_array_equal(np.asarray(res.dists), golden[f"{tag}_dists"])

@@ -1,0 +1,385 @@
+"""Fused constrained-expansion coverage (kernels/fused_expand + engine wiring).
+
+Three layers, mirroring the PR's risk surface:
+  1. kernel (interpret mode) vs ref.py oracle — padding ids, all-visited
+     rows, empty constraint sets, both in-kernel families, M_blk tiling;
+  2. the sorted-merge machinery the fused loop replaces top_k with
+     (seeded sweeps — the hypothesis twins in test_queue.py cover CI);
+  3. system level: fused and unfused searches are IDENTICAL (ids, dists,
+     every stats counter) on random graphs across modes, beams, families.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    RangeConstraint,
+    SearchParams,
+    constrained_search,
+    constraint_tables,
+    equal_constraint,
+    unequal_pct_constraint,
+)
+from repro.core import queue as q
+from repro.core import visited as vis
+from repro.core.constraints import make_satisfied_fn
+from repro.core.engine import mask_first_occurrence, mask_first_occurrence_sorted
+from repro.data.synthetic import make_labeled_corpus, make_queries
+from repro.graph.index import build_index
+from repro.kernels.fused_expand.fused_expand import fused_expand_kernel
+from repro.kernels.fused_expand.ref import fused_expand_ref
+
+
+def key(i):
+    return jax.random.PRNGKey(i)
+
+
+# ---------------------------------------------------------------------------
+# 1. kernel (interpret) vs oracle
+# ---------------------------------------------------------------------------
+
+B, M, N_CORPUS, D, L = 3, 12, 60, 16, 40
+
+
+def _label_world(seed=0, all_visited=False, empty_cons=False):
+    qs = jax.random.normal(key(seed), (B, D))
+    corpus = jax.random.normal(key(seed + 1), (N_CORPUS, D))
+    labels = jax.random.randint(key(seed + 2), (N_CORPUS,), 0, L, dtype=jnp.int32)
+    ids = jax.random.randint(key(seed + 3), (B, M), -2, N_CORPUS)
+    if all_visited:
+        visited = jnp.full((B, vis.n_words(N_CORPUS)), 0xFFFFFFFF, jnp.uint32)
+    else:
+        visited = jax.random.randint(
+            key(seed + 4), (B, vis.n_words(N_CORPUS)), 0, 2**31 - 1
+        ).astype(jnp.uint32)
+    n_words = (L + 31) // 32
+    if empty_cons:
+        cons = jnp.zeros((B, n_words), jnp.uint32)
+    else:
+        cons = jax.random.randint(
+            key(seed + 5), (B, n_words), 0, 2**31 - 1
+        ).astype(jnp.uint32)
+    return qs, corpus, labels, ids, visited, cons
+
+
+def _assert_matches_ref(qs, corpus, meta, ids, visited, cons, family, m_blk=None):
+    dk, sk, fk = fused_expand_kernel(
+        qs, corpus, ids, visited, meta, cons,
+        family=family, m_blk=m_blk, interpret=True,
+    )
+    dr, sr, fr = fused_expand_ref(
+        qs, corpus, ids, visited, meta, cons, family=family
+    )
+    assert bool(jnp.all(jnp.isinf(dk) == jnp.isinf(dr)))
+    fin = jnp.isfinite(dr)
+    np.testing.assert_allclose(
+        np.asarray(jnp.where(fin, dk, 0.0)),
+        np.asarray(jnp.where(fin, dr, 0.0)),
+        rtol=1e-5, atol=1e-5 * D,
+    )
+    np.testing.assert_array_equal(np.asarray(sk, bool), np.asarray(sr))
+    np.testing.assert_array_equal(np.asarray(fk, bool), np.asarray(fr))
+
+
+@pytest.mark.parametrize("m_blk", [None, 4, 8])
+def test_label_kernel_matches_ref(m_blk):
+    qs, corpus, labels, ids, visited, cons = _label_world()
+    _assert_matches_ref(qs, corpus, labels, ids, visited, cons, "label", m_blk)
+
+
+def test_label_kernel_all_padding_row():
+    qs, corpus, labels, _, visited, cons = _label_world()
+    ids = jnp.full((B, M), -1, jnp.int32)
+    _assert_matches_ref(qs, corpus, labels, ids, visited, cons, "label")
+    d, s, f = fused_expand_kernel(
+        qs, corpus, ids, visited, labels, cons, family="label", interpret=True
+    )
+    assert bool(jnp.all(jnp.isinf(d)))
+    assert not bool(jnp.any(s)) and not bool(jnp.any(f))
+
+
+def test_label_kernel_all_visited_rows_report_stale():
+    qs, corpus, labels, ids, visited, cons = _label_world(all_visited=True)
+    _assert_matches_ref(qs, corpus, labels, ids, visited, cons, "label")
+    _, _, f = fused_expand_kernel(
+        qs, corpus, ids, visited, labels, cons, family="label", interpret=True
+    )
+    assert not bool(jnp.any(f))
+
+
+def test_label_kernel_empty_constraint_set():
+    qs, corpus, labels, ids, visited, cons = _label_world(empty_cons=True)
+    _assert_matches_ref(qs, corpus, labels, ids, visited, cons, "label")
+    _, s, _ = fused_expand_kernel(
+        qs, corpus, ids, visited, labels, cons, family="label", interpret=True
+    )
+    assert not bool(jnp.any(s))
+
+
+def test_label_kernel_blk_not_dividing_m():
+    # M=12 with M_blk=8 -> padded grid tile; trailing lanes must be dropped
+    qs, corpus, labels, ids, visited, cons = _label_world(seed=7)
+    d8, s8, f8 = fused_expand_kernel(
+        qs, corpus, ids, visited, labels, cons,
+        family="label", m_blk=8, interpret=True,
+    )
+    assert d8.shape == (B, M)
+    d4, s4, f4 = fused_expand_kernel(
+        qs, corpus, ids, visited, labels, cons,
+        family="label", m_blk=4, interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(d8), np.asarray(d4), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(s8), np.asarray(s4))
+    np.testing.assert_array_equal(np.asarray(f8), np.asarray(f4))
+
+
+@pytest.mark.parametrize("empty_window", [False, True])
+def test_range_kernel_matches_ref(empty_window):
+    qs, corpus, _, ids, visited, _ = _label_world(seed=11)
+    attr = jax.random.uniform(key(20), (N_CORPUS,), minval=-1.0, maxval=1.0)
+    lo = jnp.full((B,), 0.25) if empty_window else jnp.full((B,), -0.5)
+    hi = jnp.full((B,), -0.25) if empty_window else jnp.full((B,), 0.5)
+    cons = jnp.stack([lo, hi], axis=-1)
+    _assert_matches_ref(qs, corpus, attr, ids, visited, cons, "range")
+    if empty_window:
+        _, s, _ = fused_expand_kernel(
+            qs, corpus, ids, visited, attr, cons, family="range", interpret=True
+        )
+        assert not bool(jnp.any(s))
+
+
+def test_ref_matches_unfused_engine_pieces_bitwise():
+    """The oracle IS the unfused computation: distances via the same
+    primitive, masks via the same integer ops — bit-for-bit."""
+    from repro.common.distances import batched_rowwise_sqdist
+
+    qs, corpus, labels, ids, visited, cons = _label_world(seed=3)
+    from repro.core.constraints import LabelSetConstraint
+    from repro.core.types import Corpus
+
+    corp = Corpus(vectors=corpus, labels=labels)
+    sat_fn = make_satisfied_fn(LabelSetConstraint(words=cons), corp)
+    d_ref, s_ref, f_ref = fused_expand_ref(
+        qs, corpus, ids, visited, labels, cons, family="label"
+    )
+    d_eng = batched_rowwise_sqdist(qs, corpus[jnp.maximum(ids, 0)])
+    d_eng = jnp.where(ids >= 0, d_eng, jnp.inf)
+    np.testing.assert_array_equal(np.asarray(d_ref), np.asarray(d_eng))
+    np.testing.assert_array_equal(np.asarray(s_ref), np.asarray(sat_fn(ids)))
+    np.testing.assert_array_equal(
+        np.asarray(f_ref), np.asarray((ids >= 0) & ~vis.visited_test(visited, ids))
+    )
+
+
+# ---------------------------------------------------------------------------
+# 2. sorted-merge + sorted-dedup sweeps (seeded; run without hypothesis)
+# ---------------------------------------------------------------------------
+
+
+def test_merge_sorted_equals_push_seeded_sweep():
+    """Fixed shapes (one compile), 50 data draws with heavy distance ties —
+    unsorted input goes through sort_run, exactly as the fused loop does."""
+    rng = np.random.RandomState(0)
+    cap, b, m = 8, 4, 12
+    vals = np.asarray([0.5, 1.0, 2.0, 3.5, 7.0, 9.0], np.float32)
+    for trial in range(50):
+        n_live = rng.randint(0, cap + 1)
+        qq = q.queue_init(b, cap)
+        if n_live:
+            live = np.sort(rng.choice(vals, (b, n_live)), -1)
+            qq = q.queue_push(
+                qq, jnp.asarray(live),
+                jnp.tile(jnp.arange(n_live, dtype=jnp.int32), (b, 1)),
+                jnp.ones((b, n_live), bool),
+            )
+        new = jnp.asarray(rng.choice(vals, (b, m)).astype(np.float32))
+        valid = jnp.asarray(rng.rand(b, m) < 0.7)
+        ni = jnp.tile(jnp.arange(100, 100 + m, dtype=jnp.int32), (b, 1))
+        run_d, run_i = q.sort_run(new, ni, valid)
+        merged = q.queue_merge_sorted(qq, run_d, run_i)
+        pushed = q.queue_push(qq, new, ni, valid)
+        np.testing.assert_array_equal(
+            np.asarray(merged.dists), np.asarray(pushed.dists), err_msg=str(trial)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(merged.ids), np.asarray(pushed.ids), err_msg=str(trial)
+        )
+
+
+def test_partition_runs_then_merge_equals_two_pushes_seeded():
+    """The fused loop's exact frontier update: one bitonic partition of the
+    candidate batch + two windowed merges == two top_k pushes, bit for bit."""
+    rng = np.random.RandomState(3)
+    b, c, m = 3, 16, 24
+    vals = np.asarray([0.25, 0.5, 1.0, 2.0, 3.5], np.float32)
+    for trial in range(30):
+        mk = lambda s: q.queue_push(
+            q.queue_init(b, c),
+            jnp.asarray(np.sort(rng.choice(vals, (b, s)), -1)),
+            jnp.asarray(rng.randint(0, 1000, (b, s)), jnp.int32),
+            jnp.ones((b, s), bool),
+        )
+        satq, othq = mk(rng.randint(1, c + 1)), mk(rng.randint(1, c + 1))
+        d = jnp.asarray(rng.choice(vals, (b, m)).astype(np.float32))
+        ids = jnp.asarray(rng.randint(0, 1000, (b, m)), jnp.int32)
+        fresh = jnp.asarray(rng.rand(b, m) < 0.7)
+        sat_m = jnp.asarray(rng.rand(b, m) < 0.5) & fresh
+        run_sat, run_oth = q.partition_sorted_runs(
+            d, ids, sat_m, fresh & ~sat_m, c, c
+        )
+        got_s = q.queue_merge_sorted(satq, *run_sat)
+        got_o = q.queue_merge_sorted(othq, *run_oth)
+        want_s = q.queue_push(satq, d, ids, sat_m)
+        want_o = q.queue_push(othq, d, ids, fresh & ~sat_m)
+        for got, want in ((got_s, want_s), (got_o, want_o)):
+            np.testing.assert_array_equal(
+                np.asarray(got.dists), np.asarray(want.dists), err_msg=str(trial)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(got.ids), np.asarray(want.ids), err_msg=str(trial)
+            )
+
+
+def test_sorted_dedup_equals_pairwise_seeded_sweep():
+    rng = np.random.RandomState(1)
+    b, m = 4, 24
+    for trial in range(50):
+        ids = jnp.asarray(rng.randint(-1, 8, (b, m)), jnp.int32)  # heavy dups
+        valid = jnp.asarray(rng.rand(b, m) < 0.6)
+        got = mask_first_occurrence_sorted(ids, valid)
+        # reference: the O(M^2) pairwise rule (M=24 < 128 -> pairwise branch)
+        want = mask_first_occurrence(ids, valid)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(want), err_msg=str(trial)
+        )
+
+
+def test_mask_first_occurrence_dispatches_to_sorted_beyond_128():
+    rng = np.random.RandomState(2)
+    ids = jnp.asarray(rng.randint(0, 40, (2, 160)), jnp.int32)
+    valid = jnp.asarray(rng.rand(2, 160) < 0.7)
+    got = mask_first_occurrence(ids, valid)  # M=160 -> sorted path
+    want = mask_first_occurrence_sorted(ids, valid)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # and the kept set is exactly one valid slot per distinct valid id
+    for row_ids, row_keep, row_valid in zip(
+        np.asarray(ids), np.asarray(got), np.asarray(valid)
+    ):
+        kept = row_ids[row_keep]
+        assert len(kept) == len(set(kept.tolist()))
+        assert set(kept.tolist()) == set(row_ids[row_valid].tolist())
+
+
+# ---------------------------------------------------------------------------
+# 3. system level: fused == unfused searches
+# ---------------------------------------------------------------------------
+
+NSYS, DSYS, LSYS = 3000, 16, 8
+
+
+@pytest.fixture(scope="module")
+def sys_world():
+    corpus = make_labeled_corpus(key(0), n=NSYS, d=DSYS, n_labels=LSYS)
+    attrs = jax.random.uniform(key(50), (NSYS, 2), minval=0.0, maxval=1.0)
+    corpus = corpus.replace(attrs=attrs)
+    graph = build_index(key(1), corpus, degree=16, sample_size=256)
+    queries, qlab = make_queries(key(2), corpus, 16)
+    return corpus, graph, queries, qlab
+
+
+def _search(world, cons, mode, beam, fuse, rng=None):
+    corpus, graph, queries, _ = world
+    params = SearchParams(
+        mode=mode, k=10, ef_result=64, ef_sat=64, ef_other=64,
+        n_start=16, max_iters=600, beam_width=beam, fuse_expand=fuse,
+    )
+    return constrained_search(corpus, graph, queries, cons, params, rng=rng)
+
+
+def _assert_identical(ra, rb):
+    np.testing.assert_array_equal(np.asarray(ra.ids), np.asarray(rb.ids))
+    np.testing.assert_array_equal(np.asarray(ra.dists), np.asarray(rb.dists))
+    for f in ("dist_evals", "hops", "visited", "iters", "beam_expansions"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ra.stats, f)),
+            np.asarray(getattr(rb.stats, f)),
+            err_msg=f,
+        )
+
+
+@pytest.mark.parametrize("mode", ["vanilla", "prefer"])
+@pytest.mark.parametrize("beam", [1, 2, 4])
+def test_fused_equals_unfused_label_family(sys_world, mode, beam):
+    cons = equal_constraint(sys_world[3], LSYS)
+    rng = key(7) if mode == "vanilla" else None
+    _assert_identical(
+        _search(sys_world, cons, mode, beam, "on", rng),
+        _search(sys_world, cons, mode, beam, "off", rng),
+    )
+
+
+@pytest.mark.parametrize("beam", [2, 4])
+def test_fused_equals_unfused_unequal_labels(sys_world, beam):
+    cons = unequal_pct_constraint(key(3), sys_world[3], LSYS, 25.0)
+    _assert_identical(
+        _search(sys_world, cons, "prefer", beam, "on"),
+        _search(sys_world, cons, "prefer", beam, "off"),
+    )
+
+
+@pytest.mark.parametrize("mode", ["start", "alter"])
+def test_fused_equals_unfused_range_family(sys_world, mode):
+    b = sys_world[2].shape[0]
+    cons = RangeConstraint(
+        lo=jnp.full((b,), 0.2), hi=jnp.full((b,), 0.8), col=jnp.int32(1)
+    )
+    _assert_identical(
+        _search(sys_world, cons, mode, 2, "on"),
+        _search(sys_world, cons, mode, 2, "off"),
+    )
+
+
+def test_auto_policy_and_path_equivalence(sys_world):
+    """auto targets TPU for the in-kernel families only — gated on the
+    hardware-validation flag — and resolves to the unfused path on this
+    CPU host; either way the results are identical, so the policy is
+    purely physical."""
+    from repro.core.engine import loop as engine_loop
+    from repro.core.engine.loop import resolve_auto_fuse
+
+    assert not resolve_auto_fuse(True, "cpu")
+    assert not resolve_auto_fuse(False, "tpu")  # UDF / PQ stay unfused
+    # the TPU gate is the validation flag, not the backend check
+    assert resolve_auto_fuse(True, "tpu") is engine_loop.FUSE_AUTO_ON_TPU
+
+    cons = equal_constraint(sys_world[3], LSYS)
+    _assert_identical(
+        _search(sys_world, cons, "prefer", 2, "auto"),
+        _search(sys_world, cons, "prefer", 2, "on"),
+    )
+
+    def udf(label, attrs_row):  # same predicate as equal, as a closure
+        del attrs_row
+        return label >= 0
+
+    _assert_identical(
+        _search(sys_world, udf, "prefer", 2, "auto"),
+        _search(sys_world, udf, "prefer", 2, "off"),
+    )
+
+
+def test_fuse_on_rejects_udf_and_pq(sys_world):
+    corpus, graph, queries, qlab = sys_world
+    with pytest.raises(ValueError, match="fuse_expand"):
+        _search(sys_world, lambda lab, at: lab >= 0, "prefer", 1, "on")
+    from repro.core import pq_train
+
+    cons = equal_constraint(qlab, LSYS)
+    pq_index = pq_train(key(9), corpus.vectors, m_sub=8, n_cent=32)
+    params = SearchParams(
+        mode="prefer", k=10, ef_result=64, n_start=16, max_iters=600,
+        approx="pq", fuse_expand="on",
+    )
+    with pytest.raises(ValueError, match="fuse_expand"):
+        constrained_search(corpus, graph, queries, cons, params, pq_index=pq_index)

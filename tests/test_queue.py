@@ -87,6 +87,83 @@ def test_invalid_pushes_are_ignored():
     assert float(qq.dists[0, 0]) == 1.0
 
 
+@st.composite
+def merge_cases(draw):
+    cap = draw(st.integers(2, 16))
+    n_live = draw(st.integers(0, 16))
+    live = sorted(
+        draw(
+            st.lists(
+                st.floats(0.0, 2.0**10, width=32), min_size=n_live, max_size=n_live
+            )
+        )
+    )
+    m = draw(st.integers(1, 12))
+    new = draw(st.lists(st.floats(0.0, 2.0**10, width=32), min_size=m, max_size=m))
+    valid = draw(st.lists(st.booleans(), min_size=m, max_size=m))
+    # duplicate some values across queue and run to force tie-breaking
+    if live and draw(st.booleans()):
+        new[0] = live[0]
+    return cap, live, new, valid
+
+
+@settings(deadline=None, max_examples=60)
+@given(merge_cases())
+def test_merge_sorted_bit_for_bit_equals_push(case):
+    """sort_run + queue_merge_sorted == queue_push on ANY batch — including
+    ties (queue element first, then original slot order), invalid entries,
+    overflow past capacity, and runs longer than the free space."""
+    cap, live, new, valid = case
+    qq = q.queue_init(1, cap)
+    if live:
+        qq = q.queue_push(
+            qq,
+            jnp.asarray(live, jnp.float32)[None],
+            jnp.arange(len(live), dtype=jnp.int32)[None],
+            jnp.ones((1, len(live)), bool),
+        )
+    nd = jnp.asarray(new, jnp.float32)[None]
+    ni = jnp.arange(100, 100 + len(new), dtype=jnp.int32)[None]
+    nv = jnp.asarray(valid)[None]
+    run_d, run_i = q.sort_run(nd, ni, nv)
+    merged = q.queue_merge_sorted(qq, run_d, run_i)
+    pushed = q.queue_push(qq, nd, ni, nv)
+    np.testing.assert_array_equal(np.asarray(merged.dists), np.asarray(pushed.dists))
+    np.testing.assert_array_equal(np.asarray(merged.ids), np.asarray(pushed.ids))
+
+
+def test_merge_sorted_empty_run_and_empty_queue():
+    qq = q.queue_init(2, 4)
+    nd = jnp.full((2, 3), jnp.inf)
+    ni = jnp.full((2, 3), -1, jnp.int32)
+    merged = q.queue_merge_sorted(qq, nd, ni)
+    np.testing.assert_array_equal(np.asarray(merged.dists), np.asarray(qq.dists))
+    np.testing.assert_array_equal(np.asarray(merged.ids), np.asarray(qq.ids))
+
+
+def test_sort_run_stable_under_ties():
+    d = jnp.asarray([[2.0, 1.0, 2.0, 0.5, 1.0]])
+    i = jnp.asarray([[10, 11, 12, 13, 14]], jnp.int32)
+    v = jnp.asarray([[True, True, True, False, True]])
+    rd, ri = q.sort_run(d, i, v)
+    np.testing.assert_allclose(np.asarray(rd[0]), [1.0, 1.0, 2.0, 2.0, np.inf])
+    # equal distances keep original slot order; invalid slots drop to padding
+    np.testing.assert_array_equal(np.asarray(ri[0]), [11, 14, 10, 12, -1])
+
+
+def test_partition_sorted_runs_splits_and_truncates():
+    d = jnp.asarray([[3.0, 1.0, 2.0, 1.0, 5.0, 0.5]])
+    i = jnp.asarray([[10, 11, 12, 13, 14, 15]], jnp.int32)
+    first = jnp.asarray([[True, False, True, False, False, False]])
+    second = jnp.asarray([[False, True, False, True, True, False]])
+    (fd, fi), (sd, si) = q.partition_sorted_runs(d, i, first, second, 4, 2)
+    np.testing.assert_allclose(np.asarray(fd[0]), [2.0, 3.0, np.inf, np.inf])
+    np.testing.assert_array_equal(np.asarray(fi[0]), [12, 10, -1, -1])
+    # second run truncated to capacity 2: best two of {1.0@11, 1.0@13, 5.0@14}
+    np.testing.assert_allclose(np.asarray(sd[0]), [1.0, 1.0])
+    np.testing.assert_array_equal(np.asarray(si[0]), [11, 13])
+
+
 def test_topk_threshold_inf_until_full():
     qq = q.queue_init(1, 3)
     assert np.isinf(float(q.topk_threshold(qq, 3)[0]))

@@ -1,7 +1,9 @@
-"""Fused vs unfused candidate pipeline (ISSUE 2 / EXPERIMENTS.md §Perf PR2).
+"""Fused vs unfused candidate pipeline (ISSUE 2+3 / EXPERIMENTS.md §Perf PR2/PR3).
 
-Two measurements, emitted as JSON lines AND collected into top-level
-``BENCH_PR2.json`` so the perf trajectory starts accumulating:
+Two measurements per distance backend, emitted as JSON lines AND collected
+into a top-level artifact (``BENCH_PR2.json`` for the exact backend,
+``BENCH_PR3.json`` for PQ/ADC via ``--backend pq``) so the perf trajectory
+keeps accumulating:
 
   * end-to-end: ``constrained_search`` with ``fuse_expand`` on/off at
     B ∈ {64, 256} — QPS, lock-step iterations, dist_evals, recall (the
@@ -9,15 +11,17 @@ Two measurements, emitted as JSON lines AND collected into top-level
     the physical execution differs);
   * candidate-pipeline microbench: ONE iteration's candidate processing in
     isolation — [gather+distance, metadata gather, visited probe, 3×
-    top_k(C+M) pushes] vs [one fused pass + 1 sort + sorted merges] — the
-    ≥1.5× acceptance target lives here;
+    top_k(C+M) pushes] vs [one fused pass + 1 sort + sorted merges];
 
 plus an analytic HBM-bytes model of the per-candidate traffic the fusion
-removes (the TPU-side quantity this host cannot measure; §Roofline).
+removes (the TPU-side quantity this host cannot measure; §Roofline). For
+the PQ backend the candidate row is m_sub code words instead of d floats,
+so the model also carries the code-vs-row gather ratio.
 
 Smoke mode (REPRO_BENCH_SMOKE=1, set by ``run.py --smoke``) shrinks every
-shape and additionally pushes one tiny batch through the interpret-mode
-Pallas kernel, so CI exercises the real kernel code path on every push.
+shape and additionally pushes one tiny batch through BOTH interpret-mode
+Pallas kernels (exact rows AND ADC code rows), so CI exercises the real
+kernel code paths on every push.
 """
 from __future__ import annotations
 
@@ -29,12 +33,13 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import constraint, ground_truth, world
-from repro.core import SearchParams, constrained_search, recall
+from repro.core import PQBackend, SearchParams, constrained_search, pq_train, recall
 from repro.core import queue as q
 from repro.core import visited as vis
 from repro.core.constraints import constraint_tables, make_satisfied_fn
+from repro.core.pq import adc_table
 from repro.data.synthetic import make_queries
-from repro.kernels.fused_expand.ops import fused_expand
+from repro.kernels.fused_expand.ops import fused_expand, fused_expand_adc
 
 
 def _smoke() -> bool:
@@ -56,16 +61,25 @@ def _time(fn, *args, reps=5):
 # --------------------------------------------------------------------------
 
 
-def _pipeline_fns(corpus, tables, satisfied):
-    """Build jitted unfused/fused single-iteration candidate pipelines."""
+def _pipeline_fns(corpus, tables, satisfied, pq_backend=None):
+    """Build jitted unfused/fused single-iteration candidate pipelines.
+
+    With ``pq_backend`` (a core.PQBackend), distances are ADC lookups on
+    both paths — the unfused one through ``PQBackend.distances``, the fused
+    one through the ADC kernel wrapper — mirroring exactly what the engine
+    runs under approx="pq".
+    """
 
     @jax.jit
     def unfused(queries, nbrs, visited, sat_q, oth_q, topk_q, now_d, now_i, upd):
         # three separate per-candidate passes over HBM ...
-        rows = corpus.vectors[jnp.maximum(nbrs, 0)]
-        d_nb = jnp.sum(
-            (rows - queries[:, None, :].astype(jnp.float32)) ** 2, axis=-1
-        )
+        if pq_backend is None:
+            rows = corpus.vectors[jnp.maximum(nbrs, 0)]
+            d_nb = jnp.sum(
+                (rows - queries[:, None, :].astype(jnp.float32)) ** 2, axis=-1
+            )
+        else:
+            d_nb = pq_backend.distances(queries, nbrs)
         fresh = (nbrs >= 0) & ~vis.visited_test(visited, nbrs)
         nb_sat = satisfied(nbrs) & fresh
         # ... and three top_k(C+M) re-selections
@@ -76,10 +90,16 @@ def _pipeline_fns(corpus, tables, satisfied):
 
     @jax.jit
     def fused(queries, nbrs, visited, sat_q, oth_q, topk_q, now_d, now_i, upd):
-        d_nb, sat_all, fresh = fused_expand(
-            queries, corpus.vectors, nbrs, visited,
-            tables.meta, tables.cons, family=tables.family,
-        )
+        if pq_backend is None:
+            d_nb, sat_all, fresh = fused_expand(
+                queries, corpus.vectors, nbrs, visited,
+                tables.meta, tables.cons, family=tables.family,
+            )
+        else:
+            d_nb, sat_all, fresh = fused_expand_adc(
+                pq_backend.lut, pq_backend.codes, nbrs, visited,
+                tables.meta, tables.cons, family=tables.family,
+            )
         nb_sat = sat_all & fresh
         run_sat, run_oth = q.partition_sorted_runs(
             d_nb, nbrs, nb_sat, fresh & ~nb_sat, sat_q.capacity, oth_q.capacity
@@ -93,7 +113,9 @@ def _pipeline_fns(corpus, tables, satisfied):
     return unfused, fused
 
 
-def _microbench(out, results, b, beam, corpus, graph, qs, cons, ef=128):
+def _microbench(
+    out, results, b, beam, corpus, graph, qs, cons, ef=128, pq_backend=None
+):
     deg = graph.degree
     m = beam * deg
     tables = constraint_tables(cons, corpus)
@@ -114,22 +136,26 @@ def _microbench(out, results, b, beam, corpus, graph, qs, cons, ef=128):
     now_i = jax.random.randint(jax.random.PRNGKey(47), (b, beam), 0, corpus.n)
     upd = jnp.ones((b, beam), bool)
 
-    unfused, fused = _pipeline_fns(corpus, tables, satisfied)
+    unfused, fused = _pipeline_fns(corpus, tables, satisfied, pq_backend)
     args = (qs, nbrs, visited, sat_q, oth_q, topk_q, now_d, now_i, upd)
     us_unfused = _time(unfused, *args)
     us_fused = _time(fused, *args)
     speedup = us_unfused / max(us_fused, 1e-9)
 
     d = corpus.dim
-    # Per-candidate HBM traffic (f32 rows, int32 ids/metadata, uint32 words).
+    # Per-candidate HBM traffic (int32 ids/metadata/codes, uint32 words).
     # Unfused: the id list is re-read by each of the three passes, and the
     # label + visited words are separate gathers; fused: one pass, the
     # metadata word rides the row DMA, visited words are VMEM-resident.
-    bytes_unfused = m * (4 * d + 3 * 4 + 4 + 4)
-    bytes_fused = m * (4 * d + 4 + 4)
+    # The candidate payload is the f32 vector row for the exact backend,
+    # the int32 code row for PQ.
+    payload = 4 * d if pq_backend is None else 4 * pq_backend.codes.shape[1]
+    bytes_unfused = m * (payload + 3 * 4 + 4 + 4)
+    bytes_fused = m * (payload + 4 + 4)
     rec = {
         "suite": "fused",
         "bench": "candidate_pipeline",
+        "backend": "exact" if pq_backend is None else "pq",
         "batch": b,
         "beam": beam,
         "m_candidates": m,
@@ -153,7 +179,36 @@ def _microbench(out, results, b, beam, corpus, graph, qs, cons, ef=128):
     results.append(rec)
 
 
-def main(out) -> None:
+def _kernel_smoke(out, corpus, backend, pq_index=None):
+    """Push one tiny batch through the interpret-mode Pallas kernel so CI
+    compiles + runs the real in-kernel constraint path on every push."""
+    qs, qlab = make_queries(jax.random.PRNGKey(5), corpus, 4)
+    cons = constraint("equal", qlab)
+    tables = constraint_tables(cons, corpus)
+    ids = jax.random.randint(jax.random.PRNGKey(6), (4, 8), -1, corpus.n)
+    visited = vis.visited_init(4, corpus.n)
+    if backend == "pq":
+        lut = adc_table(pq_index, qs)
+        d, s, f = fused_expand_adc(
+            lut, pq_index.codes, ids, visited, tables.meta, tables.cons,
+            family=tables.family, force_kernel=True, m_blk=8,
+        )
+    else:
+        d, s, f = fused_expand(
+            qs, corpus.vectors, ids, visited, tables.meta, tables.cons,
+            family=tables.family, force_kernel=True, m_blk=8,
+        )
+    out(json.dumps({
+        "suite": "fused", "bench": "kernel_interpret_smoke",
+        "backend": backend,
+        "finite_dists": int(jnp.sum(jnp.isfinite(d))),
+        "satisfied": int(jnp.sum(s)), "fresh": int(jnp.sum(f)),
+    }))
+
+
+def main(out, backend: str = "exact") -> None:
+    if backend not in ("exact", "pq"):
+        raise ValueError(f"unknown backend: {backend}")
     smoke = _smoke()
     n = 2_000 if smoke else 20_000
     batches = (8,) if smoke else (64, 256)
@@ -161,24 +216,26 @@ def main(out) -> None:
     corpus, graph, _, _ = world(n=n)
     results = []
 
-    if smoke:
-        # Exercise the real Pallas kernel (interpret mode) on a tiny batch
-        # so every CI push compiles + runs the in-kernel constraint path.
-        qs, qlab = make_queries(jax.random.PRNGKey(5), corpus, 4)
-        cons = constraint("equal", qlab)
-        tables = constraint_tables(cons, corpus)
-        ids = jax.random.randint(jax.random.PRNGKey(6), (4, 8), -1, corpus.n)
-        visited = vis.visited_init(4, corpus.n)
-        d, s, f = fused_expand(
-            qs, corpus.vectors, ids, visited, tables.meta, tables.cons,
-            family=tables.family, force_kernel=True, m_blk=8,
-        )
-        out(json.dumps({
-            "suite": "fused", "bench": "kernel_interpret_smoke",
-            "finite_dists": int(jnp.sum(jnp.isfinite(d))),
-            "satisfied": int(jnp.sum(s)), "fresh": int(jnp.sum(f)),
-        }))
+    pq_index = None
+    if backend == "pq" or smoke:
+        from repro.core.pq import default_m_sub
 
+        # Prefer shorter codes than the serving default: kmeans training
+        # time on this CPU host scales with m_sub, and the measured
+        # quantities (pipeline ratios) are m_sub-insensitive.
+        m_sub = default_m_sub(corpus.dim, preferred=(8, 4, 2))
+        pq_index = pq_train(
+            jax.random.PRNGKey(9), corpus.vectors, m_sub=m_sub,
+            n_cent=32 if smoke else 256,
+        )
+
+    if smoke:
+        # Exercise BOTH real Pallas kernels (interpret mode) on tiny batches:
+        # exact corpus rows and PQ/ADC code rows share the smoke step.
+        _kernel_smoke(out, corpus, "exact")
+        _kernel_smoke(out, corpus, "pq", pq_index)
+
+    use_pq = backend == "pq"
     for b in batches:
         qs, qlab = make_queries(jax.random.PRNGKey(2), corpus, b)
         cons = constraint("equal", qlab)
@@ -187,17 +244,24 @@ def main(out) -> None:
             params = SearchParams(
                 mode="prefer", k=10, ef_result=128, ef_sat=128, ef_other=128,
                 n_start=32, max_iters=200 if smoke else 1500,
-                fuse_expand=fuse,
+                fuse_expand=fuse, approx="pq" if use_pq else "exact",
             )
-            res = constrained_search(corpus, graph, qs, cons, params)
+            res = constrained_search(
+                corpus, graph, qs, cons, params,
+                pq_index=pq_index if use_pq else None,
+            )
             jax.block_until_ready(res.dists)
             t0 = time.perf_counter()
-            res = constrained_search(corpus, graph, qs, cons, params)
+            res = constrained_search(
+                corpus, graph, qs, cons, params,
+                pq_index=pq_index if use_pq else None,
+            )
             jax.block_until_ready(res.dists)
             dt = time.perf_counter() - t0
             rec = {
                 "suite": "fused",
                 "bench": "end_to_end",
+                "backend": backend,
                 "batch": b,
                 "fuse_expand": fuse,
                 "qps": round(b / dt, 1),
@@ -207,43 +271,83 @@ def main(out) -> None:
             }
             out(json.dumps(rec))
             results.append(rec)
+        pq_backend = None
+        if use_pq:
+            pq_backend = PQBackend(
+                codes=pq_index.codes, lut=adc_table(pq_index, qs)
+            )
         for beam in beams:
-            _microbench(out, results, b, beam, corpus, graph, qs, cons)
+            _microbench(
+                out, results, b, beam, corpus, graph, qs, cons,
+                pq_backend=pq_backend,
+            )
 
     if not smoke:
+        artifact = "BENCH_PR3.json" if use_pq else "BENCH_PR2.json"
         path = os.path.join(
             os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-            "BENCH_PR2.json",
+            artifact,
         )
-        with open(path, "w") as fh:
-            json.dump(
-                {
-                    "issue": "PR2 fused constrained-expansion pipeline",
-                    "host": "single-core CPU container (kernels: jnp ref "
-                            "path; TPU numbers need hardware)",
-                    "corpus": {"n": n, "d": corpus.dim, "degree": graph.degree},
-                    "notes": [
-                        "candidate_pipeline = standalone per-iteration "
-                        "cost on dense-random queues (data-independent); "
-                        "the >=1.5x acceptance target is met there on the "
-                        "paper's iteration shape (beam=1, M=16: 2.4-2.7x) "
-                        "and narrows to ~1.3x at M=64",
-                        "end_to_end fuse_expand=on trails by ~8% on this "
-                        "host: inside lax.while_loop XLA:CPU gives "
-                        "queue_push's native TopK donated-buffer reuse "
-                        "and its cost is data-dependent (cheap on "
-                        "inf-padded queues), while the merge network pays "
-                        "per-iteration copies — which is why "
-                        "fuse_expand=auto resolves to unfused off-TPU "
-                        "(EXPERIMENTS.md §Perf PR2)",
-                    ],
-                    "results": results,
-                },
-                fh, indent=2,
+        meta = {
+            "issue": (
+                "PR3 fused ADC traversal (TraversalContext backends)"
+                if use_pq
+                else "PR2 fused constrained-expansion pipeline"
+            ),
+            "host": "single-core CPU container (kernels: jnp ref "
+                    "path; TPU numbers need hardware)",
+            "corpus": {"n": n, "d": corpus.dim, "degree": graph.degree},
+            "results": results,
+        }
+        if use_pq:
+            meta["corpus"].update(
+                m_sub=int(pq_index.codes.shape[1]),
+                n_cent=int(pq_index.codebooks.shape[1]),
             )
+            meta["notes"] = [
+                "candidate_pipeline = standalone per-iteration cost on "
+                "dense-random queues; the fused ADC pass folds the "
+                "constraint + visited gathers into the code-row visit "
+                "exactly as the exact kernel does for vector rows",
+                "hbm model: the PQ payload is 4*m_sub code bytes vs "
+                "4*d row bytes — the code-vs-row gather ratio is the "
+                "TPU-side win (32x at d=128/m_sub=16 with int8 codes; "
+                "d/m_sub with the int32 codes stored here)",
+                "end_to_end on this host routes through the jnp ref "
+                "path (interpret-mode Pallas is test-only); fused vs "
+                "unfused results are bit-identical by construction "
+                "(tests/test_fused_expand.py PQ system tests)",
+            ]
+        else:
+            meta["notes"] = [
+                "candidate_pipeline = standalone per-iteration "
+                "cost on dense-random queues (data-independent); "
+                "the >=1.5x acceptance target is met there on the "
+                "paper's iteration shape (beam=1, M=16: 2.4-2.7x) "
+                "and narrows to ~1.3x at M=64",
+                "end_to_end fuse_expand=on trails by ~8% on this "
+                "host: inside lax.while_loop XLA:CPU gives "
+                "queue_push's native TopK donated-buffer reuse "
+                "and its cost is data-dependent (cheap on "
+                "inf-padded queues), while the merge network pays "
+                "per-iteration copies — which is why "
+                "fuse_expand=auto resolves to unfused off-TPU "
+                "(EXPERIMENTS.md §Perf PR2)",
+            ]
+        with open(path, "w") as fh:
+            json.dump(meta, fh, indent=2)
             fh.write("\n")
         out(json.dumps({"suite": "fused", "bench": "artifact", "wrote": path}))
 
 
 if __name__ == "__main__":
-    main(print)
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--backend", default="exact", choices=("exact", "pq"),
+        help="distance backend to measure: exact rows (BENCH_PR2.json) or "
+        "PQ/ADC codes (BENCH_PR3.json)",
+    )
+    cli = ap.parse_args()
+    main(print, backend=cli.backend)

@@ -25,8 +25,9 @@ def main() -> None:
         action="store_true",
         help="tiny shapes + interpret-mode kernels for the suites that "
         "support it (currently: fused) — the CI mode exercising the fused "
-        "pipeline incl. the Pallas kernel in seconds, without writing "
-        "BENCH_*.json artifacts; other suites ignore the flag",
+        "pipeline incl. BOTH Pallas kernels (exact rows and PQ/ADC code "
+        "rows) in seconds, without writing BENCH_*.json artifacts; other "
+        "suites ignore the flag",
     )
     args = ap.parse_args()
     selected = set(filter(None, args.only.split(",")))
@@ -56,8 +57,10 @@ def main() -> None:
         # bench_beam emits one JSON line per (constraint, mode, beam_width)
         # config — machine-readable for BENCH_*.json speedup trajectories.
         "beam": bench_beam.main,
-        # bench_fused compares the fused candidate pipeline (ISSUE 2)
-        # against the unfused path and writes top-level BENCH_PR2.json.
+        # bench_fused compares the fused candidate pipeline (ISSUE 2/3)
+        # against the unfused path and writes top-level BENCH_PR2.json
+        # (exact backend; `--backend pq` standalone writes BENCH_PR3.json).
+        # In smoke mode it exercises both interpret kernels regardless.
         "fused": bench_fused.main,
     }
     print("name,us_per_call,derived")

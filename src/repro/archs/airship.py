@@ -49,6 +49,10 @@ AIRSHIP_SHAPES: Dict[str, dict] = {
     # PR2). "auto" would enable it on TPU anyway; the explicit shape keeps
     # the fused path dry-runnable and cost-model-visible on any backend.
     "serve_256_fused": dict(kind="serve", batch=256, fuse="on"),
+    # PR3 fused ADC traversal: PQBackend through the fused pipeline — code
+    # rows (m_sub words/candidate) stream through the same double-buffered
+    # DMA as exact rows, LUT sums in-kernel (EXPERIMENTS.md §Perf PR3).
+    "serve_256_pq_fused": dict(kind="serve", batch=256, pq=True, fuse="on"),
 }
 
 
@@ -98,7 +102,7 @@ class AirshipArch(Arch):
         if sh.get("fuse"):
             params = dataclasses.replace(params, fuse_expand=sh["fuse"])
         search = make_distributed_search(
-            mi.mesh, params, batch_axes=mi.dp_axes, with_pq=use_pq
+            mi.mesh, params, batch_axes=mi.dp_axes
         )
         cspec = P(mi.tp_axis)
         bspec = mi.axes_if_divisible(b, mi.dp_axes)
@@ -110,9 +114,9 @@ class AirshipArch(Arch):
             LabelSetConstraint(words=P(bspec, None)),
         )
         if use_pq:
-            from repro.core.pq import PQIndex
+            from repro.core.pq import PQIndex, default_m_sub
 
-            m_sub = 16 if cfg.dim % 16 == 0 else 8
+            m_sub = default_m_sub(cfg.dim)
             pq_abs = PQIndex(
                 codebooks=jax.ShapeDtypeStruct((m_sub, 256, cfg.dim // m_sub), f32),
                 codes=jax.ShapeDtypeStruct((n, m_sub), i32),

@@ -20,7 +20,15 @@ from repro.core.distributed import make_distributed_search, shard_corpus_for_mes
 from repro.core.exact import exact_constrained_search, recall
 from repro.core.pipeline import three_stage_pipeline
 from repro.core.pq import PQIndex, pq_constrained_search, pq_train
-from repro.core.search import constrained_search
+from repro.core.search import (
+    ExactBackend,
+    L2KernelBackend,
+    PQBackend,
+    TraversalContext,
+    build_context,
+    constrained_search,
+    search_with_context,
+)
 from repro.core.types import (
     Corpus,
     GraphIndex,
@@ -32,13 +40,18 @@ from repro.core.types import (
 __all__ = [
     "ConstraintTables",
     "Corpus",
+    "ExactBackend",
     "GraphIndex",
+    "L2KernelBackend",
     "LabelSetConstraint",
+    "PQBackend",
     "PQIndex",
     "RangeConstraint",
     "SearchParams",
     "SearchResult",
     "SearchStats",
+    "TraversalContext",
+    "build_context",
     "constrained_search",
     "constraint_tables",
     "equal_constraint",
@@ -50,6 +63,7 @@ __all__ = [
     "pq_constrained_search",
     "pq_train",
     "recall",
+    "search_with_context",
     "selectivity",
     "shard_corpus_for_mesh",
     "three_stage_pipeline",

@@ -6,18 +6,24 @@ Layout (see DESIGN.md §4):
     ids are local),
   * the query batch is sharded over the ``data`` (and optionally ``pod``)
     axes and replicated within each model group,
-  * every shard runs the full AIRSHIP search on its rows, then the global
-    top-k is one `all_gather(K)` + local merge per batch — the only
+  * every shard builds its own ``TraversalContext`` — the distance backend's
+    arrays (corpus rows, or PQ codes + per-query LUT) shard with the corpus
+    rows; the per-query constraint operand shards with the batch — runs the
+    full AIRSHIP search on its rows via ``search_with_context``, then the
+    global top-k is one `all_gather(K)` + local merge per batch — the only
     collective on the serving path.
 
 This is the standard production layout for distributed graph-ANN (per-shard
 indexes + result merge); it keeps the graph walk entirely local so no
-pointer-chasing ever crosses the interconnect.
+pointer-chasing ever crosses the interconnect. Backend sharding is generic:
+``params.approx`` decides which backend payload rides along (the PQ code
+matrix row-shards exactly like the vectors; codebooks replicate), with no
+per-backend special cases in the search body.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -25,8 +31,9 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.common.compat import shard_map
-from repro.core.constraints import LabelSetConstraint
-from repro.core.search import constrained_search
+from repro.core.constraints import LabelSetConstraint, RangeConstraint
+from repro.core.engine.context import build_context
+from repro.core.engine.loop import search_with_context
 from repro.core.types import Corpus, GraphIndex, SearchParams, SearchResult, SearchStats
 
 Array = jax.Array
@@ -42,40 +49,78 @@ def merge_topk(dists: Array, ids: Array, k: int) -> tuple[Array, Array]:
     return -neg, jnp.where(jnp.isfinite(-neg), out_i, -1)
 
 
+def constraint_in_spec(constraint_type: type, batch_axes: Sequence[str]):
+    """Per-family shard_map in_spec: per-query operands shard with the batch.
+
+    Registry-style so new data-constraint families extend the sharded path
+    by adding one entry (UDF closures are static code, not shardable data —
+    they cannot cross shard_map as an argument).
+    """
+    batch_axes = tuple(batch_axes)
+    if constraint_type is LabelSetConstraint:
+        return LabelSetConstraint(words=P(batch_axes, None))
+    if constraint_type is RangeConstraint:
+        return RangeConstraint(lo=P(batch_axes), hi=P(batch_axes), col=P())
+    raise TypeError(
+        f"no sharded in_spec for constraint type {constraint_type!r}; "
+        "register it in core.distributed.constraint_in_spec"
+    )
+
+
+def backend_in_specs(params: SearchParams, corpus_axis: str) -> tuple:
+    """Extra in_specs for the distance backend's payload, from params.approx.
+
+    Exact / L2-kernel backends score the corpus rows already sharded by the
+    corpus spec — no extra payload. PQ adds the code matrix (row-sharded
+    like the vectors) + replicated codebooks; the per-query LUT is built
+    per shard inside ``build_context``.
+    """
+    if params.approx == "pq":
+        from repro.core.pq import PQIndex
+
+        return (PQIndex(codebooks=P(), codes=P(corpus_axis)),)
+    return ()
+
+
 def make_distributed_search(
     mesh: Mesh,
     params: SearchParams,
     *,
     corpus_axis: str = "model",
     batch_axes: Sequence[str] = ("data",),
-    with_pq: bool = False,
+    constraint_type: type = LabelSetConstraint,
+    with_attrs: Optional[bool] = None,
 ):
     """Build a jitted distributed search fn for a given mesh.
 
     The returned fn takes (corpus, graph, queries, constraint[, pq_index])
     where corpus / graph hold the *global* arrays (sharded row-wise over
     ``corpus_axis``; neighbor ids are shard-local) and queries / constraint
-    are batch-sharded. With ``with_pq`` (params.approx == "pq"), the PQ code
-    matrix shards with the corpus rows and codebooks replicate.
+    are batch-sharded. ``constraint_type`` selects the constraint family's
+    in_spec (LabelSet by default; Range shards [lo, hi] with the batch and
+    needs the attrs column, so ``with_attrs`` defaults to True for it).
+    With ``params.approx == "pq"`` the PQ code matrix shards with the
+    corpus rows and codebooks replicate — pass the PQIndex as the trailing
+    argument.
     """
     batch_axes = tuple(batch_axes)
+    if with_attrs is None:
+        with_attrs = constraint_type is RangeConstraint
     corpus_spec = P(corpus_axis)
-    batch_spec = P(batch_axes)
 
     in_specs = (
-        Corpus(vectors=corpus_spec, labels=corpus_spec, attrs=None),
+        Corpus(
+            vectors=corpus_spec,
+            labels=corpus_spec,
+            attrs=corpus_spec if with_attrs else None,
+        ),
         GraphIndex(
             neighbors=corpus_spec, sample_ids=corpus_spec, entry_point=corpus_spec
         ),
         P(batch_axes, None),  # queries
-        LabelSetConstraint(words=P(batch_axes, None)),
+        constraint_in_spec(constraint_type, batch_axes),
     )
-    if with_pq:
-        from repro.core.pq import PQIndex
-
-        in_specs = in_specs + (
-            PQIndex(codebooks=P(), codes=corpus_spec),
-        )
+    in_specs = in_specs + backend_in_specs(params, corpus_axis)
     out_specs = SearchResult(
         dists=P(batch_axes, None),
         ids=P(batch_axes, None),
@@ -88,13 +133,17 @@ def make_distributed_search(
         ),
     )
 
-    def shard_fn(corpus, graph, queries, constraint, *pq):
+    def shard_fn(corpus, graph, queries, constraint, *backend_args):
         n_local = corpus.vectors.shape[0]
         shard = jax.lax.axis_index(corpus_axis)
-        res = constrained_search(
-            corpus, graph, queries, constraint, params,
-            pq_index=pq[0] if pq else None,
+        # Per-shard context: the backend holds this shard's rows (or codes
+        # + the local batch's LUT); the constraint closure closes over this
+        # shard's metadata columns.
+        ctx = build_context(
+            corpus, constraint, queries, params,
+            pq_index=backend_args[0] if backend_args else None,
         )
+        res = search_with_context(ctx, corpus, graph, queries, params)
         # Local ids -> global ids (row-sharded partition => offset).
         gids = jnp.where(res.ids >= 0, res.ids + shard * n_local, -1)
         # One collective: gather every shard's K best, merge locally.
@@ -123,13 +172,15 @@ def shard_corpus_for_mesh(
 ):
     """Device-put global arrays with the row-sharded layout expected above."""
     cspec = NamedSharding(mesh, P(corpus_axis))
-    rep = NamedSharding(mesh, P())
     corpus_s = Corpus(
         vectors=jax.device_put(corpus.vectors, cspec),
         labels=jax.device_put(corpus.labels, cspec),
-        attrs=None,
+        attrs=(
+            jax.device_put(corpus.attrs, cspec)
+            if corpus.attrs is not None
+            else None
+        ),
     )
-    del rep
     graph_s = GraphIndex(
         neighbors=jax.device_put(graph.neighbors, cspec),
         sample_ids=jax.device_put(graph.sample_ids, cspec),

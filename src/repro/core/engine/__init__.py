@@ -1,19 +1,36 @@
-# Beam-parallel traversal engine (DESIGN.md §5): three separable layers.
-#   policy.py — frontier selection (vanilla/start/alter/prefer as functions)
-#   expand.py — beam pop + one flattened (B, beam*deg) gather+distance
-#   loop.py   — compiled lock-step while_loop: state, termination, stats
+# Beam-parallel traversal engine (DESIGN.md §5/§6): four separable layers.
+#   context.py — TraversalContext: distance backend (Exact/L2Kernel/PQ) +
+#                constraint closure/tables + fuse decision, built once
+#   policy.py  — frontier selection (vanilla/start/alter/prefer as functions)
+#   expand.py  — beam pop + one flattened (B, beam*deg) backend gather
+#   loop.py    — compiled lock-step while_loop: state, termination, stats
 # `constrained_search` is the single entry point; repro.core.search re-exports
 # it so existing callers (pipeline, distributed, archs, examples) are
-# untouched. Future sharded / async serving PRs plug in at this seam.
+# untouched. The distributed layer builds per-shard contexts and enters at
+# `search_with_context` (core/distributed.py).
+from repro.core.engine.context import (
+    FUSE_AUTO_ON_TPU,
+    DistanceBackend,
+    ExactBackend,
+    L2KernelBackend,
+    PQBackend,
+    TraversalContext,
+    build_context,
+    resolve_auto_fuse,
+)
 from repro.core.engine.expand import (
     expand_beam,
     expand_beam_fused,
     mask_first_occurrence,
     mask_first_occurrence_sorted,
-    neighbor_distances,
     pop_frontier_beam,
 )
-from repro.core.engine.loop import TraversalState, constrained_search, seed_state
+from repro.core.engine.loop import (
+    TraversalState,
+    constrained_search,
+    search_with_context,
+    seed_state,
+)
 from repro.core.engine.policy import (
     POLICIES,
     FrontierPolicy,
@@ -25,9 +42,16 @@ from repro.core.engine.policy import (
 )
 
 __all__ = [
+    "FUSE_AUTO_ON_TPU",
     "POLICIES",
+    "DistanceBackend",
+    "ExactBackend",
     "FrontierPolicy",
+    "L2KernelBackend",
+    "PQBackend",
+    "TraversalContext",
     "TraversalState",
+    "build_context",
     "constrained_search",
     "expand_beam",
     "expand_beam_fused",
@@ -35,10 +59,11 @@ __all__ = [
     "is_two_queue",
     "mask_first_occurrence",
     "mask_first_occurrence_sorted",
-    "neighbor_distances",
     "pop_frontier_beam",
     "prefer_policy",
     "ratio_policy",
+    "resolve_auto_fuse",
+    "search_with_context",
     "seed_state",
     "single_queue_policy",
 ]

@@ -5,12 +5,13 @@ so every iteration fed the fused gather+distance path only ``deg``
 candidates. Here each iteration pops up to ``beam_width`` vertices per
 query (``pop_frontier_beam``) and flattens their adjacency into ONE
 ``(B, beam*deg)`` candidate gather (``expand_beam``) through whichever
-distance path is active — jnp fallback, the Pallas ``gather_distance``
-kernel, or PQ/ADC lookup; ``expand_beam_fused`` additionally folds the
-constraint and visited checks into the same pass (kernels/fused_expand/,
-DESIGN.md §6). ``beam_width=1`` reproduces the seed computation
-exactly; wider beams trade per-slot threshold staleness for beam-times
-fewer lock-step iterations (DESIGN.md §5).
+``DistanceBackend`` the ``TraversalContext`` carries — exact rows, the
+Pallas ``gather_distance`` kernel, or PQ/ADC lookup (engine/context.py);
+``expand_beam_fused`` additionally folds the constraint and visited checks
+into the backend's one-pass kernel (kernels/fused_expand/, DESIGN.md §6).
+``beam_width=1`` reproduces the seed computation exactly; wider beams trade
+per-slot threshold staleness for beam-times fewer lock-step iterations
+(DESIGN.md §5).
 
 Correctness note: two vertices popped in the same beam may share an
 unvisited neighbor, so the flattened id list can contain duplicates. The
@@ -21,50 +22,17 @@ core/visited.py) and the frontiers must not hold a vertex twice, so
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.common.distances import batched_rowwise_sqdist
 from repro.core import queue as q
 from repro.core import visited as vis
+from repro.core.engine.context import TraversalContext
 from repro.core.engine.policy import get_policy, is_two_queue
 
 Array = jax.Array
-
-
-def neighbor_distances(
-    queries: Array,
-    corpus_vectors: Array,
-    nbrs: Array,
-    use_kernel: bool,
-    pq_codes: Optional[Array] = None,
-    lut: Optional[Array] = None,
-) -> Array:
-    """(B, d) x (n, d) x (B, M) ids -> (B, M) squared distances.
-
-    With (pq_codes, lut) set, distances are PQ/ADC approximations: gather
-    m_sub code bytes per candidate instead of d floats (32x fewer HBM bytes
-    at d=128, m_sub=16) and sum per-subspace LUT entries.
-    """
-    if lut is not None:
-        safe = jnp.maximum(nbrs, 0)
-        codes = pq_codes[safe]  # (B, M, m_sub)
-        # d[b,m] = sum_s lut[b, s, codes[b,m,s]]
-        gathered = jnp.take_along_axis(
-            lut[:, None, :, :],  # (B, 1, m_sub, n_cent)
-            codes[..., None],  # (B, M, m_sub, 1)
-            axis=-1,
-        )[..., 0]
-        return jnp.sum(gathered, axis=-1)
-    if use_kernel:
-        from repro.kernels.gather_distance.ops import gather_distance
-
-        return gather_distance(queries, corpus_vectors, nbrs)
-    safe = jnp.maximum(nbrs, 0)
-    rows = corpus_vectors[safe]  # (B, M, d)
-    return batched_rowwise_sqdist(queries, rows)
 
 
 def mask_first_occurrence(ids: Array, valid: Array) -> Array:
@@ -203,20 +171,17 @@ def pop_frontier_beam(
 def expand_beam(
     neighbors: Array,
     queries: Array,
-    corpus_vectors: Array,
     now_i: Array,
     expand: Array,
     visited: Array,
-    use_kernel: bool,
-    pq_codes: Optional[Array] = None,
-    lut: Optional[Array] = None,
+    ctx: TraversalContext,
 ) -> Tuple[Array, Array, Array]:
     """Flatten the beam's adjacency into one (B, beam*deg) candidate batch.
 
     now_i/expand: (B, W). Returns (nbrs (B, W*deg) ids, d_nb (B, W*deg)
     distances, fresh (B, W*deg) push mask — valid, unvisited, first
-    occurrence). One fused gather+distance call per iteration regardless
-    of beam width is the whole point: the kernel sees W*deg candidates.
+    occurrence). One backend gather+distance call per iteration regardless
+    of beam width is the whole point: ``ctx.backend`` sees W*deg candidates.
     """
     b, w = now_i.shape
     deg = neighbors.shape[-1]
@@ -226,43 +191,36 @@ def expand_beam(
     fresh = nb_valid & ~vis.visited_test(visited, nbrs)
     if w > 1:
         fresh = mask_first_occurrence(nbrs, fresh)
-    d_nb = neighbor_distances(
-        queries, corpus_vectors, nbrs, use_kernel, pq_codes, lut
-    )
+    d_nb = ctx.backend.distances(queries, nbrs)
     return nbrs, d_nb, fresh
 
 
 def expand_beam_fused(
     neighbors: Array,
     queries: Array,
-    corpus_vectors: Array,
     now_i: Array,
     expand: Array,
     visited: Array,
-    tables,
+    ctx: TraversalContext,
 ) -> Tuple[Array, Array, Array, Array]:
     """Fused-pipeline twin of ``expand_beam`` (kernels/fused_expand/).
 
-    One pass emits distances, constraint verdicts, and visited-freshness for
-    the whole (B, beam*deg) candidate batch — the separate ``satisfied()``
-    metadata gather and ``visited_test`` probes of the unfused path fold into
-    the same per-candidate HBM visit as the row gather. ``tables`` is the
-    constraint's raw view (core.constraints.constraint_tables). Non-expanding
-    slots are pre-masked to padding ids so the kernel sees one uniform
-    validity rule. Returns (nbrs, d_nb, sat, fresh); ``sat`` covers every
-    valid candidate and is masked by ``fresh`` at the push site.
+    One backend pass emits distances, constraint verdicts, and visited-
+    freshness for the whole (B, beam*deg) candidate batch — the separate
+    ``satisfied()`` metadata gather and ``visited_test`` probes of the
+    unfused path fold into the same per-candidate HBM visit as the row (or
+    PQ code-row) gather. ``ctx.tables`` is the constraint's raw view
+    (core.constraints.constraint_tables). Non-expanding slots are
+    pre-masked to padding ids so the kernel sees one uniform validity rule.
+    Returns (nbrs, d_nb, sat, fresh); ``sat`` covers every valid candidate
+    and is masked by ``fresh`` at the push site.
     """
-    from repro.kernels.fused_expand.ops import fused_expand
-
     b, w = now_i.shape
     deg = neighbors.shape[-1]
     safe = jnp.maximum(now_i, 0)
     nbrs = neighbors[safe].reshape(b, w * deg)
     nbrs = jnp.where(jnp.repeat(expand, deg, axis=-1), nbrs, -1)
-    d_nb, sat, fresh = fused_expand(
-        queries, corpus_vectors, nbrs, visited,
-        tables.meta, tables.cons, family=tables.family,
-    )
+    d_nb, sat, fresh = ctx.backend.fused_expand(queries, nbrs, visited, ctx.tables)
     if w > 1:
         fresh = mask_first_occurrence(nbrs, fresh)
     return nbrs, d_nb, sat, fresh

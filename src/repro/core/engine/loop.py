@@ -1,11 +1,18 @@
 """The compiled traversal loop: state, termination, stats (DESIGN.md §5).
 
 One `lax.while_loop` advances the whole query batch in lock-step. Each
-iteration delegates to the two sibling layers — ``policy`` decides which
+iteration delegates to the sibling layers — ``policy`` decides which
 frontier feeds each beam slot, ``expand`` pops the beam and performs the
-single flattened gather+distance — and this module owns everything that
+single flattened gather+distance through the ``TraversalContext``'s
+distance backend (``context.py``) — and this module owns everything that
 survives between iterations: queue/bitset state, the per-query done masks,
 the Alg. 1/2 threshold termination, and the instrumentation counters.
+
+``constrained_search`` is the jitted public entry: it resolves the
+(params, constraint, corpus) triple into ONE ``TraversalContext`` via
+``build_context`` and hands it to ``search_with_context`` — the
+context-level entry the distributed layer calls directly with per-shard
+contexts (core/distributed.py).
 """
 from __future__ import annotations
 
@@ -15,16 +22,18 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.common.distances import squared_l2
 from repro.common.pytree import pytree_dataclass
 from repro.core import queue as q
 from repro.core import visited as vis
 from repro.core.alter_ratio import estimate_alter_ratio
-from repro.core.constraints import constraint_tables, make_satisfied_fn
+from repro.core.engine.context import (
+    ExactBackend,
+    TraversalContext,
+    build_context,
+)
 from repro.core.engine.expand import (
     expand_beam,
     expand_beam_fused,
-    neighbor_distances,
     pop_frontier_beam,
 )
 from repro.core.engine.policy import is_two_queue
@@ -37,33 +46,6 @@ from repro.core.types import (
 )
 
 Array = jax.Array
-
-
-# Flip to True once the fused kernel has been validated under compiled
-# Mosaic lowering on real hardware (the per-candidate scalar stores and
-# narrow metadata DMAs have only ever run in interpret mode on this
-# container). Until then "auto" never routes a default search through an
-# unproven compile path; the fused pipeline is opt-in via fuse_expand="on".
-FUSE_AUTO_ON_TPU = False
-
-
-def resolve_auto_fuse(fusable: bool, backend: str) -> bool:
-    """fuse_expand == "auto" policy: where does fusing actually win?
-
-    Both paths return bit-identical results (system-tested); the choice is
-    purely physical. On TPU the fused kernel eliminates the separate
-    metadata/visited HBM round trips and the windowed sorted merges are
-    plain VPU work — that is where auto is meant to fuse, gated on
-    ``FUSE_AUTO_ON_TPU`` until hardware validation. On XLA:CPU,
-    measurement says fusing loses: the native TopK a ``queue_push``
-    lowers to is data-dependent (fast on the inf-padded queues real
-    traversals carry) and keeps donated-buffer reuse inside
-    ``lax.while_loop``, while the merge's compare-exchange chain forces
-    per-iteration copies — standalone the merge wins 2–3.5x, in-loop it
-    loses ~2x (EXPERIMENTS.md §Perf PR2). So auto only fuses where the
-    memory system, not the op dispatcher, is the bottleneck.
-    """
-    return fusable and backend == "tpu" and FUSE_AUTO_ON_TPU
 
 
 @pytree_dataclass
@@ -85,11 +67,9 @@ def seed_state(
     corpus: Corpus,
     graph: GraphIndex,
     queries: Array,
-    satisfied,
+    ctx: TraversalContext,
     params: SearchParams,
     rng: Optional[Array],
-    pq_codes: Optional[Array] = None,
-    lut: Optional[Array] = None,
 ) -> tuple[TraversalState, Array]:
     """Initialize queues/visited per mode; returns (state, alter_ratio (B,))."""
     b = queries.shape[0]
@@ -113,9 +93,7 @@ def seed_state(
         entry = jax.random.randint(rng, (b,), 0, n, dtype=jnp.int32)
     else:
         entry = jnp.broadcast_to(graph.entry_point.astype(jnp.int32), (b,))
-    d_entry = neighbor_distances(
-        queries, corpus.vectors, entry[:, None], params.use_kernel, pq_codes, lut
-    )  # (B, 1)
+    d_entry = ctx.backend.distances(queries, entry[:, None])  # (B, 1)
     state = state.replace(
         oth=q.queue_push(state.oth, d_entry, entry[:, None], jnp.ones((b, 1), bool)),
         visited=vis.visited_set(state.visited, entry[:, None], jnp.ones((b, 1), bool)),
@@ -127,13 +105,7 @@ def seed_state(
     sample = graph.sample_ids  # (S,)
     s = sample.shape[0]
     sample_ids_b = jnp.broadcast_to(sample[None, :], (b, s))
-    if lut is not None:
-        d_sample = neighbor_distances(
-            queries, corpus.vectors, sample_ids_b, False, pq_codes, lut
-        )
-    else:
-        sample_vecs = corpus.vectors[sample]  # (S, d)
-        d_sample = squared_l2(queries, sample_vecs)  # (B, S)
+    d_sample = ctx.backend.sample_distances(queries, sample)  # (B, S)
 
     if params.mode == "vanilla":
         # Flat kNN graphs lack HNSW's hierarchy for long-range navigation;
@@ -153,7 +125,7 @@ def seed_state(
         return state, ratio
 
     # --- AIRSHIP-Start: filter the pre-drawn sample by the constraint -------
-    sample_sat = satisfied(sample_ids_b)  # (B, S)
+    sample_sat = ctx.satisfied(sample_ids_b)  # (B, S)
     d_masked = jnp.where(sample_sat, d_sample, jnp.inf)
 
     n_start = min(params.n_start, s)
@@ -174,7 +146,7 @@ def seed_state(
 
     if params.mode in ("alter", "prefer") and params.alter_ratio is None:
         ratio = estimate_alter_ratio(
-            graph, satisfied, sample_sat, params.alter_ratio_k
+            graph, ctx.satisfied, sample_sat, params.alter_ratio_k
         )
     return state, ratio
 
@@ -199,62 +171,42 @@ def constrained_search(
     model (core/constraints.py).
 
     With params.approx == "pq", ``pq_index`` (core.pq.PQIndex) drives the
-    traversal with ADC distances; the ef_result survivors are re-ranked
-    exactly before the final top-k (beyond-paper, EXPERIMENTS.md §Perf D4).
+    traversal with ADC distances (``PQBackend``); the ef_result survivors
+    are re-ranked exactly before the final top-k (beyond-paper,
+    EXPERIMENTS.md §Perf D4).
 
     With params.beam_width > 1, each iteration expands up to ``beam_width``
     vertices per query through one flattened (B, beam*deg) gather; the
     termination threshold is evaluated against the top-k list as of the
     start of the iteration (beam lock-step semantics, DESIGN.md §5).
 
-    With the fused candidate pipeline active (params.fuse_expand, default
-    auto-on for LabelSet/Range + exact distances), each iteration runs
-    gather + distance + constraint + visited masking as ONE pass
-    (kernels/fused_expand/) and updates every queue by sorted merge instead
-    of top_k re-selection (EXPERIMENTS.md §Perf PR2).
+    With the fused candidate pipeline active (params.fuse_expand), each
+    iteration runs gather + distance + constraint + visited masking as ONE
+    pass through the backend's fused kernel (kernels/fused_expand/ — exact
+    rows or PQ code rows + in-kernel ADC sums) and updates every queue by
+    sorted merge instead of top_k re-selection (EXPERIMENTS.md §Perf PR2).
     """
     impl = _search_static_constraint if callable(constraint) else _search
     return impl(corpus, graph, queries, constraint, params, rng, pq_index)
 
 
-def _constrained_search_impl(
+def search_with_context(
+    ctx: TraversalContext,
     corpus: Corpus,
     graph: GraphIndex,
     queries: Array,
-    constraint,
     params: SearchParams,
     rng: Optional[Array] = None,
-    pq_index=None,
 ) -> SearchResult:
-    satisfied = make_satisfied_fn(constraint, corpus)
-    # --- fused candidate pipeline (kernels/fused_expand/) -------------------
-    # The kernel evaluates LabelSet/Range constraints against the raw corpus
-    # tables in the same pass as the row gather; UDF closures and PQ/ADC
-    # traversal (approximate distances) stay on the unfused path.
-    tables = constraint_tables(constraint, corpus)
-    fusable = tables is not None and params.approx == "exact"
-    if params.fuse_expand == "on" and not fusable:
-        raise ValueError(
-            "fuse_expand='on' requires a LabelSet/Range constraint and "
-            "approx='exact' (UDF and PQ traversal are unfused)"
-        )
-    fuse = params.fuse_expand == "on" or (
-        params.fuse_expand == "auto"
-        and resolve_auto_fuse(fusable, jax.default_backend())
-    )
-    if params.approx == "pq":
-        if pq_index is None:
-            raise ValueError("approx='pq' requires pq_index")
-        from repro.core.pq import adc_table
+    """Run the traversal loop against an already-built ``TraversalContext``.
 
-        pq_codes = pq_index.codes
-        lut = adc_table(pq_index, queries)
-    else:
-        pq_codes = lut = None
-    state, ratio = seed_state(
-        corpus, graph, queries, satisfied, params, rng, pq_codes, lut
-    )
+    The context-level entry point: ``constrained_search`` builds the
+    context from user-facing knobs and delegates here; the distributed
+    layer (core/distributed.py) builds one context per shard — backend
+    arrays sharded with the corpus rows — and calls this directly.
+    """
     two_queue = is_two_queue(params.mode)
+    state, ratio = seed_state(corpus, graph, queries, ctx, params, rng)
 
     def cond(st: TraversalState) -> Array:
         return jnp.any(~st.done) & (st.iters < params.max_iters)
@@ -276,18 +228,17 @@ def _constrained_search_impl(
             # the sat frontier only ever holds satisfied vertices.
             upd = expand & sel_sat
         else:
-            upd = expand & satisfied(now_i)
+            upd = expand & ctx.satisfied(now_i)
 
         # --- one flattened (B, beam*deg) expansion ---------------------------
-        if fuse:
+        if ctx.fuse:
             # Fused pipeline: distances, constraint verdicts, and freshness
             # in one pass; then ONE bitonic partition-sort of the candidate
             # batch feeds every frontier via windowed sorted merges
             # (queue_merge_sorted) — no top_k(C+M) re-selection anywhere in
             # the iteration (EXPERIMENTS.md §Perf PR2).
             nbrs, d_nb, nb_sat_all, fresh = expand_beam_fused(
-                graph.neighbors, queries, corpus.vectors, now_i, expand,
-                st.visited, tables,
+                graph.neighbors, queries, now_i, expand, st.visited, ctx,
             )
             m = nbrs.shape[-1]
             if two_queue:
@@ -310,11 +261,10 @@ def _constrained_search_impl(
         else:
             topk = q.queue_push(st.topk, now_d, now_i, upd)
             nbrs, d_nb, fresh = expand_beam(
-                graph.neighbors, queries, corpus.vectors, now_i, expand,
-                st.visited, params.use_kernel, pq_codes, lut,
+                graph.neighbors, queries, now_i, expand, st.visited, ctx,
             )
             if two_queue:
-                nb_sat = satisfied(nbrs) & fresh
+                nb_sat = ctx.satisfied(nbrs) & fresh
                 sat = q.queue_push(sat, d_nb, nbrs, nb_sat)
                 oth = q.queue_push(oth, d_nb, nbrs, fresh & ~nb_sat)
             else:
@@ -343,10 +293,10 @@ def _constrained_search_impl(
         beam_expansions=final.beam_expanded,
     )
     out_d, out_i = final.topk.dists, final.topk.ids
-    if params.approx == "pq":
-        # Exact re-rank of the ef_result survivors (ADC ordered the walk;
-        # exact distances order the answer).
-        exact_d = neighbor_distances(queries, corpus.vectors, out_i, False)
+    if ctx.backend.approximate:
+        # Exact re-rank of the ef_result survivors (the approximate backend
+        # ordered the walk; exact distances order the answer).
+        exact_d = ExactBackend(vectors=corpus.vectors).distances(queries, out_i)
         exact_d = jnp.where(out_i >= 0, exact_d, jnp.inf)
         order = jnp.argsort(exact_d, axis=-1)
         out_d = jnp.take_along_axis(exact_d, order, axis=-1)
@@ -358,6 +308,19 @@ def _constrained_search_impl(
         ids=out_i[:, : params.k],
         stats=stats,
     )
+
+
+def _constrained_search_impl(
+    corpus: Corpus,
+    graph: GraphIndex,
+    queries: Array,
+    constraint,
+    params: SearchParams,
+    rng: Optional[Array] = None,
+    pq_index=None,
+) -> SearchResult:
+    ctx = build_context(corpus, constraint, queries, params, pq_index)
+    return search_with_context(ctx, corpus, graph, queries, params, rng)
 
 
 _search = partial(jax.jit, static_argnames=("params",))(_constrained_search_impl)

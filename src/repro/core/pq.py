@@ -4,7 +4,12 @@ The paper's PQ baseline does a constrained *linear scan*: every vector's
 constraint is checked, and the surviving vectors are ranked by asymmetric
 distance (ADC) on the quantized codes. The ADC table scan is the hot loop —
 `repro.kernels.pq_adc` provides the Pallas kernel; this module holds codebook
-training, encoding, and the jnp scan used as its oracle.
+training, encoding, and the LUT builder.
+
+The scoring itself lives in ``repro.core.engine.context.PQBackend`` — the
+same (codes, lut) bundle that drives graph traversal when
+``SearchParams.approx == "pq"`` also scores this linear scan
+(``PQBackend.scan_all``), so both consumers share one ADC formula.
 """
 from __future__ import annotations
 
@@ -26,6 +31,19 @@ Array = jax.Array
 class PQIndex:
     codebooks: Array  # (m_sub, n_cent, d_sub) f32
     codes: Array  # (n, m_sub) int32 (values < n_cent)
+
+
+def default_m_sub(d: int, preferred: tuple[int, ...] = (16, 8, 4, 2)) -> int:
+    """Largest conventional subspace count that divides ``d`` (fallback 1).
+
+    ``pq_train`` requires ``d % m_sub == 0``; every call site that picks an
+    m_sub from a dimensionality should go through this so odd dims degrade
+    to coarser (still valid) codes instead of crashing.
+    """
+    for m in preferred:
+        if d % m == 0:
+            return m
+    return 1
 
 
 def pq_train(
@@ -56,13 +74,9 @@ def adc_scan(index: PQIndex, lut: Array, use_kernel: bool = False) -> Array:
         from repro.kernels.pq_adc.ops import pq_adc
 
         return pq_adc(lut, index.codes)
-    # (n, m_sub) codes gather into (B, n, m_sub) then reduce.
-    gathered = jnp.take_along_axis(
-        lut[:, None, :, :],  # (B, 1, m_sub, n_cent)
-        index.codes.T[None, None, :, :].transpose(0, 3, 2, 1),  # (1, n, m_sub, 1)
-        axis=-1,
-    )[..., 0]
-    return jnp.sum(gathered, axis=-1)
+    from repro.core.engine.context import PQBackend
+
+    return PQBackend(codes=index.codes, lut=lut).scan_all()
 
 
 @partial(jax.jit, static_argnames=("k", "use_kernel"))

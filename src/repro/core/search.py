@@ -1,8 +1,8 @@
 """Batched, lock-step constrained proximity-graph search (AIRSHIP core).
 
 Facade over the beam-parallel traversal engine (``repro.core.engine``,
-DESIGN.md §5), which implements the paper's four algorithm variants behind
-one compiled loop:
+DESIGN.md §5/§6), which implements the paper's four algorithm variants
+behind one compiled loop:
 
   * ``vanilla``  — Alg. 1: single frontier, constraint checked on pop.
   * ``start``    — §2.2: + satisfied starting points from the pre-drawn sample.
@@ -13,15 +13,40 @@ one compiled loop:
 
 TPU adaptation (see DESIGN.md §2): fixed-capacity sorted-array queues, bitset
 visited, one `lax.while_loop` over the whole query batch with per-query done
-masks, and a fused gather+distance step (Pallas kernel or jnp fallback) fed
-``beam_width * deg`` candidates per iteration.
+masks, and a fused gather+distance step fed ``beam_width * deg`` candidates
+per iteration.
 
-The engine split (policy / expand / loop) lives in ``core/engine/``; this
-module only re-exports the public entry point so the historical import path
-``repro.core.search.constrained_search`` keeps working.
+Every physical choice — which distance backend scores candidates (exact
+rows, the Pallas gather kernel, or PQ/ADC codes), the constraint closure
+and its raw in-kernel tables, and the fuse decision — is resolved once
+into a ``TraversalContext`` (engine/context.py) and threaded through the
+engine as one argument; ``SearchParams.use_kernel`` / ``approx`` /
+``fuse_expand`` merely select it.
+
+The engine split (context / policy / expand / loop) lives in
+``core/engine/``; this module only re-exports the public entry points so
+the historical import path ``repro.core.search.constrained_search`` keeps
+working.
 """
 from __future__ import annotations
 
-from repro.core.engine.loop import constrained_search
+from repro.core.engine.context import (
+    DistanceBackend,
+    ExactBackend,
+    L2KernelBackend,
+    PQBackend,
+    TraversalContext,
+    build_context,
+)
+from repro.core.engine.loop import constrained_search, search_with_context
 
-__all__ = ["constrained_search"]
+__all__ = [
+    "DistanceBackend",
+    "ExactBackend",
+    "L2KernelBackend",
+    "PQBackend",
+    "TraversalContext",
+    "build_context",
+    "constrained_search",
+    "search_with_context",
+]

@@ -78,21 +78,30 @@ class SearchParams:
     # None -> estimate per-query via the Eq.-1 kNN statistic.
     alter_ratio: Optional[float] = static_field(default=None)
     alter_ratio_k: int = static_field(default=16)
+    # Selects L2KernelBackend (Pallas gather_distance) over ExactBackend
+    # for the unfused distance path; identical mathematics, one HBM visit
+    # per candidate. Backend selection flows through the TraversalContext
+    # (engine/context.py) — no engine layer reads this directly.
     use_kernel: bool = static_field(default=False)
     # Fused candidate pipeline (kernels/fused_expand/): gather + distance +
     # constraint + visited masking in one pass, frontier updates via sorted
     # merges instead of top_k re-selection (engine/loop.py). "auto" targets
     # TPU only — and only for constraint families with in-kernel evaluation
-    # (LabelSet / Range) under exact distances — gated on the hardware-
-    # validation flag FUSE_AUTO_ON_TPU (engine/loop.py::resolve_auto_fuse);
-    # on other backends native top_k wins in-loop so auto stays unfused
-    # (EXPERIMENTS.md §Perf PR2). UDF constraints and PQ/ADC traversal
-    # always take the unfused path; both paths return bit-identical
-    # results, so "on"/"off" are safe to force anywhere.
+    # (LabelSet / Range) — gated on the hardware-validation flag
+    # FUSE_AUTO_ON_TPU (engine/context.py::resolve_auto_fuse); on other
+    # backends native top_k wins in-loop so auto stays unfused
+    # (EXPERIMENTS.md §Perf PR2). Every distance backend has a fused
+    # kernel (exact rows or PQ code rows + in-kernel ADC sums, §Perf PR3);
+    # only UDF constraints force the unfused path. Off-TPU the fused path
+    # dispatches to the jnp oracle and returns bit-identical results, so
+    # "on"/"off" are safe to force; the TPU kernels reduce in a different
+    # FP order (ties may break differently) and stay behind
+    # FUSE_AUTO_ON_TPU until validated on hardware.
     fuse_expand: str = static_field(default="auto")  # auto | on | off
-    # Beyond-paper: traverse with PQ/ADC approximate distances (32x fewer
-    # HBM bytes per candidate at d=128/m_sub=16), then exact re-rank of the
-    # ef_result survivors. Requires passing pq_index to constrained_search.
+    # Beyond-paper: traverse with PQ/ADC approximate distances (PQBackend,
+    # 32x fewer HBM bytes per candidate at d=128/m_sub=16), then exact
+    # re-rank of the ef_result survivors. Requires passing pq_index to
+    # constrained_search.
     approx: str = static_field(default="exact")  # exact | pq
 
     def __post_init__(self):

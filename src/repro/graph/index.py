@@ -70,6 +70,9 @@ def build_partitioned_index(
         if pad else corpus.vectors
     labs = jnp.concatenate([corpus.labels, corpus.labels[:max(pad, 0)]], axis=0) \
         if pad else corpus.labels
+    attrs = corpus.attrs
+    if attrs is not None and pad:
+        attrs = jnp.concatenate([attrs, attrs[:pad]], axis=0)
 
     all_nbrs, all_samples, all_entries = [], [], []
     for s in range(n_shards):
@@ -88,4 +91,4 @@ def build_partitioned_index(
         sample_ids=jnp.asarray(np.concatenate(all_samples, axis=0)),
         entry_point=jnp.asarray(np.concatenate(all_entries, axis=0)),
     )
-    return Corpus(vectors=vecs, labels=labs), graph
+    return Corpus(vectors=vecs, labels=labs, attrs=attrs), graph

@@ -1,3 +1,3 @@
-from repro.kernels.fused_expand.ops import fused_expand
+from repro.kernels.fused_expand.ops import fused_expand, fused_expand_adc
 
-__all__ = ["fused_expand"]
+__all__ = ["fused_expand", "fused_expand_adc"]

@@ -1,10 +1,19 @@
-"""Public wrapper: Pallas on TPU, jnp oracle elsewhere (interpret for tests)."""
+"""Public wrappers: Pallas on TPU, jnp oracle elsewhere (interpret for tests).
+
+``fused_expand`` scores with exact squared L2 over corpus rows;
+``fused_expand_adc`` scores with PQ/ADC lookups over code rows — same
+constraint + visited treatment, selected by the engine's ``DistanceBackend``
+(core/engine/context.py).
+"""
 from __future__ import annotations
 
 import jax
 
-from repro.kernels.fused_expand.fused_expand import fused_expand_kernel
-from repro.kernels.fused_expand.ref import fused_expand_ref
+from repro.kernels.fused_expand.fused_expand import (
+    fused_expand_adc_kernel,
+    fused_expand_kernel,
+)
+from repro.kernels.fused_expand.ref import fused_expand_adc_ref, fused_expand_ref
 
 Array = jax.Array
 
@@ -40,5 +49,42 @@ def fused_expand(
     else:
         return fused_expand_ref(
             queries, corpus, ids, visited, meta, cons, family=family
+        )
+    return d, s.astype(bool), f.astype(bool)
+
+
+def fused_expand_adc(
+    lut: Array,
+    codes: Array,
+    ids: Array,
+    visited: Array,
+    meta: Array,
+    cons: Array,
+    *,
+    family: str,
+    force_kernel: bool = False,
+    m_blk: int | None = None,
+) -> tuple[Array, Array, Array]:
+    """ADC twin of ``fused_expand``: one pass -> (dists, satisfied, fresh).
+
+    lut is the query batch's (B, m_sub, n_cent) ADC table
+    (``repro.core.pq.adc_table``), codes the (n, m_sub) int32 code matrix;
+    distances are PQ approximations summed in-kernel from the VMEM-resident
+    LUT while the candidate's code row (m_sub words instead of d floats)
+    streams through the same double-buffered DMA as the exact kernel's
+    corpus rows.
+    """
+    if jax.default_backend() == "tpu":
+        d, s, f = fused_expand_adc_kernel(
+            lut, codes, ids, visited, meta, cons, family=family, m_blk=m_blk
+        )
+    elif force_kernel:
+        d, s, f = fused_expand_adc_kernel(
+            lut, codes, ids, visited, meta, cons,
+            family=family, m_blk=m_blk, interpret=True,
+        )
+    else:
+        return fused_expand_adc_ref(
+            lut, codes, ids, visited, meta, cons, family=family
         )
     return d, s.astype(bool), f.astype(bool)

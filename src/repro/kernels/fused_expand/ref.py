@@ -1,9 +1,11 @@
-"""Pure-jnp oracle for fused_expand.
+"""Pure-jnp oracles for the fused expansion kernels.
 
-Distances go through ``batched_rowwise_sqdist`` — the exact primitive the
-unfused engine path uses — so the fused CPU path stays bit-for-bit equal to
-the seed computation (the golden-file guarantee in tests/test_engine_beam.py).
-The visited-probe and constraint checks are integer/compare ops and therefore
+Distances go through the exact primitives the unfused engine paths use —
+``batched_rowwise_sqdist`` for the L2 kernel, the take-along-axis LUT sum of
+``PQBackend.distances`` for the ADC kernel — so the fused CPU paths stay
+bit-for-bit equal to the seed computation (the golden-file guarantee in
+tests/test_engine_beam.py and the fused==unfused system tests). The
+visited-probe and constraint checks are integer/compare ops and therefore
 exact by construction; they mirror ``core.visited.visited_test`` and the
 ``core.constraints`` satisfied fns without importing them (kernels stay leaf
 modules).
@@ -18,6 +20,32 @@ from repro.common.distances import batched_rowwise_sqdist
 Array = jax.Array
 
 WORD_BITS = 32
+
+
+def _fresh_and_sat(
+    ids: Array, visited: Array, meta: Array, cons: Array, family: str
+) -> tuple[Array, Array]:
+    """Shared mask logic: (valid & unvisited, valid & constraint-ok)."""
+    safe = jnp.maximum(ids, 0)
+    valid = ids >= 0
+
+    vword = jnp.take_along_axis(visited, safe // WORD_BITS, axis=-1)
+    vbit = (safe % WORD_BITS).astype(jnp.uint32)
+    unvisited = ((vword >> vbit) & jnp.uint32(1)) == jnp.uint32(0)
+    fresh = valid & unvisited
+
+    meta_col = meta.reshape(-1)
+    if family == "label":
+        lab = meta_col[safe]  # (B, M) int32
+        cword = jnp.take_along_axis(cons, lab // WORD_BITS, axis=-1)
+        cbit = (lab % WORD_BITS).astype(jnp.uint32)
+        ok = ((cword >> cbit) & jnp.uint32(1)) == jnp.uint32(1)
+    elif family == "range":
+        val = meta_col.astype(jnp.float32)[safe]  # (B, M)
+        ok = (val >= cons[:, 0:1]) & (val <= cons[:, 1:2])
+    else:
+        raise ValueError(f"unsupported in-kernel constraint family: {family}")
+    return fresh, valid & ok
 
 
 def fused_expand_ref(
@@ -38,21 +66,37 @@ def fused_expand_ref(
     dists = batched_rowwise_sqdist(queries, rows)
     dists = jnp.where(valid, dists, jnp.inf)
 
-    vword = jnp.take_along_axis(visited, safe // WORD_BITS, axis=-1)
-    vbit = (safe % WORD_BITS).astype(jnp.uint32)
-    unvisited = ((vword >> vbit) & jnp.uint32(1)) == jnp.uint32(0)
-    fresh = valid & unvisited
+    fresh, sat = _fresh_and_sat(ids, visited, meta, cons, family)
+    return dists, sat, fresh
 
-    meta_col = meta.reshape(-1)
-    if family == "label":
-        lab = meta_col[safe]  # (B, M) int32
-        cword = jnp.take_along_axis(cons, lab // WORD_BITS, axis=-1)
-        cbit = (lab % WORD_BITS).astype(jnp.uint32)
-        ok = ((cword >> cbit) & jnp.uint32(1)) == jnp.uint32(1)
-    elif family == "range":
-        val = meta_col.astype(jnp.float32)[safe]  # (B, M)
-        ok = (val >= cons[:, 0:1]) & (val <= cons[:, 1:2])
-    else:
-        raise ValueError(f"unsupported in-kernel constraint family: {family}")
-    sat = valid & ok
+
+def fused_expand_adc_ref(
+    lut: Array,
+    codes: Array,
+    ids: Array,
+    visited: Array,
+    meta: Array,
+    cons: Array,
+    *,
+    family: str,
+) -> tuple[Array, Array, Array]:
+    """Same contract as fused_expand_adc_kernel, with bool masks.
+
+    The distance is the unfused ADC formula verbatim (``PQBackend.
+    distances``): gather each candidate's (m_sub,) code row, sum the
+    per-subspace LUT entries — identical computation graph, identical bits.
+    """
+    safe = jnp.maximum(ids, 0)
+    valid = ids >= 0
+
+    crows = codes[safe]  # (B, M, m_sub)
+    gathered = jnp.take_along_axis(
+        lut[:, None, :, :],  # (B, 1, m_sub, n_cent)
+        crows[..., None],  # (B, M, m_sub, 1)
+        axis=-1,
+    )[..., 0]
+    dists = jnp.sum(gathered, axis=-1)
+    dists = jnp.where(valid, dists, jnp.inf)
+
+    fresh, sat = _fresh_and_sat(ids, visited, meta, cons, family)
     return dists, sat, fresh

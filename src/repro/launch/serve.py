@@ -36,6 +36,17 @@ def main():
     ap.add_argument("--batches", type=int, default=10)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--constraint", default="unequal-20")
+    ap.add_argument(
+        "--approx", default="exact", choices=("exact", "pq"),
+        help="distance backend for the walk: exact rows or PQ/ADC codes "
+        "(trains a PQ index on the corpus; exact re-rank post-loop)",
+    )
+    ap.add_argument(
+        "--fuse", default="auto", choices=("auto", "on", "off"),
+        help="fused candidate pipeline (kernels/fused_expand; 'on' forces "
+        "the one-pass gather+distance+constraint+visited kernel for either "
+        "backend)",
+    )
     args = ap.parse_args()
 
     n_dev = jax.device_count()
@@ -56,7 +67,17 @@ def main():
     corpus_s, graph_s = shard_corpus_for_mesh(corpus_p, graph_p, mesh)
 
     params = SearchParams(mode="prefer", k=args.k, ef_result=128, n_start=32,
-                          max_iters=800)
+                          max_iters=800, approx=args.approx,
+                          fuse_expand=args.fuse)
+    pq_index = None
+    if args.approx == "pq":
+        from repro.core import pq_train
+        from repro.core.pq import default_m_sub
+
+        m_sub = default_m_sub(args.d)
+        print(f"training PQ codebooks (m_sub={m_sub})...")
+        pq_index = pq_train(jax.random.PRNGKey(4), corpus_p.vectors,
+                            m_sub=m_sub, n_cent=256)
     search = make_distributed_search(mesh, params)
 
     total_q = 0
@@ -73,7 +94,11 @@ def main():
                     jax.random.fold_in(jax.random.PRNGKey(3), b), qlab,
                     args.labels, pct,
                 )
-            res = search(corpus_s, graph_s, q, cons)
+            res = (
+                search(corpus_s, graph_s, q, cons, pq_index)
+                if pq_index is not None
+                else search(corpus_s, graph_s, q, cons)
+            )
             jax.block_until_ready(res.dists)
             total_q += args.batch
             filled = float(jnp.mean(jnp.sum(res.ids >= 0, axis=-1)))

@@ -49,9 +49,9 @@ def test_roofline_report_terms_all_cells():
             assert np.isfinite(t.roofline_fraction), t.cell
             assert t.bottleneck in ("compute", "memory", "collective")
             n += 1
-    # 40 assigned + 5 airship (incl. the D4 PQ, beam-engine, and PR2
-    # fused-pipeline variants)
-    assert n == 45
+    # 40 assigned + 6 airship (incl. the D4 PQ, beam-engine, PR2 fused-
+    # pipeline, and PR3 fused-ADC variants)
+    assert n == 46
 
 
 def test_flash_attention_soft_cap_grads():

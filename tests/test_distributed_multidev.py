@@ -82,19 +82,51 @@ SCRIPT = textwrap.dedent(
     print("COMPRESS_RELERR", rel)
     assert rel < 0.02, rel
 
-    # --- PQ-fused distributed search (D4) on 4 corpus shards ---
+    # --- PQ distributed search (D4) on 4 corpus shards: the backend payload
+    # (codes row-sharded, codebooks replicated) is derived from params.approx;
+    # each shard builds its own TraversalContext (PR3) ---
     import dataclasses
     from repro.core import pq_train
     from repro.core.distributed import make_distributed_search as mds
     pq = pq_train(jax.random.PRNGKey(11), corpus_p.vectors, m_sub=4, n_cent=32)
     params_pq = dataclasses.replace(params, approx="pq")
-    search_pq = mds(mesh, params_pq, with_pq=True)
-    pq_sharded = jax.tree.map(lambda x: x, pq)
+    search_pq = mds(mesh, params_pq)
     with set_mesh(mesh):
         res_pq = search_pq(corpus_s, graph_s, q, cons, pq)
     r_pq = float(recall(res_pq.ids, ti))
     print("DIST_PQ_RECALL", r_pq)
     assert r_pq > 0.7, r_pq
+    # fused ADC traversal is bit-identical through the sharded path too
+    search_pqf = mds(mesh, dataclasses.replace(params_pq, fuse_expand="on"))
+    with set_mesh(mesh):
+        res_pqf = search_pqf(corpus_s, graph_s, q, cons, pq)
+    np.testing.assert_array_equal(np.asarray(res_pq.ids), np.asarray(res_pqf.ids))
+    np.testing.assert_array_equal(np.asarray(res_pq.dists), np.asarray(res_pqf.dists))
+    print("DIST_PQ_FUSED_OK")
+
+    # --- Range constraint through the sharded path (PR3 regression: attrs
+    # shard with the corpus rows; [lo, hi] shards with the batch) ---
+    from repro.core import RangeConstraint
+    corpus_a = Corpus(vectors=corpus.vectors, labels=corpus.labels,
+                      attrs=jax.random.uniform(jax.random.PRNGKey(20), (2000, 2)))
+    corpus_ap, graph_ap = build_partitioned_index(
+        jax.random.PRNGKey(1), corpus_a, n_shards=4, degree=12,
+        sample_size_per_shard=64)
+    assert corpus_ap.attrs is not None  # build_partitioned_index carries attrs
+    corpus_as, graph_as = shard_corpus_for_mesh(corpus_ap, graph_ap, mesh)
+    assert corpus_as.attrs is not None  # shard_corpus_for_mesh keeps them
+    rcons = RangeConstraint(lo=jnp.full((16,), 0.25), hi=jnp.full((16,), 0.85),
+                            col=jnp.int32(1))
+    search_rng = mds(mesh, params, constraint_type=RangeConstraint)
+    with set_mesh(mesh):
+        res_rng = search_rng(corpus_as, graph_as, q, rcons)
+    ids_r = np.asarray(res_rng.ids)
+    vals = np.asarray(corpus_ap.attrs)[np.maximum(ids_r, 0), 1]
+    assert (((vals >= 0.25) & (vals <= 0.85)) | (ids_r < 0)).all()
+    td_r, ti_r = exact_constrained_search(corpus_ap, q, rcons, k=10)
+    r_rng = float(recall(res_rng.ids, ti_r))
+    print("DIST_RANGE_RECALL", r_rng)
+    assert r_rng > 0.8, r_rng
 
     # --- two-phase top-k == single-phase on a sharded candidate matrix ---
     from repro.models.recsys import models as rs

@@ -1,13 +1,18 @@
 """Fused constrained-expansion coverage (kernels/fused_expand + engine wiring).
 
 Three layers, mirroring the PR's risk surface:
-  1. kernel (interpret mode) vs ref.py oracle — padding ids, all-visited
-     rows, empty constraint sets, both in-kernel families, M_blk tiling;
+  1. kernels (interpret mode) vs ref.py oracles — padding ids, all-visited
+     rows, empty constraint sets, both in-kernel families, M_blk tiling,
+     for BOTH distance variants (exact rows and PQ/ADC code rows);
   2. the sorted-merge machinery the fused loop replaces top_k with
      (seeded sweeps — the hypothesis twins in test_queue.py cover CI);
   3. system level: fused and unfused searches are IDENTICAL (ids, dists,
-     every stats counter) on random graphs across modes, beams, families.
+     every stats counter) on random graphs across modes, beams, families,
+     and distance backends (exact and PQ), plus the TraversalContext API
+     contract (no backend soup left in engine signatures).
 """
+import inspect
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -19,6 +24,7 @@ from repro.core import (
     constrained_search,
     constraint_tables,
     equal_constraint,
+    pq_train,
     unequal_pct_constraint,
 )
 from repro.core import queue as q
@@ -27,8 +33,11 @@ from repro.core.constraints import make_satisfied_fn
 from repro.core.engine import mask_first_occurrence, mask_first_occurrence_sorted
 from repro.data.synthetic import make_labeled_corpus, make_queries
 from repro.graph.index import build_index
-from repro.kernels.fused_expand.fused_expand import fused_expand_kernel
-from repro.kernels.fused_expand.ref import fused_expand_ref
+from repro.kernels.fused_expand.fused_expand import (
+    fused_expand_adc_kernel,
+    fused_expand_kernel,
+)
+from repro.kernels.fused_expand.ref import fused_expand_adc_ref, fused_expand_ref
 
 
 def key(i):
@@ -147,6 +156,77 @@ def test_range_kernel_matches_ref(empty_window):
             qs, corpus, ids, visited, attr, cons, family="range", interpret=True
         )
         assert not bool(jnp.any(s))
+
+
+# --- ADC variant (PR3): code-row DMAs + in-kernel LUT sums ------------------
+
+M_SUB, N_CENT = 8, 16
+
+
+def _adc_world(seed=0):
+    qs, corpus, labels, ids, visited, cons = _label_world(seed)
+    lut = jax.random.uniform(key(seed + 6), (B, M_SUB, N_CENT))
+    codes = jax.random.randint(
+        key(seed + 7), (N_CORPUS, M_SUB), 0, N_CENT, dtype=jnp.int32
+    )
+    return lut, codes, labels, ids, visited, cons
+
+
+def _assert_adc_matches_ref(lut, codes, meta, ids, visited, cons, family,
+                            m_blk=None):
+    dk, sk, fk = fused_expand_adc_kernel(
+        lut, codes, ids, visited, meta, cons,
+        family=family, m_blk=m_blk, interpret=True,
+    )
+    dr, sr, fr = fused_expand_adc_ref(
+        lut, codes, ids, visited, meta, cons, family=family
+    )
+    assert bool(jnp.all(jnp.isinf(dk) == jnp.isinf(dr)))
+    fin = jnp.isfinite(dr)
+    np.testing.assert_allclose(
+        np.asarray(jnp.where(fin, dk, 0.0)),
+        np.asarray(jnp.where(fin, dr, 0.0)),
+        rtol=1e-5, atol=1e-5 * M_SUB,
+    )
+    np.testing.assert_array_equal(np.asarray(sk, bool), np.asarray(sr))
+    np.testing.assert_array_equal(np.asarray(fk, bool), np.asarray(fr))
+
+
+@pytest.mark.parametrize("m_blk", [None, 4, 8])
+def test_adc_kernel_matches_ref(m_blk):
+    lut, codes, labels, ids, visited, cons = _adc_world()
+    _assert_adc_matches_ref(lut, codes, labels, ids, visited, cons, "label", m_blk)
+
+
+def test_adc_kernel_all_padding_row():
+    lut, codes, labels, _, visited, cons = _adc_world()
+    ids = jnp.full((B, M), -1, jnp.int32)
+    d, s, f = fused_expand_adc_kernel(
+        lut, codes, ids, visited, labels, cons, family="label", interpret=True
+    )
+    assert bool(jnp.all(jnp.isinf(d)))
+    assert not bool(jnp.any(s)) and not bool(jnp.any(f))
+
+
+def test_adc_kernel_range_family():
+    lut, codes, _, ids, visited, _ = _adc_world(seed=13)
+    attr = jax.random.uniform(key(21), (N_CORPUS,), minval=-1.0, maxval=1.0)
+    cons = jnp.stack([jnp.full((B,), -0.5), jnp.full((B,), 0.5)], axis=-1)
+    _assert_adc_matches_ref(lut, codes, attr, ids, visited, cons, "range")
+
+
+def test_adc_ref_matches_unfused_pq_backend_bitwise():
+    """The ADC oracle IS the unfused PQ computation: distances via the very
+    formula PQBackend.distances evaluates — bit-for-bit."""
+    from repro.core.engine.context import PQBackend
+
+    lut, codes, labels, ids, visited, cons = _adc_world(seed=5)
+    d_ref, _, _ = fused_expand_adc_ref(
+        lut, codes, ids, visited, labels, cons, family="label"
+    )
+    d_eng = PQBackend(codes=codes, lut=lut).distances(None, ids)
+    d_eng = jnp.where(ids >= 0, d_eng, jnp.inf)
+    np.testing.assert_array_equal(np.asarray(d_ref), np.asarray(d_eng))
 
 
 def test_ref_matches_unfused_engine_pieces_bitwise():
@@ -288,13 +368,16 @@ def sys_world():
     return corpus, graph, queries, qlab
 
 
-def _search(world, cons, mode, beam, fuse, rng=None):
+def _search(world, cons, mode, beam, fuse, rng=None, pq_index=None):
     corpus, graph, queries, _ = world
     params = SearchParams(
         mode=mode, k=10, ef_result=64, ef_sat=64, ef_other=64,
         n_start=16, max_iters=600, beam_width=beam, fuse_expand=fuse,
+        approx="exact" if pq_index is None else "pq",
     )
-    return constrained_search(corpus, graph, queries, cons, params, rng=rng)
+    return constrained_search(
+        corpus, graph, queries, cons, params, rng=rng, pq_index=pq_index
+    )
 
 
 def _assert_identical(ra, rb):
@@ -345,13 +428,13 @@ def test_auto_policy_and_path_equivalence(sys_world):
     hardware-validation flag — and resolves to the unfused path on this
     CPU host; either way the results are identical, so the policy is
     purely physical."""
-    from repro.core.engine import loop as engine_loop
-    from repro.core.engine.loop import resolve_auto_fuse
+    from repro.core.engine import context as engine_ctx
+    from repro.core.engine.context import resolve_auto_fuse
 
     assert not resolve_auto_fuse(True, "cpu")
-    assert not resolve_auto_fuse(False, "tpu")  # UDF / PQ stay unfused
+    assert not resolve_auto_fuse(False, "tpu")  # UDF constraints stay unfused
     # the TPU gate is the validation flag, not the backend check
-    assert resolve_auto_fuse(True, "tpu") is engine_loop.FUSE_AUTO_ON_TPU
+    assert resolve_auto_fuse(True, "tpu") is engine_ctx.FUSE_AUTO_ON_TPU
 
     cons = equal_constraint(sys_world[3], LSYS)
     _assert_identical(
@@ -369,17 +452,99 @@ def test_auto_policy_and_path_equivalence(sys_world):
     )
 
 
-def test_fuse_on_rejects_udf_and_pq(sys_world):
-    corpus, graph, queries, qlab = sys_world
+def test_fuse_on_rejects_udf(sys_world):
     with pytest.raises(ValueError, match="fuse_expand"):
         _search(sys_world, lambda lab, at: lab >= 0, "prefer", 1, "on")
-    from repro.core import pq_train
 
-    cons = equal_constraint(qlab, LSYS)
-    pq_index = pq_train(key(9), corpus.vectors, m_sub=8, n_cent=32)
-    params = SearchParams(
-        mode="prefer", k=10, ef_result=64, n_start=16, max_iters=600,
-        approx="pq", fuse_expand="on",
+
+# ---------------------------------------------------------------------------
+# 3b. system level: fused ADC == unfused PQ traversal (PR3)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def sys_pq(sys_world):
+    corpus = sys_world[0]
+    return pq_train(key(9), corpus.vectors, m_sub=8, n_cent=32)
+
+
+@pytest.mark.parametrize("mode", ["vanilla", "prefer"])
+@pytest.mark.parametrize("beam", [1, 2, 4])
+def test_fused_pq_equals_unfused_pq_label_family(sys_world, sys_pq, mode, beam):
+    """`fuse_expand="on"` is now legal for approx="pq": the ADC kernel's
+    one-pass code-row gather + LUT sum + constraint + visited must
+    reproduce the unfused PQ walk bit-for-bit — ids, exact-reranked
+    distances, and every stats counter."""
+    cons = equal_constraint(sys_world[3], LSYS)
+    rng = key(7) if mode == "vanilla" else None
+    _assert_identical(
+        _search(sys_world, cons, mode, beam, "on", rng, pq_index=sys_pq),
+        _search(sys_world, cons, mode, beam, "off", rng, pq_index=sys_pq),
     )
-    with pytest.raises(ValueError, match="fuse_expand"):
-        constrained_search(corpus, graph, queries, cons, params, pq_index=pq_index)
+
+
+@pytest.mark.parametrize("mode", ["start", "alter"])
+def test_fused_pq_equals_unfused_pq_range_family(sys_world, sys_pq, mode):
+    b = sys_world[2].shape[0]
+    cons = RangeConstraint(
+        lo=jnp.full((b,), 0.2), hi=jnp.full((b,), 0.8), col=jnp.int32(1)
+    )
+    _assert_identical(
+        _search(sys_world, cons, mode, 2, "on", pq_index=sys_pq),
+        _search(sys_world, cons, mode, 2, "off", pq_index=sys_pq),
+    )
+
+
+# ---------------------------------------------------------------------------
+# 4. TraversalContext API contract
+# ---------------------------------------------------------------------------
+
+
+def test_no_backend_soup_in_engine_signatures():
+    """Backend selection flows ONLY through the TraversalContext: no
+    use_kernel / pq_codes / lut parameter may reappear in any public
+    engine-layer function signature (the PR3 refactor's contract)."""
+    from repro.core.engine import context, expand, loop, policy
+
+    banned = {"use_kernel", "pq_codes", "lut"}
+    for module in (context, expand, loop, policy):
+        for name, fn in vars(module).items():
+            if not inspect.isfunction(fn) or name.startswith("_"):
+                continue
+            params = set(inspect.signature(fn).parameters)
+            assert not (params & banned), (
+                f"{module.__name__}.{name} leaks backend soup: "
+                f"{params & banned}"
+            )
+
+
+def test_golden_beam1_parity_runs_through_context():
+    """The golden-file suite (test_engine_beam) exercises the context
+    plumbing by construction; spot-check here that constrained_search is
+    the context-built path and the backends classify as documented."""
+    from repro.core import ExactBackend, L2KernelBackend, PQBackend, build_context
+    from repro.core.types import Corpus
+
+    corpus = Corpus(
+        vectors=jax.random.normal(key(0), (32, 16)),
+        labels=jnp.zeros((32,), jnp.int32),
+    )
+    qs = jax.random.normal(key(1), (2, 16))
+    cons = equal_constraint(jnp.zeros((2,), jnp.int32), 4)
+
+    ctx = build_context(corpus, cons, qs, SearchParams())
+    assert isinstance(ctx.backend, ExactBackend)
+    assert ctx.backend.fusable and not ctx.backend.approximate
+
+    ctx = build_context(corpus, cons, qs, SearchParams(use_kernel=True))
+    assert isinstance(ctx.backend, L2KernelBackend)
+
+    pq = pq_train(key(2), corpus.vectors, m_sub=4, n_cent=8)
+    ctx = build_context(
+        corpus, cons, qs, SearchParams(approx="pq"), pq_index=pq
+    )
+    assert isinstance(ctx.backend, PQBackend)
+    assert ctx.backend.fusable and ctx.backend.approximate
+
+    with pytest.raises(ValueError, match="pq_index"):
+        build_context(corpus, cons, qs, SearchParams(approx="pq"))

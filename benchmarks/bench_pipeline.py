@@ -23,5 +23,5 @@ def main(out):
             f"underfill_rate={underfill:.2f}",
         ))
     res, qps = run_mode(corpus, graph, q, cons, "prefer", k=k)
-    filled = float(jnp.mean(jnp.sum(res.ids >= 0, axis=-1)))
+    filled = float(jnp.mean(res.filled))
     out(row("fig1/airship-merged", 1e6 / qps, f"mean_filled={filled:.1f}"))

@@ -1,0 +1,210 @@
+"""Serving-runtime benchmark: dynamic batching vs per-request dispatch
+(ISSUE 4 / EXPERIMENTS.md §Perf PR4).
+
+One Poisson-arrival mixed workload (equal / unequal-20% / numeric-range
+constraints, mixed per-request k) is replayed twice through the SAME
+runtime code:
+
+  * baseline — bucket ladder {1}, max_wait 0: every request dispatches
+    alone (what the old serve driver effectively did per query), escalation
+    policy identical;
+  * serving  — the real ladder {8, 32, 128} with the dynamic batcher.
+
+Both replays run in virtual time (arrival gaps + measured execution wall
+time), both warm their compile caches first (compiles excluded from
+latency), so the comparison isolates exactly what the batcher buys. The
+acceptance row asserts the serving runtime's >= 2x QPS at >= the baseline's
+mean fill, that the escalation tier's p99 fill is k (no padded answers from
+the retry tier), and that the compile-cache trace count stayed within the
+declared bucket-ladder budget. Full mode writes BENCH_PR4.json; smoke mode
+shrinks every shape and skips the artifact.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+
+from repro.data.synthetic import make_labeled_corpus
+from repro.graph.index import build_index
+from repro.serving import (
+    LocalExecutor,
+    ServingRuntime,
+    VirtualClock,
+    make_tier_ladder,
+    mixed_workload,
+    replay_poisson,
+)
+
+
+def _smoke() -> bool:
+    return os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+
+
+def _run_stream(corpus, graph, items, n_labels, *, ladder, tiers, max_wait, rate):
+    executor = LocalExecutor(corpus, graph)
+    runtime = ServingRuntime(
+        executor,
+        n_labels=n_labels,
+        tiers=tiers,
+        ladder=ladder,
+        families=("label", "range"),
+        max_wait=max_wait,
+        max_pending=len(items) + 1,  # measure throughput, not shedding
+        clock=VirtualClock(),
+    )
+    compiled = runtime.warmup()
+    responses, rejected = replay_poisson(runtime, items, rate=rate, seed=11)
+    assert rejected == 0
+    report = runtime.report()
+    report["compiled_closures"] = compiled
+    report["executor_traces"] = executor.traces
+    return responses, report
+
+
+def main(out) -> None:
+    smoke = _smoke()
+    n = 2_000 if smoke else 20_000
+    d = 16 if smoke else 32
+    n_labels = 5 if smoke else 10
+    n_requests = 96 if smoke else 384
+    ladder = (4, 16) if smoke else (8, 32, 128)
+    k_cap = 8 if smoke else 16
+    rate = 20_000.0  # virtual-time arrivals/s: keeps the server saturated
+
+    corpus = make_labeled_corpus(
+        jax.random.PRNGKey(0), n=n, d=d, n_labels=n_labels
+    )
+    corpus = corpus.replace(
+        attrs=jax.random.uniform(jax.random.PRNGKey(50), (n, 2))
+    )
+    graph = build_index(jax.random.PRNGKey(1), corpus, degree=16, sample_size=512)
+
+    # Lean tier 0 (sized for the common case — selective constraints DO
+    # under-fill it, exercising escalation) + one 4x retry tier.
+    tiers = make_tier_ladder(
+        k_cap=k_cap,
+        base_ef=max(2 * k_cap, 32),
+        base_iters=32 if smoke else 64,
+        base_n_start=8,
+        growth=4,
+    )
+    # The selective slice that exercises escalation: at these widths tier 0
+    # under-fills ~90% of range requests while the retry tier fills all of
+    # them (measured on this corpus — narrower windows exceed even the
+    # retry tier's budget).
+    range_width = (0.05, 0.2)
+    items = mixed_workload(
+        7, corpus, n_requests, n_labels,
+        k_choices=(4, 8, k_cap),
+        range_width=range_width,
+    )
+
+    configs = {
+        "baseline_b1": dict(ladder=(1,), max_wait=0.0),
+        "serving": dict(ladder=ladder, max_wait=0.002),
+    }
+    summaries = {}
+    for name, cfg in configs.items():
+        responses, report = _run_stream(
+            corpus, graph, items, n_labels,
+            tiers=tiers, rate=rate, **cfg,
+        )
+        tel = report["telemetry"]
+        served = [r for r in responses if r is not None]
+        mean_fill = sum(r.fill_frac for r in served) / len(served)
+        summaries[name] = {
+            "ladder": list(cfg["ladder"]),
+            "qps": tel["qps"],
+            "latency_p50_s": tel["latency_p50"],
+            "latency_p99_s": tel["latency_p99"],
+            "mean_fill_frac": round(mean_fill, 4),
+            "p99_fill_frac": tel["p99_fill_frac"],
+            "underfilled": tel["underfilled"],
+            "escalations": tel.get("escalations", 0),
+            "batches": tel["batches"],
+            "padded_slots": tel.get("padded_slots", 0),
+            "tiers": tel["tiers"],
+            "cache": report["cache"],
+            "trace_budget": report["trace_budget"],
+            "executor_traces": report["executor_traces"],
+            "controller": report["controller"],
+        }
+        out(json.dumps({"suite": "serving", "bench": name, **{
+            k: summaries[name][k]
+            for k in ("qps", "latency_p50_s", "latency_p99_s",
+                      "mean_fill_frac", "escalations", "batches")
+        }}))
+
+    base, serv = summaries["baseline_b1"], summaries["serving"]
+    speedup = serv["qps"] / max(base["qps"], 1e-9)
+    # p99 fill on the escalation tier (tier index max): the retry tier must
+    # return full answers, not padding.
+    esc_tier = str(len(tiers) - 1)
+    esc = serv["tiers"].get(esc_tier, {"p99_fill_frac": 1.0, "n": 0})
+    # The >=2x throughput target is a full-shape criterion (B=128 vs B=1 at
+    # n=20k); smoke's tiny buckets only sanity-check the direction (>1x).
+    qps_target = 1.0 if smoke else 2.0
+    acceptance = {
+        "suite": "serving",
+        "bench": "acceptance",
+        "qps_speedup_vs_b1": round(speedup, 2),
+        "qps_target": qps_target,
+        "qps_ok": speedup >= qps_target,
+        "fill_ok": serv["mean_fill_frac"] >= base["mean_fill_frac"] - 1e-9,
+        "escalation_tier_n": esc["n"],
+        "escalation_tier_p99_fill_frac": esc["p99_fill_frac"],
+        # n > 0 keeps the check non-vacuous: the workload must actually
+        # drive requests through the retry tier for its p99 to mean much.
+        "escalation_p99_ok": esc["n"] > 0 and esc["p99_fill_frac"] >= 1.0,
+        "trace_count": serv["cache"]["trace_count"],
+        "trace_budget": serv["trace_budget"],
+        "trace_bounded": serv["cache"]["trace_count"] <= serv["trace_budget"],
+        "cache_hit_rate": serv["cache"]["hit_rate"],
+    }
+    out(json.dumps(acceptance))
+    checks = ("qps_ok", "trace_bounded", "fill_ok", "escalation_p99_ok")
+    if not all(acceptance[c] for c in checks):
+        raise AssertionError(f"serving acceptance failed: {acceptance}")
+
+    if not smoke:
+        path = os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            "BENCH_PR4.json",
+        )
+        meta = {
+            "issue": "PR4 online serving runtime (dynamic batcher + compile "
+                     "cache + adaptive controller)",
+            "host": "single-core CPU container (wall-clock execution cost "
+                    "replayed in virtual time; TPU numbers need hardware)",
+            "workload": {
+                "n": n, "d": d, "n_labels": n_labels,
+                "requests": n_requests, "poisson_rate": rate,
+                "mix": "40% equal / 40% unequal-20% / 20% range "
+                       f"(width {range_width[0]}-{range_width[1]})",
+                "k_choices": [4, 8, k_cap],
+            },
+            "results": summaries,
+            "acceptance": acceptance,
+            "notes": [
+                "baseline_b1 replays the identical stream through the "
+                "identical runtime with bucket ladder {1} (per-request "
+                "dispatch) — same tiers, same escalation policy, so the "
+                "QPS ratio isolates dynamic batching",
+                "latencies are virtual-time arrival-to-completion: Poisson "
+                "gaps + measured execution wall time, compiles excluded "
+                "via warmup on both sides",
+                "trace_count counts compiled closures; executor_traces "
+                "counts actual jit traces (they match — retraces would "
+                "diverge here)",
+            ],
+        }
+        with open(path, "w") as fh:
+            json.dump(meta, fh, indent=2)
+            fh.write("\n")
+        out(json.dumps({"suite": "serving", "bench": "artifact", "wrote": path}))
+
+
+if __name__ == "__main__":
+    main(print)

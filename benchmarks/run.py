@@ -18,16 +18,17 @@ def main() -> None:
         "--only",
         default="",
         help="comma list: pipeline,constraints,alter_ratio,clusters,mnist,"
-        "kernels,beam,fused",
+        "kernels,beam,fused,serving",
     )
     ap.add_argument(
         "--smoke",
         action="store_true",
         help="tiny shapes + interpret-mode kernels for the suites that "
-        "support it (currently: fused) — the CI mode exercising the fused "
-        "pipeline incl. BOTH Pallas kernels (exact rows and PQ/ADC code "
-        "rows) in seconds, without writing BENCH_*.json artifacts; other "
-        "suites ignore the flag",
+        "support it (currently: fused, serving) — the CI mode exercising "
+        "the fused pipeline incl. BOTH Pallas kernels (exact rows and "
+        "PQ/ADC code rows) and the serving runtime's acceptance row in "
+        "seconds, without writing BENCH_*.json artifacts; other suites "
+        "ignore the flag",
     )
     args = ap.parse_args()
     selected = set(filter(None, args.only.split(",")))
@@ -45,6 +46,7 @@ def main() -> None:
         bench_kernels,
         bench_mnist_like,
         bench_pipeline,
+        bench_serving,
     )
 
     suites = {
@@ -62,6 +64,11 @@ def main() -> None:
         # (exact backend; `--backend pq` standalone writes BENCH_PR3.json).
         # In smoke mode it exercises both interpret kernels regardless.
         "fused": bench_fused.main,
+        # bench_serving replays one Poisson mixed workload through the
+        # serving runtime vs per-request (batch=1) dispatch and asserts the
+        # acceptance row (>=2x QPS, escalation-tier fill, bounded traces);
+        # full mode writes top-level BENCH_PR4.json.
+        "serving": bench_serving.main,
     }
     print("name,us_per_call,derived")
 

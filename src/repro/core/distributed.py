@@ -93,15 +93,17 @@ def make_distributed_search(
 ):
     """Build a jitted distributed search fn for a given mesh.
 
-    The returned fn takes (corpus, graph, queries, constraint[, pq_index])
+    The returned fn takes (corpus, graph, queries, constraint, pq_index=None)
     where corpus / graph hold the *global* arrays (sharded row-wise over
     ``corpus_axis``; neighbor ids are shard-local) and queries / constraint
     are batch-sharded. ``constraint_type`` selects the constraint family's
     in_spec (LabelSet by default; Range shards [lo, hi] with the batch and
     needs the attrs column, so ``with_attrs`` defaults to True for it).
     With ``params.approx == "pq"`` the PQ code matrix shards with the
-    corpus rows and codebooks replicate — pass the PQIndex as the trailing
-    argument.
+    corpus rows and codebooks replicate — the trailing ``pq_index`` is then
+    required; otherwise it must stay None. The signature is uniform across
+    backends so callers never branch on the payload (a None rides through
+    shard_map as an empty pytree with a None in_spec).
     """
     batch_axes = tuple(batch_axes)
     if with_attrs is None:
@@ -120,7 +122,11 @@ def make_distributed_search(
         P(batch_axes, None),  # queries
         constraint_in_spec(constraint_type, batch_axes),
     )
-    in_specs = in_specs + backend_in_specs(params, corpus_axis)
+    # The backend-payload slot is always present (uniform arity): PQ specs
+    # when the backend carries codes, a None spec for the None placeholder
+    # otherwise.
+    backend_specs = backend_in_specs(params, corpus_axis)
+    in_specs = in_specs + (backend_specs if backend_specs else (None,))
     out_specs = SearchResult(
         dists=P(batch_axes, None),
         ids=P(batch_axes, None),
@@ -133,16 +139,13 @@ def make_distributed_search(
         ),
     )
 
-    def shard_fn(corpus, graph, queries, constraint, *backend_args):
+    def shard_fn(corpus, graph, queries, constraint, pq_index):
         n_local = corpus.vectors.shape[0]
         shard = jax.lax.axis_index(corpus_axis)
         # Per-shard context: the backend holds this shard's rows (or codes
         # + the local batch's LUT); the constraint closure closes over this
         # shard's metadata columns.
-        ctx = build_context(
-            corpus, constraint, queries, params,
-            pq_index=backend_args[0] if backend_args else None,
-        )
+        ctx = build_context(corpus, constraint, queries, params, pq_index)
         res = search_with_context(ctx, corpus, graph, queries, params)
         # Local ids -> global ids (row-sharded partition => offset).
         gids = jnp.where(res.ids >= 0, res.ids + shard * n_local, -1)
@@ -164,7 +167,20 @@ def make_distributed_search(
     sharded = shard_map(
         shard_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
     )
-    return jax.jit(sharded)
+    jitted = jax.jit(sharded)
+    needs_pq = params.approx == "pq"
+
+    def search(corpus, graph, queries, constraint, pq_index=None):
+        if needs_pq and pq_index is None:
+            raise ValueError("params.approx='pq' requires a pq_index argument")
+        if not needs_pq and pq_index is not None:
+            raise ValueError(
+                "pq_index passed but params.approx != 'pq'; the exact search "
+                "would silently ignore it"
+            )
+        return jitted(corpus, graph, queries, constraint, pq_index)
+
+    return search
 
 
 def shard_corpus_for_mesh(

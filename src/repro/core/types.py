@@ -143,5 +143,16 @@ class SearchResult:
     ids: Array  # (B, K) int32, -1 padded
     stats: SearchStats
 
+    @property
+    def filled(self) -> Array:
+        """(B,) int32 — result slots actually filled (id >= 0).
+
+        The under-fill signal the paper's Fig. 1 is about: ``filled < k``
+        means the walk exhausted its budget before finding k satisfying
+        vertices. Callers (serve driver, serving controller, benchmarks)
+        read this instead of re-deriving ``sum(ids >= 0)``.
+        """
+        return jnp.sum(self.ids >= 0, axis=-1, dtype=jnp.int32)
+
 
 SatisfiedFn = Callable[[Array], Array]  # (B, M) ids -> (B, M) bool

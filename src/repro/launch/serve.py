@@ -1,30 +1,100 @@
-"""Constrained-search serving driver (the paper's workload).
+"""Online serving driver: Poisson-arrival mixed constrained workload.
 
-Builds (or loads) a partitioned index, then serves batched constrained
-queries with the distributed scatter-search-merge path.
+Thin front over the serving runtime (repro.serving, DESIGN.md §7): builds
+an index, then streams individual constrained queries — each with its own
+k, constraint family/operand (equal / unequal-X% label sets and numeric
+ranges in one stream), and Poisson arrival time — through the dynamic
+batcher, shape-bucketed compile cache, and adaptive escalation controller,
+and prints the telemetry summary (QPS, latency percentiles, fill, cache
+hit rate).
 
 Reduced CPU run:
-    PYTHONPATH=src python -m repro.launch.serve --n 20000 --batches 5
+    PYTHONPATH=src python -m repro.launch.serve --n 20000 --requests 256
+
+Distributed path (scatter-search-merge over the mesh) and PQ/ADC traversal:
+    PYTHONPATH=src python -m repro.launch.serve --distributed --approx pq
 """
 from __future__ import annotations
 
 import argparse
-import time
+import json
 
 import jax
-from repro.common.compat import set_mesh
-import jax.numpy as jnp
 
-from repro.core import (
-    SearchParams,
-    equal_constraint,
-    make_distributed_search,
-    shard_corpus_for_mesh,
-    unequal_pct_constraint,
+from repro.data.synthetic import make_labeled_corpus
+from repro.graph.index import build_index, build_partitioned_index
+from repro.serving import (
+    LocalExecutor,
+    ServingRuntime,
+    VirtualClock,
+    make_tier_ladder,
+    mixed_workload,
+    replay_poisson,
 )
-from repro.data.synthetic import make_labeled_corpus, make_queries
-from repro.distributed.meshinfo import MeshInfo
-from repro.graph.index import build_partitioned_index
+
+
+def build_runtime(args, corpus, clock):
+    """Executor + runtime for either the local or the distributed path."""
+
+    def train_pq(vectors):
+        # Codes are row-aligned with the corpus the executor serves, so the
+        # distributed path trains on the PARTITIONED (padded) corpus.
+        from repro.core import pq_train
+        from repro.core.pq import default_m_sub
+
+        m_sub = default_m_sub(args.d)
+        print(f"training PQ codebooks (m_sub={m_sub})...")
+        return pq_train(jax.random.PRNGKey(4), vectors, m_sub=m_sub, n_cent=256)
+
+    if args.distributed:
+        from repro.core import shard_corpus_for_mesh
+        from repro.serving import DistributedExecutor
+
+        n_dev = jax.device_count()
+        model = min(4, n_dev)
+        data = n_dev // model
+        mesh = jax.make_mesh((data, model), ("data", "model"))
+        print(f"mesh: {dict(mesh.shape)}")
+        print("building partitioned index...")
+        corpus_p, graph_p = build_partitioned_index(
+            jax.random.PRNGKey(1), corpus, n_shards=model, degree=16,
+            sample_size_per_shard=128,
+        )
+        corpus_s, graph_s = shard_corpus_for_mesh(corpus_p, graph_p, mesh)
+        pq_index = train_pq(corpus_p.vectors) if args.approx == "pq" else None
+        executor = DistributedExecutor(mesh, corpus_s, graph_s, pq_index)
+    else:
+        print("building index...")
+        graph = build_index(
+            jax.random.PRNGKey(1), corpus, degree=16, sample_size=512
+        )
+        pq_index = train_pq(corpus.vectors) if args.approx == "pq" else None
+        executor = LocalExecutor(corpus, graph, pq_index)
+
+    tiers = make_tier_ladder(
+        k_cap=args.k_cap,
+        base_ef=args.base_ef,
+        base_iters=args.base_iters,
+        n_tiers=2,
+    )
+    if args.approx == "pq" or args.fuse != "auto":
+        import dataclasses
+
+        tiers = tuple(
+            dataclasses.replace(t, approx=args.approx, fuse_expand=args.fuse)
+            for t in tiers
+        )
+    ladder = tuple(int(b) for b in args.ladder.split(","))
+    return ServingRuntime(
+        executor,
+        n_labels=args.labels,
+        tiers=tiers,
+        ladder=ladder,
+        families=("label", "range"),
+        max_wait=args.max_wait,
+        max_pending=args.max_pending,
+        clock=clock,
+    )
 
 
 def main():
@@ -32,10 +102,21 @@ def main():
     ap.add_argument("--n", type=int, default=20_000)
     ap.add_argument("--d", type=int, default=32)
     ap.add_argument("--labels", type=int, default=10)
-    ap.add_argument("--batch", type=int, default=64)
-    ap.add_argument("--batches", type=int, default=10)
-    ap.add_argument("--k", type=int, default=10)
-    ap.add_argument("--constraint", default="unequal-20")
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--rate", type=float, default=2000.0,
+                    help="Poisson arrival rate (requests/s of virtual time)")
+    ap.add_argument("--k-cap", type=int, default=16)
+    ap.add_argument("--ladder", default="8,32,128",
+                    help="comma batch-bucket ladder")
+    ap.add_argument("--base-ef", type=int, default=64)
+    ap.add_argument("--base-iters", type=int, default=128,
+                    help="tier-0 max_iters (escalation tier gets 4x)")
+    ap.add_argument("--max-wait", type=float, default=0.005,
+                    help="batcher flush timeout (s)")
+    ap.add_argument("--max-pending", type=int, default=1024,
+                    help="admission-queue bound (backpressure)")
+    ap.add_argument("--distributed", action="store_true",
+                    help="serve through the scatter-search-merge mesh path")
     ap.add_argument(
         "--approx", default="exact", choices=("exact", "pq"),
         help="distance backend for the walk: exact rows or PQ/ADC codes "
@@ -45,68 +126,44 @@ def main():
         "--fuse", default="auto", choices=("auto", "on", "off"),
         help="fused candidate pipeline (kernels/fused_expand; 'on' forces "
         "the one-pass gather+distance+constraint+visited kernel for either "
-        "backend)",
+        "backend, applied to every serving tier)",
     )
     args = ap.parse_args()
-
-    n_dev = jax.device_count()
-    model = min(4, n_dev)
-    data = n_dev // model
-    mesh = jax.make_mesh((data, model), ("data", "model"))
-    mi = MeshInfo(mesh=mesh)
-    print(f"mesh: {dict(mesh.shape)}")
 
     corpus = make_labeled_corpus(
         jax.random.PRNGKey(0), n=args.n, d=args.d, n_labels=args.labels
     )
-    print("building partitioned index...")
-    corpus_p, graph_p = build_partitioned_index(
-        jax.random.PRNGKey(1), corpus, n_shards=model, degree=16,
-        sample_size_per_shard=128,
+    corpus = corpus.replace(
+        attrs=jax.random.uniform(jax.random.PRNGKey(5), (args.n, 2))
     )
-    corpus_s, graph_s = shard_corpus_for_mesh(corpus_p, graph_p, mesh)
 
-    params = SearchParams(mode="prefer", k=args.k, ef_result=128, n_start=32,
-                          max_iters=800, approx=args.approx,
-                          fuse_expand=args.fuse)
-    pq_index = None
-    if args.approx == "pq":
-        from repro.core import pq_train
-        from repro.core.pq import default_m_sub
+    clock = VirtualClock()
+    runtime = build_runtime(args, corpus, clock)
+    print(f"warming compile cache ({runtime.trace_budget} bucket shapes)...")
+    compiled = runtime.warmup()
+    print(f"compiled {compiled} closures; serving {args.requests} requests "
+          f"at Poisson rate {args.rate}/s...")
 
-        m_sub = default_m_sub(args.d)
-        print(f"training PQ codebooks (m_sub={m_sub})...")
-        pq_index = pq_train(jax.random.PRNGKey(4), corpus_p.vectors,
-                            m_sub=m_sub, n_cent=256)
-    search = make_distributed_search(mesh, params)
+    items = mixed_workload(
+        7, corpus, args.requests, args.labels,
+        k_choices=tuple(sorted({min(4, args.k_cap), min(8, args.k_cap),
+                                args.k_cap})),
+    )
+    responses, rejected = replay_poisson(runtime, items, rate=args.rate, seed=11)
 
-    total_q = 0
-    t_start = time.perf_counter()
-    with set_mesh(mesh):
-        for b in range(args.batches):
-            q, qlab = make_queries(jax.random.fold_in(jax.random.PRNGKey(2), b),
-                                   corpus, args.batch)
-            if args.constraint == "equal":
-                cons = equal_constraint(qlab, args.labels)
-            else:
-                pct = float(args.constraint.split("-")[1])
-                cons = unequal_pct_constraint(
-                    jax.random.fold_in(jax.random.PRNGKey(3), b), qlab,
-                    args.labels, pct,
-                )
-            res = (
-                search(corpus_s, graph_s, q, cons, pq_index)
-                if pq_index is not None
-                else search(corpus_s, graph_s, q, cons)
-            )
-            jax.block_until_ready(res.dists)
-            total_q += args.batch
-            filled = float(jnp.mean(jnp.sum(res.ids >= 0, axis=-1)))
-            print(f"batch {b}: filled {filled:.1f}/{args.k}, "
-                  f"mean dist-evals {float(jnp.mean(res.stats.dist_evals)):.0f}")
-    dt = time.perf_counter() - t_start
-    print(f"served {total_q} queries in {dt:.2f}s = {total_q/dt:.0f} QPS "
-          f"(single-core host; see EXPERIMENTS.md §Roofline for TPU projection)")
+    report = runtime.report()
+    print(json.dumps(report, indent=2, default=str))
+    served = [r for r in responses if r is not None]
+    mean_fill = (
+        sum(r.fill_frac for r in served) / len(served) if served else 0.0
+    )
+    print(
+        f"served {len(served)}/{len(items)} requests "
+        f"({rejected} rejected by backpressure) | "
+        f"qps {report['telemetry'].get('qps', 0)} | mean fill {mean_fill:.3f} "
+        f"| cache hit rate {report['cache']['hit_rate']} "
+        f"(single-core host; see EXPERIMENTS.md §Roofline for TPU projection)"
+    )
 
 
 if __name__ == "__main__":

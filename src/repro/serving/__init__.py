@@ -1,0 +1,60 @@
+# Online serving runtime over the constrained-search engine (DESIGN.md §7):
+# dynamic batcher (bucket-ladder shapes), shape-bucketed compile cache with a
+# hard trace budget, adaptive tier controller with under-fill escalation, and
+# the submit/poll runtime front with backpressure + telemetry.
+from repro.serving.batcher import BATCH_LADDER, DynamicBatcher, MicroBatch, bucket_for
+from repro.serving.cache import CompileCache, TraceBudgetError
+from repro.serving.controller import (
+    AdaptiveController,
+    ControllerConfig,
+    make_tier_ladder,
+)
+from repro.serving.runtime import (
+    DistributedExecutor,
+    LocalExecutor,
+    ServingRuntime,
+    assemble_constraint,
+    assemble_queries,
+)
+from repro.serving.telemetry import Telemetry, percentile
+from repro.serving.types import (
+    AdmissionError,
+    Request,
+    Response,
+    VirtualClock,
+    wall_clock,
+)
+from repro.serving.workload import (
+    WorkItem,
+    label_words_row,
+    mixed_workload,
+    replay_poisson,
+)
+
+__all__ = [
+    "AdaptiveController",
+    "AdmissionError",
+    "BATCH_LADDER",
+    "CompileCache",
+    "ControllerConfig",
+    "DistributedExecutor",
+    "DynamicBatcher",
+    "LocalExecutor",
+    "MicroBatch",
+    "Request",
+    "Response",
+    "ServingRuntime",
+    "Telemetry",
+    "TraceBudgetError",
+    "VirtualClock",
+    "WorkItem",
+    "assemble_constraint",
+    "assemble_queries",
+    "bucket_for",
+    "label_words_row",
+    "make_tier_ladder",
+    "mixed_workload",
+    "percentile",
+    "replay_poisson",
+    "wall_clock",
+]

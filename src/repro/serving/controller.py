@@ -1,0 +1,157 @@
+"""Adaptive search controller: tier ladder + under-fill escalation.
+
+The paper's offline fix for pipeline under-fill is "hope s is large
+enough"; online, over-provisioning every query with a huge ``ef`` wastes
+the common case. The controller keeps a small declared ladder of
+``SearchParams`` *tiers* — same mode/k, growing ``ef_result`` /
+``max_iters`` / ``n_start`` — and works at two timescales:
+
+  * per request: a query that comes back with ``filled < k`` is escalated
+    to the next tier and re-dispatched (through the batcher, so retries
+    batch too) instead of returning padded slots;
+  * per family: an EMA of fill fraction and loop-iteration headroom picks
+    the *default* tier new requests start at — a family whose base tier
+    keeps under-filling is promoted (first-dispatch fill, fewer retries), a
+    family that fills easily with iteration headroom is demoted back.
+
+Both knobs only ever select *within* the declared ladder, which is what
+keeps the compile-cache trace budget a static quantity (cache.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from repro.core.types import SearchParams
+from repro.serving.types import Request
+
+
+def make_tier_ladder(
+    k_cap: int = 16,
+    mode: str = "prefer",
+    n_tiers: int = 2,
+    base_ef: int = 64,
+    base_iters: int = 128,
+    base_n_start: int = 16,
+    growth: int = 4,
+) -> Tuple[SearchParams, ...]:
+    """Geometric tier ladder. Tier 0 is lean (sized for the common case);
+    each next tier multiplies the search budget by ``growth``. ``k`` is the
+    static cap every compiled closure serves — per-request ``k <= k_cap``
+    takes a prefix of the result list."""
+    tiers = []
+    for t in range(n_tiers):
+        g = growth**t
+        ef = max(base_ef * g, k_cap)
+        tiers.append(
+            SearchParams(
+                mode=mode,
+                k=k_cap,
+                ef_result=ef,
+                ef_sat=ef,
+                ef_other=ef,
+                n_start=base_n_start * g,
+                max_iters=base_iters * g,
+            )
+        )
+    return tuple(tiers)
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    ema_alpha: float = 0.25  # weight of the newest batch in the EMAs
+    promote_below: float = 0.9  # default-tier fill EMA below this -> promote
+    demote_above: float = 0.995  # fill EMA above this AND headroom -> demote
+    # Demotion additionally requires the iteration EMA to fit comfortably in
+    # the *lower* tier's budget (otherwise demoting would just re-underfill).
+    demote_iter_headroom: float = 0.5
+    min_batches: int = 4  # batches observed at a tier before retuning
+
+
+@dataclasses.dataclass
+class _FamilyState:
+    default_tier: int = 0
+    fill_ema: Optional[float] = None  # fill fraction at the default tier
+    iter_ema: Optional[float] = None  # loop iterations at the default tier
+    batches_at_tier: int = 0
+
+
+class AdaptiveController:
+    def __init__(
+        self,
+        tiers: Tuple[SearchParams, ...],
+        config: ControllerConfig = ControllerConfig(),
+    ):
+        if not tiers:
+            raise ValueError("need at least one SearchParams tier")
+        k_cap = tiers[0].k
+        if any(t.k != k_cap for t in tiers):
+            raise ValueError("all tiers must share the same k cap")
+        self.tiers = tuple(tiers)
+        self.config = config
+        self._families: Dict[str, _FamilyState] = {}
+
+    @property
+    def max_tier(self) -> int:
+        return len(self.tiers) - 1
+
+    @property
+    def k_cap(self) -> int:
+        return self.tiers[0].k
+
+    def params_for(self, tier: int) -> SearchParams:
+        return self.tiers[tier]
+
+    def tier_for(self, family: str) -> int:
+        """Default tier for a newly admitted request of this family."""
+        return self._families.setdefault(family, _FamilyState()).default_tier
+
+    def escalate(self, req: Request) -> Optional[int]:
+        """Next tier for an under-filled request, or None when maxed out."""
+        return req.tier + 1 if req.tier < self.max_tier else None
+
+    def record(
+        self, family: str, tier: int, fill_frac: float, mean_iters: float
+    ) -> None:
+        """Fold one completed microbatch's telemetry into the family policy.
+
+        Only the family's current default tier trains the EMAs — escalated
+        retries measure the retry tier, not where new requests should start.
+        """
+        st = self._families.setdefault(family, _FamilyState())
+        if tier != st.default_tier:
+            return
+        a = self.config.ema_alpha
+        st.fill_ema = (
+            fill_frac
+            if st.fill_ema is None
+            else (1 - a) * st.fill_ema + a * fill_frac
+        )
+        st.iter_ema = (
+            mean_iters
+            if st.iter_ema is None
+            else (1 - a) * st.iter_ema + a * mean_iters
+        )
+        st.batches_at_tier += 1
+        if st.batches_at_tier < self.config.min_batches:
+            return
+        if st.fill_ema < self.config.promote_below and st.default_tier < self.max_tier:
+            st.default_tier += 1
+            st.fill_ema = st.iter_ema = None
+            st.batches_at_tier = 0
+        elif st.default_tier > 0 and st.fill_ema >= self.config.demote_above:
+            lower_budget = self.tiers[st.default_tier - 1].max_iters
+            if st.iter_ema <= self.config.demote_iter_headroom * lower_budget:
+                st.default_tier -= 1
+                st.fill_ema = st.iter_ema = None
+                st.batches_at_tier = 0
+
+    def snapshot(self) -> dict:
+        return {
+            fam: {
+                "default_tier": st.default_tier,
+                "fill_ema": None if st.fill_ema is None else round(st.fill_ema, 4),
+                "iter_ema": None if st.iter_ema is None else round(st.iter_ema, 1),
+            }
+            for fam, st in self._families.items()
+        }

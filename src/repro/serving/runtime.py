@@ -1,0 +1,367 @@
+"""Online serving runtime: submit/poll front over batcher + cache + controller.
+
+``ServingRuntime`` is the event loop gluing the subsystem together
+(DESIGN.md §7): ``submit`` admits one constrained query (its own k,
+constraint operand, deadline) under a bounded admission queue
+(backpressure — ``AdmissionError`` when full), ``step`` flushes due
+microbatches through the shape-bucketed compile cache and routes
+under-filled results back through the controller's escalation tiers, and
+``poll``/``drain`` hand completed ``Response`` records back to the caller.
+
+The runtime is single-threaded and clock-injectable: drivers decide when
+``step`` runs (serve loop, bench replay, tests with a fake clock). Search
+execution is pluggable via an *executor* that builds one compiled closure
+per (bucket, family, tier) key:
+
+  * ``LocalExecutor`` — single-process ``build_context`` +
+    ``search_with_context`` over an in-memory index; counts actual jit
+    traces, so tests can assert the trace budget against reality.
+  * ``DistributedExecutor`` — ``make_distributed_search`` over a sharded
+    corpus/graph (the scatter-search-merge path), uniform ``pq_index``
+    payload.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.compat import set_mesh
+from repro.core import build_context, make_distributed_search, search_with_context
+from repro.core.constraints import WORD_BITS, LabelSetConstraint, RangeConstraint
+from repro.core.types import Corpus, GraphIndex, SearchParams, SearchResult
+from repro.serving.batcher import BATCH_LADDER, DynamicBatcher, MicroBatch
+from repro.serving.cache import CompileCache
+from repro.serving.controller import AdaptiveController, make_tier_ladder
+from repro.serving.telemetry import Telemetry
+from repro.serving.types import AdmissionError, Request, Response, wall_clock
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# microbatch -> traced arrays
+# ---------------------------------------------------------------------------
+
+
+def assemble_queries(mb: MicroBatch, dim: int) -> Array:
+    rows = [np.asarray(r.query, dtype=np.float32).reshape(dim) for r in mb.requests]
+    rows.extend([rows[-1]] * mb.n_padded)  # pad = repeat last real lane
+    return jnp.asarray(np.stack(rows), dtype=jnp.float32)
+
+
+def assemble_constraint(mb: MicroBatch):
+    if mb.family == "label":
+        words = [np.asarray(r.operand, dtype=np.uint32) for r in mb.requests]
+        words.extend([words[-1]] * mb.n_padded)
+        return LabelSetConstraint(words=jnp.asarray(np.stack(words), jnp.uint32))
+    if mb.family == "range":
+        lo = [float(r.operand[0]) for r in mb.requests]
+        hi = [float(r.operand[1]) for r in mb.requests]
+        lo.extend([lo[-1]] * mb.n_padded)
+        hi.extend([hi[-1]] * mb.n_padded)
+        return RangeConstraint(
+            lo=jnp.asarray(lo, jnp.float32),
+            hi=jnp.asarray(hi, jnp.float32),
+            col=jnp.int32(mb.group[1]),
+        )
+    raise ValueError(f"unknown constraint family: {mb.family}")
+
+
+# ---------------------------------------------------------------------------
+# executors
+# ---------------------------------------------------------------------------
+
+
+class LocalExecutor:
+    """Compiled fixed-shape closures over one in-memory (corpus, graph).
+
+    ``traces`` counts *actual* jit traces (the impl body runs only while
+    tracing), so the serving tests assert the bucket-ladder trace budget
+    against jax's real behaviour, not just the cache's bookkeeping.
+    """
+
+    def __init__(self, corpus: Corpus, graph: GraphIndex, pq_index=None):
+        self.corpus = corpus
+        self.graph = graph
+        self.pq_index = pq_index
+        self.traces = 0
+
+    @property
+    def dim(self) -> int:
+        return self.corpus.dim
+
+    def build(
+        self, bucket: int, family: str, params: SearchParams
+    ) -> Callable[..., SearchResult]:
+        del bucket, family  # fixed by the traced shapes themselves
+
+        def impl(corpus, graph, queries, constraint, pq_index):
+            self.traces += 1  # trace-time side effect: runs once per trace
+            ctx = build_context(corpus, constraint, queries, params, pq_index)
+            return search_with_context(ctx, corpus, graph, queries, params)
+
+        jitted = jax.jit(impl)
+
+        def fn(queries: Array, constraint) -> SearchResult:
+            return jitted(self.corpus, self.graph, queries, constraint, self.pq_index)
+
+        return fn
+
+
+class DistributedExecutor:
+    """Scatter-search-merge closures over a mesh-sharded index.
+
+    One ``make_distributed_search`` per (family, tier) x bucket shape; the
+    uniform trailing ``pq_index`` payload (None for exact) means no
+    per-backend call branching here either.
+    """
+
+    def __init__(self, mesh, corpus_s: Corpus, graph_s: GraphIndex, pq_index=None):
+        self.mesh = mesh
+        self.corpus_s = corpus_s
+        self.graph_s = graph_s
+        self.pq_index = pq_index
+
+    @property
+    def dim(self) -> int:
+        return self.corpus_s.dim
+
+    def build(
+        self, bucket: int, family: str, params: SearchParams
+    ) -> Callable[..., SearchResult]:
+        del bucket
+        ctype = LabelSetConstraint if family == "label" else RangeConstraint
+        search = make_distributed_search(self.mesh, params, constraint_type=ctype)
+
+        def fn(queries: Array, constraint) -> SearchResult:
+            with set_mesh(self.mesh):
+                return search(
+                    self.corpus_s, self.graph_s, queries, constraint, self.pq_index
+                )
+
+        return fn
+
+
+# ---------------------------------------------------------------------------
+# the runtime
+# ---------------------------------------------------------------------------
+
+
+class ServingRuntime:
+    def __init__(
+        self,
+        executor,
+        *,
+        n_labels: int,
+        tiers: Optional[Tuple[SearchParams, ...]] = None,
+        ladder: Tuple[int, ...] = BATCH_LADDER,
+        families: Sequence[str] = ("label", "range"),
+        max_wait: float = 0.002,
+        max_pending: int = 1024,
+        controller: Optional[AdaptiveController] = None,
+        clock: Optional[Callable[[], float]] = None,
+    ):
+        self.executor = executor
+        self.n_labels = int(n_labels)
+        tiers = tuple(tiers) if tiers is not None else make_tier_ladder()
+        self.controller = controller or AdaptiveController(tiers)
+        self.families = tuple(families)
+        self.ladder = tuple(ladder)
+        self.max_pending = int(max_pending)
+        self.clock = clock or wall_clock
+        self.batcher = DynamicBatcher(ladder=self.ladder, max_wait=max_wait)
+        self.telemetry = Telemetry()
+        # The declared trace budget: an arbitrary stream can reach at most
+        # every (bucket, family, tier) combination.
+        self.trace_budget = (
+            len(self.ladder) * len(self.families) * len(self.controller.tiers)
+        )
+        self.cache = CompileCache(self._build_for_key, max_entries=self.trace_budget)
+        # Completed-but-unpolled responses are bounded too: callers that
+        # never poll must not grow the server (oldest evicted + counted).
+        self._responses: Dict[int, Response] = {}
+        self._max_unpolled = 4 * self.max_pending
+        self._in_flight = 0
+        self._next_id = 0
+
+    # --- compile-cache plumbing ------------------------------------------
+    def _build_for_key(self, key):
+        bucket, family, tier = key
+        return self.executor.build(bucket, family, self.controller.params_for(tier))
+
+    def warmup(self) -> int:
+        """Pre-trace every (bucket, family, tier) closure with dummy data,
+        then zero the hit/miss counters — so steady-state serving reports
+        pure-hit cache behaviour and no request pays a compile. Returns the
+        number of closures compiled."""
+        dim = self.executor.dim
+        n_words = (self.n_labels + WORD_BITS - 1) // WORD_BITS
+        for family in self.families:
+            for tier in range(len(self.controller.tiers)):
+                for bucket in self.ladder:
+                    fn = self.cache.get((bucket, family, tier))
+                    queries = jnp.zeros((bucket, dim), jnp.float32)
+                    if family == "label":
+                        cons = LabelSetConstraint(
+                            words=jnp.full((bucket, n_words), 0xFFFFFFFF, jnp.uint32)
+                        )
+                    else:
+                        cons = RangeConstraint(
+                            lo=jnp.full((bucket,), -1e30, jnp.float32),
+                            hi=jnp.full((bucket,), 1e30, jnp.float32),
+                            col=jnp.int32(0),
+                        )
+                    jax.block_until_ready(fn(queries, cons).dists)
+        compiled = self.cache.trace_count
+        self.cache.reset_counters()
+        return compiled
+
+    # --- request front ----------------------------------------------------
+    @property
+    def in_flight(self) -> int:
+        return self._in_flight
+
+    def submit(
+        self,
+        query: np.ndarray,
+        k: int,
+        family: str,
+        operand,
+        deadline: Optional[float] = None,
+    ) -> int:
+        """Admit one constrained query; returns its request id.
+
+        Raises ``AdmissionError`` when ``max_pending`` requests are already
+        in flight — the bounded admission queue is the backpressure surface
+        (callers shed or retry; the runtime never buffers unboundedly).
+        """
+        if family not in self.families:
+            raise ValueError(f"family {family!r} not served (have {self.families})")
+        if k > self.controller.k_cap:
+            raise ValueError(f"k={k} exceeds the ladder's k cap {self.controller.k_cap}")
+        if self._in_flight >= self.max_pending:
+            self.telemetry.on_reject()
+            raise AdmissionError(
+                f"{self._in_flight} requests in flight >= max_pending="
+                f"{self.max_pending}"
+            )
+        now = self.clock()
+        req = Request(
+            req_id=self._next_id,
+            query=np.asarray(query, dtype=np.float32),
+            k=int(k),
+            family=family,
+            operand=operand,
+            deadline=deadline,
+            arrival_t=now,
+            tier=self.controller.tier_for(family),
+        )
+        self._next_id += 1
+        self._in_flight += 1
+        self.telemetry.on_submit()
+        self.batcher.add(req, now)
+        return req.req_id
+
+    def poll(self, req_id: int) -> Optional[Response]:
+        """Completed response for ``req_id`` (popped), or None if pending."""
+        return self._responses.pop(req_id, None)
+
+    # --- the pump ---------------------------------------------------------
+    def step(self, force: bool = False) -> int:
+        """Flush and execute every microbatch due now; returns completions."""
+        done = 0
+        for mb in self.batcher.flush(self.clock(), force=force):
+            done += self._execute(mb)
+        return done
+
+    def drain(self) -> int:
+        """Run until nothing is in flight (escalations included)."""
+        done = 0
+        while self._in_flight:
+            done += self.step(force=True)
+        return done
+
+    def _execute(self, mb: MicroBatch) -> int:
+        # The whole request-processing path is the service time: operand
+        # assembly + host->device transfer + search + result readback. A
+        # virtual-time replay charges all of it to the timeline — this is
+        # exactly the per-request overhead the batch=1 baseline cannot
+        # amortize.
+        t0 = time.perf_counter()
+        fn = self.cache.get((mb.bucket, mb.family, mb.tier))
+        queries = assemble_queries(mb, self.executor.dim)
+        constraint = assemble_constraint(mb)
+        res = fn(queries, constraint)
+        jax.block_until_ready(res.dists)
+        ids = np.asarray(res.ids)
+        dists = np.asarray(res.dists)
+        dt = time.perf_counter() - t0
+        if hasattr(self.clock, "advance"):
+            # Virtual-time replay: execution cost advances the timeline.
+            self.clock.advance(dt)
+        now = self.clock()
+        self.telemetry.on_dispatch(mb.bucket, mb.n_real)
+
+        mean_iters = float(res.stats.iters)
+        # ids rows are -1-padded at the tail (ascending dists), so the fill
+        # within a request's k-prefix is min(total filled, k).
+        filled_rows = np.minimum(np.asarray(res.filled),
+                                 [r.k for r in mb.requests] + [0] * mb.n_padded)
+        fill_fracs = []
+        done = 0
+        for i, req in enumerate(mb.requests):
+            row_ids = ids[i, : req.k]
+            filled = int(filled_rows[i])
+            req.fill_history = req.fill_history + (filled,)
+            fill_fracs.append(filled / max(req.k, 1))
+            if filled < req.k:
+                next_tier = self.controller.escalate(req)
+                if next_tier is not None:
+                    # Under-fill escalation: re-run at a bigger-ef tier
+                    # instead of returning padded slots (the online
+                    # analogue of the paper's "hope s is large enough").
+                    req.tier = next_tier
+                    req.escalations += 1
+                    self.telemetry.on_escalate()
+                    self.batcher.add(req, now)
+                    continue
+            while len(self._responses) >= self._max_unpolled:
+                self._responses.pop(next(iter(self._responses)))
+                self.telemetry.counters["responses_evicted"] += 1
+            self._responses[req.req_id] = Response(
+                req_id=req.req_id,
+                ids=row_ids.copy(),
+                dists=dists[i, : req.k].copy(),
+                k=req.k,
+                filled=filled,
+                tier=req.tier,
+                escalations=req.escalations,
+                fill_history=req.fill_history,
+                arrival_t=req.arrival_t,
+                complete_t=now,
+                deadline_missed=req.deadline is not None and now > req.deadline,
+            )
+            self._in_flight -= 1
+            self.telemetry.on_complete(self._responses[req.req_id])
+            done += 1
+        self.controller.record(
+            mb.family,
+            mb.tier,
+            sum(fill_fracs) / len(fill_fracs),
+            mean_iters,
+        )
+        return done
+
+    # --- reporting --------------------------------------------------------
+    def report(self) -> dict:
+        return {
+            "telemetry": self.telemetry.summary(),
+            "cache": self.cache.stats(),
+            "trace_budget": self.trace_budget,
+            "controller": self.controller.snapshot(),
+            "pending": self.batcher.pending_count(),
+        }

@@ -1,0 +1,94 @@
+"""Per-request and aggregate serving metrics.
+
+Everything the acceptance criteria and the adaptive controller read comes
+through here: arrival-to-completion latency percentiles, fill rate split by
+final tier (the escalation tier's worst-case fill is the "never return
+padding" check), QPS over the completed window, dispatch/padding overhead,
+and admission-rejection counts. Compile-cache hit rates live on the cache
+itself (cache.py); the bench merges both into BENCH_PR4.json.
+"""
+from __future__ import annotations
+
+from collections import Counter, deque
+from typing import Deque, Dict, List, Sequence
+
+import numpy as np
+
+from repro.serving.types import Response
+
+
+def percentile(xs: Sequence[float], p: float) -> float:
+    """np.percentile with an empty-input nan guard, p in [0, 100]."""
+    if not xs:
+        return float("nan")
+    return float(np.percentile(np.asarray(xs, dtype=np.float64), p))
+
+
+class Telemetry:
+    """Counters are unbounded aggregates; per-response records are kept in
+    a bounded window (``max_history`` newest) so a long-lived server's
+    memory stays flat — ``summary()`` percentiles describe that window."""
+
+    def __init__(self, max_history: int = 65_536) -> None:
+        self.responses: Deque[Response] = deque(maxlen=max_history)
+        self.counters: Counter = Counter()
+
+    # --- event hooks (runtime calls these) --------------------------------
+    def on_submit(self) -> None:
+        self.counters["submitted"] += 1
+
+    def on_reject(self) -> None:
+        self.counters["rejected"] += 1
+
+    def on_dispatch(self, bucket: int, n_real: int) -> None:
+        self.counters["batches"] += 1
+        self.counters["dispatched_slots"] += bucket
+        self.counters["dispatched_real"] += n_real
+        self.counters["padded_slots"] += bucket - n_real
+
+    def on_escalate(self) -> None:
+        self.counters["escalations"] += 1
+
+    def on_complete(self, resp: Response) -> None:
+        self.counters["completed"] += 1
+        if resp.deadline_missed:
+            self.counters["deadline_missed"] += 1
+        self.responses.append(resp)
+
+    # --- aggregates -------------------------------------------------------
+    def summary(self) -> dict:
+        rs = self.responses
+        out: Dict[str, object] = dict(self.counters)
+        if not rs:
+            return out
+        lat = [r.latency for r in rs]
+        fills = [r.fill_frac for r in rs]
+        makespan = max(r.complete_t for r in rs) - min(r.arrival_t for r in rs)
+        out.update(
+            qps=round(len(rs) / makespan, 1) if makespan > 0 else float("inf"),
+            latency_p50=round(percentile(lat, 50), 6),
+            latency_p99=round(percentile(lat, 99), 6),
+            mean_fill_frac=round(sum(fills) / len(fills), 4),
+            # worst-case fill at 99% coverage: 99% of requests fill at least
+            # this fraction of their k
+            p99_fill_frac=round(percentile(fills, 1), 4),
+            underfilled=sum(1 for r in rs if r.filled < r.k),
+        )
+        # Fill split by final tier: the escalation tiers must not return
+        # padding (the online analogue of the paper's under-fill fix).
+        by_tier: Dict[int, List[Response]] = {}
+        for r in rs:
+            by_tier.setdefault(r.tier, []).append(r)
+        out["tiers"] = {
+            str(tier): {
+                "n": len(group),
+                "mean_fill_frac": round(
+                    sum(g.fill_frac for g in group) / len(group), 4
+                ),
+                "p99_fill_frac": round(
+                    percentile([g.fill_frac for g in group], 1), 4
+                ),
+            }
+            for tier, group in sorted(by_tier.items())
+        }
+        return out

@@ -1,0 +1,107 @@
+"""Value types for the online serving runtime (DESIGN.md §7).
+
+A *request* is one constrained query with its own ``k``, constraint family
+and operand, and optional deadline — the heterogeneous unit the dynamic
+batcher groups into bucket-shaped microbatches. A *response* is the
+completed answer plus the telemetry the adaptive controller feeds on.
+
+Requests are host-side mutable records (they move between batcher tiers as
+the controller escalates them); everything that crosses into jitted code is
+assembled per microbatch by the batcher from their operands.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Tuple
+
+import numpy as np
+
+FAMILIES = ("label", "range")
+
+
+class AdmissionError(RuntimeError):
+    """Raised by ``ServingRuntime.submit`` when the admission queue is full
+    (backpressure: the caller must retry later or shed the request)."""
+
+
+@dataclasses.dataclass
+class Request:
+    """One in-flight constrained query.
+
+    operand: family == "label" -> (Lw,) uint32 allowed-label bitmask words;
+             family == "range" -> (lo, hi, col) with col static per group.
+    """
+
+    req_id: int
+    query: np.ndarray  # (d,) float32
+    k: int
+    family: str  # "label" | "range"
+    operand: object
+    deadline: Optional[float] = None  # absolute clock time, None = no deadline
+    arrival_t: float = 0.0
+    enqueue_t: float = 0.0  # last time it entered the batcher (escalations reset it)
+    tier: int = 0
+    escalations: int = 0
+    fill_history: Tuple[int, ...] = ()  # filled count at each completed dispatch
+
+    def group(self) -> tuple:
+        """Batcher compatibility key: requests in one microbatch must share
+        it. The range column is per-batch traced data with a single value
+        (RangeConstraint.col), so it joins the group; label operands are
+        fully per-query."""
+        if self.family == "range":
+            return (self.family, int(self.operand[2]))
+        return (self.family,)
+
+
+@dataclasses.dataclass
+class Response:
+    req_id: int
+    ids: np.ndarray  # (k,) int32, -1 padded
+    dists: np.ndarray  # (k,) float32, +inf padded
+    k: int
+    filled: int  # slots with id >= 0 among the first k
+    tier: int  # tier that produced the final answer
+    escalations: int
+    fill_history: Tuple[int, ...]  # filled at each dispatch incl. final
+    arrival_t: float = 0.0
+    complete_t: float = 0.0
+    deadline_missed: bool = False
+
+    @property
+    def latency(self) -> float:
+        return self.complete_t - self.arrival_t
+
+    @property
+    def fill_frac(self) -> float:
+        return self.filled / max(self.k, 1)
+
+
+class VirtualClock:
+    """Injectable clock for deterministic tests and discrete-event replay.
+
+    ``ServingRuntime`` timestamps via ``clock()``; drivers that simulate
+    Poisson arrivals advance virtual time explicitly (arrival gaps) and the
+    runtime adds each microbatch's *measured* execution wall time via
+    ``advance`` — so latencies are arrival-to-completion in a consistent
+    timeline even when the host replays the stream faster than real time.
+    """
+
+    def __init__(self, start: float = 0.0):
+        self.now = float(start)
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, dt: float) -> float:
+        self.now += float(dt)
+        return self.now
+
+    def advance_to(self, t: float) -> float:
+        self.now = max(self.now, float(t))
+        return self.now
+
+
+def wall_clock() -> float:
+    return time.perf_counter()

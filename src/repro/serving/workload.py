@@ -1,0 +1,128 @@
+"""Mixed-workload generation + Poisson replay for the serving runtime.
+
+Real filtered-search traffic mixes constraint selectivities wildly (SIEVE's
+workload study); this module synthesizes that: one stream interleaving
+equal-label, unequal-X%, and numeric-range constraints with mixed per-query
+``k`` and Poisson arrivals. Shared by the serve driver
+(launch/serve.py) and the serving benchmark (benchmarks/bench_serving.py)
+so both measure the same stream shape.
+
+Replay runs in virtual time (``VirtualClock``): arrival gaps advance the
+clock explicitly and the runtime adds each microbatch's measured execution
+wall time, so latency percentiles are consistent arrival-to-completion
+quantities even though the host replays the stream as fast as it can.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.constraints import WORD_BITS
+from repro.core.types import Corpus
+from repro.serving.runtime import ServingRuntime
+from repro.serving.types import AdmissionError, Response, VirtualClock
+
+
+@dataclasses.dataclass
+class WorkItem:
+    query: np.ndarray  # (d,) float32
+    k: int
+    family: str
+    operand: object
+    kind: str  # workload slice tag ("equal" | "unequal" | "range")
+
+
+def label_words_row(labels: Sequence[int], n_labels: int) -> np.ndarray:
+    """(Lw,) uint32 allowed-label bitmask row for one request."""
+    row = np.zeros(((n_labels + WORD_BITS - 1) // WORD_BITS,), np.uint32)
+    for lab in labels:
+        row[lab // WORD_BITS] |= np.uint32(1) << np.uint32(lab % WORD_BITS)
+    return row
+
+
+def mixed_workload(
+    seed: int,
+    corpus: Corpus,
+    n_requests: int,
+    n_labels: int,
+    *,
+    k_choices: Tuple[int, ...] = (4, 8, 16),
+    mix: Tuple[float, float, float] = (0.4, 0.4, 0.2),  # equal/unequal/range
+    unequal_pct: float = 20.0,
+    range_col: int = 0,
+    range_width: Tuple[float, float] = (0.05, 0.3),
+    jitter: float = 0.05,
+) -> List[WorkItem]:
+    """One heterogeneous stream: queries drawn near corpus points (the
+    paper's protocol), each with its own k and constraint.
+
+    Range windows are centered on the query point's own attribute value
+    with width >= ``range_width[0]`` so every request is satisfiable by
+    >= k corpus items in expectation (attrs ~ U[0, 1]).
+    """
+    rng = np.random.RandomState(seed)
+    vectors = np.asarray(corpus.vectors)
+    labels = np.asarray(corpus.labels)
+    attrs = None if corpus.attrs is None else np.asarray(corpus.attrs)
+    n, d = vectors.shape
+    if mix[2] > 0 and attrs is None:
+        raise ValueError("range slice requested but corpus has no attrs")
+
+    items: List[WorkItem] = []
+    kinds = rng.choice(3, size=n_requests, p=np.asarray(mix) / np.sum(mix))
+    picks = rng.randint(0, n, size=n_requests)
+    for kind_id, pick in zip(kinds, picks):
+        q = vectors[pick] + rng.randn(d).astype(np.float32) * jitter
+        k = int(rng.choice(k_choices))
+        qlab = int(labels[pick])
+        if kind_id == 0:
+            items.append(WorkItem(q, k, "label", label_words_row([qlab], n_labels), "equal"))
+        elif kind_id == 1:
+            n_allowed = max(1, int(round(n_labels * unequal_pct / 100.0)))
+            others = [lab for lab in range(n_labels) if lab != qlab]
+            allowed = rng.choice(others, size=min(n_allowed, len(others)), replace=False)
+            items.append(
+                WorkItem(q, k, "label", label_words_row(list(allowed), n_labels), "unequal")
+            )
+        else:
+            center = float(attrs[pick, range_col])
+            width = float(rng.uniform(*range_width))
+            lo, hi = center - width / 2, center + width / 2
+            items.append(WorkItem(q, k, "range", (lo, hi, range_col), "range"))
+    return items
+
+
+def replay_poisson(
+    runtime: ServingRuntime,
+    items: Sequence[WorkItem],
+    rate: float,
+    seed: int = 0,
+) -> Tuple[List[Optional[Response]], int]:
+    """Drive ``items`` through the runtime with Poisson(rate) arrivals.
+
+    Requires the runtime's clock to be a ``VirtualClock``. Returns
+    (responses aligned with items — None for rejected requests, rejection
+    count).
+    """
+    clock = runtime.clock
+    if not isinstance(clock, VirtualClock):
+        raise TypeError("replay_poisson needs a runtime built on a VirtualClock")
+    rng = np.random.RandomState(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=len(items)))
+    req_ids: List[Optional[int]] = []
+    rejected = 0
+    for item, t_arr in zip(items, arrivals):
+        clock.advance_to(t_arr)
+        runtime.step()  # flush anything that came due while idle
+        try:
+            req_ids.append(runtime.submit(item.query, item.k, item.family, item.operand))
+        except AdmissionError:
+            req_ids.append(None)
+            rejected += 1
+        runtime.step()  # full buckets ship immediately
+    while runtime.in_flight:
+        clock.advance(runtime.batcher.max_wait)
+        runtime.step()
+    return [None if rid is None else runtime.poll(rid) for rid in req_ids], rejected

@@ -107,3 +107,26 @@ def test_pq_backend_payload_derived_from_params(world):
         corpus_p, graph_p, queries, cons, params_pq, pq_index=pq
     )
     np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(local.ids))
+
+
+def test_uniform_pq_index_signature(world):
+    """The distributed search takes pq_index uniformly (None for exact) so
+    callers never branch per backend; mismatched payloads fail loudly."""
+    corpus_p, graph_p, queries, qlab, mesh = world
+    corpus_s, graph_s = shard_corpus_for_mesh(corpus_p, graph_p, mesh)
+    cons = equal_constraint(qlab, 5)
+    search = make_distributed_search(mesh, PARAMS)
+    with set_mesh(mesh):
+        res4 = search(corpus_s, graph_s, queries, cons)
+        res5 = search(corpus_s, graph_s, queries, cons, None)  # uniform call
+    np.testing.assert_array_equal(np.asarray(res4.ids), np.asarray(res5.ids))
+    pq = pq_train(jax.random.PRNGKey(11), corpus_p.vectors, m_sub=4, n_cent=16)
+    with pytest.raises(ValueError, match="approx"):
+        search(corpus_s, graph_s, queries, cons, pq)  # payload w/o approx=pq
+    import dataclasses
+
+    search_pq = make_distributed_search(
+        mesh, dataclasses.replace(PARAMS, approx="pq")
+    )
+    with pytest.raises(ValueError, match="requires"):
+        search_pq(corpus_s, graph_s, queries, cons)  # approx=pq w/o payload

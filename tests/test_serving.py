@@ -1,0 +1,284 @@
+"""Serving runtime (DESIGN.md §7): batcher edge cases, compile-cache trace
+budget under adversarial streams, under-fill escalation, backpressure, and
+the controller's within-ladder retuning.
+
+The trace-budget test asserts against the executor's *actual* jit trace
+count (the traced impl body increments a host counter), not just the
+cache's bookkeeping — a retrace bug would diverge the two.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.types import SearchParams, SearchResult, SearchStats
+from repro.data.synthetic import make_labeled_corpus
+from repro.graph.index import build_index
+from repro.serving import (
+    AdaptiveController,
+    AdmissionError,
+    CompileCache,
+    ControllerConfig,
+    DynamicBatcher,
+    LocalExecutor,
+    Request,
+    ServingRuntime,
+    TraceBudgetError,
+    VirtualClock,
+    label_words_row,
+)
+
+N, D, L = 1500, 16, 5
+
+
+@pytest.fixture(scope="module")
+def world():
+    corpus = make_labeled_corpus(jax.random.PRNGKey(0), n=N, d=D, n_labels=L)
+    corpus = corpus.replace(
+        attrs=jax.random.uniform(jax.random.PRNGKey(50), (N, 2))
+    )
+    graph = build_index(jax.random.PRNGKey(1), corpus, degree=12, sample_size=128)
+    return corpus, graph
+
+
+def _req(i, family="label", k=4, deadline=None, operand=None):
+    if operand is None:
+        operand = (
+            label_words_row([i % L], L) if family == "label" else (0.2, 0.8, 0)
+        )
+    return Request(
+        req_id=i, query=np.zeros((D,), np.float32), k=k, family=family,
+        operand=operand, deadline=deadline,
+    )
+
+
+def _tiers(k_cap, base_ef, base_iters, n_start=4, growth=4, n_tiers=2):
+    out = []
+    for t in range(n_tiers):
+        g = growth**t
+        ef = max(base_ef * g, k_cap)
+        out.append(SearchParams(
+            mode="prefer", k=k_cap, ef_result=ef, ef_sat=ef, ef_other=ef,
+            n_start=n_start * g, max_iters=base_iters * g,
+        ))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# batcher
+# ---------------------------------------------------------------------------
+
+
+def test_batcher_empty_flush_and_timeout():
+    b = DynamicBatcher(ladder=(4, 16), max_wait=0.01)
+    assert b.flush(0.0) == []  # empty flush on (any) timeout: no-op, no crash
+    for i in range(3):
+        b.add(_req(i), now=0.0)
+    assert b.flush(0.005) == []  # younger than max_wait, below any bucket
+    out = b.flush(0.011)
+    assert len(out) == 1 and out[0].bucket == 4
+    assert out[0].n_real == 3 and out[0].n_padded == 1
+    assert b.pending_count() == 0
+    assert b.flush(0.012) == []  # drained group leaves no stale timer
+
+
+def test_batcher_full_bucket_ships_without_timeout():
+    b = DynamicBatcher(ladder=(4, 16), max_wait=10.0)
+    for i in range(17):
+        b.add(_req(i), now=0.0)
+    out = b.flush(0.0)  # no timeout elapsed: only the full top bucket ships
+    assert [mb.bucket for mb in out] == [16]
+    assert out[0].n_padded == 0
+    assert b.pending_count() == 1
+    out = b.flush(0.0, force=True)
+    assert [mb.bucket for mb in out] == [4] and out[0].n_real == 1
+
+
+def test_batcher_greedy_ladder_packing_pads_only_tail():
+    b = DynamicBatcher(ladder=(4, 16), max_wait=0.001)
+    for i in range(11):
+        b.add(_req(i), now=0.0)
+    out = b.flush(1.0)
+    assert [mb.bucket for mb in out] == [4, 4, 4]
+    assert sum(mb.n_padded for mb in out) == 1  # only the final partial pads
+
+
+def test_batcher_deadline_forces_early_flush():
+    b = DynamicBatcher(ladder=(4,), max_wait=10.0)
+    b.add(_req(0, deadline=0.001), now=0.0)
+    assert b.flush(0.0005) == []
+    out = b.flush(0.002)  # deadline reached long before max_wait
+    assert len(out) == 1 and out[0].n_real == 1
+
+
+def test_batcher_separates_incompatible_groups():
+    b = DynamicBatcher(ladder=(4,), max_wait=0.0)
+    b.add(_req(0, family="label"), now=0.0)
+    b.add(_req(1, family="range", operand=(0.1, 0.9, 0)), now=0.0)
+    b.add(_req(2, family="range", operand=(0.1, 0.9, 1)), now=0.0)  # other col
+    out = b.flush(0.0)
+    # label, range@col0, range@col1 cannot share a traced operand batch
+    assert sorted(mb.group for mb in out) == [
+        ("label",), ("range", 0), ("range", 1)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# compile cache
+# ---------------------------------------------------------------------------
+
+
+def test_compile_cache_counts_and_enforces_budget():
+    built = []
+    cache = CompileCache(lambda key: built.append(key) or (lambda: key), 2)
+    assert cache.get("a")() == "a"
+    assert cache.get("a")() == "a"
+    assert cache.get("b")() == "b"
+    assert (cache.hits, cache.misses, cache.trace_count) == (1, 2, 2)
+    with pytest.raises(TraceBudgetError, match="budget"):
+        cache.get("c")
+    assert built == ["a", "b"]
+
+
+# ---------------------------------------------------------------------------
+# runtime: trace budget under an adversarial stream
+# ---------------------------------------------------------------------------
+
+
+def test_adversarial_interleave_stays_within_trace_budget(world):
+    """A stream whose constraint families interleave adversarially (family
+    alternating per request, mixed k, ragged counts, multiple rounds) can
+    reach every (bucket, family, tier) combination but never exceed the
+    ladder product — asserted against actual jit traces."""
+    corpus, graph = world
+    executor = LocalExecutor(corpus, graph)
+    clock = VirtualClock()
+    runtime = ServingRuntime(
+        executor, n_labels=L, tiers=_tiers(4, 8, 16), ladder=(2, 4),
+        families=("label", "range"), max_wait=0.005, clock=clock,
+    )
+    budget = 2 * 2 * 2  # |ladder| x |families| x |tiers|
+    assert runtime.trace_budget == budget
+    rng = np.random.RandomState(3)
+    vectors = np.asarray(corpus.vectors)
+    for rnd in range(4):
+        for i in range(5 + rnd):  # ragged per-round counts: odd tails pad
+            family = "label" if (i + rnd) % 2 == 0 else "range"
+            operand = (
+                label_words_row([int(rng.randint(L))], L)
+                if family == "label"
+                else (0.1, 0.9, 0)
+            )
+            runtime.submit(
+                vectors[rng.randint(N)], int(rng.choice([2, 3, 4])),
+                family, operand,
+            )
+            clock.advance(0.001)
+            runtime.step()
+        runtime.drain()
+    assert runtime.in_flight == 0
+    assert runtime.cache.trace_count <= budget
+    # the cache's bookkeeping matches jax reality: no hidden retraces
+    assert executor.traces == runtime.cache.trace_count
+    assert runtime.cache.hits > 0
+
+
+# ---------------------------------------------------------------------------
+# runtime: under-fill escalation
+# ---------------------------------------------------------------------------
+
+
+def test_underfill_escalation_rereuns_at_higher_ef(world):
+    """Tier 0 is starved (ef=8, 4 iterations) so selective constraints
+    under-fill; escalation must re-run them at the bigger-ef tier and
+    return at least as many filled slots — never silently return padding
+    while a bigger tier exists."""
+    corpus, graph = world
+    tiers = _tiers(8, 8, 4, n_start=2, growth=16)  # tier1: ef=128, 64 iters
+    runtime = ServingRuntime(
+        LocalExecutor(corpus, graph), n_labels=L, tiers=tiers, ladder=(4,),
+        families=("range",), max_wait=0.0, clock=VirtualClock(),
+    )
+    vectors = np.asarray(corpus.vectors)
+    attrs = np.asarray(corpus.attrs)
+    ids = []
+    for i in range(8):
+        center = float(attrs[i, 0])
+        # ~5% selective window around the query's own attribute value
+        ids.append(runtime.submit(
+            vectors[i], 8, "range", (center - 0.04, center + 0.04, 0)
+        ))
+    runtime.drain()
+    responses = [runtime.poll(rid) for rid in ids]
+    assert all(r is not None for r in responses)
+    escalated = [r for r in responses if r.escalations > 0]
+    assert escalated, "starved tier 0 should have under-filled something"
+    for r in escalated:
+        assert r.tier == 1  # final answer came from the bigger-ef tier
+        assert len(r.fill_history) == r.escalations + 1
+        # the retry returned at least as many filled slots as the first try
+        assert r.filled >= r.fill_history[0]
+    # escalation materially fixed at least one under-fill
+    assert any(r.filled > r.fill_history[0] for r in escalated)
+
+
+# ---------------------------------------------------------------------------
+# runtime: backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_bounded_admission_queue_backpressure(world):
+    corpus, graph = world
+    runtime = ServingRuntime(
+        LocalExecutor(corpus, graph), n_labels=L, tiers=_tiers(4, 8, 16),
+        ladder=(4,), families=("label",), max_wait=0.0,
+        max_pending=3, clock=VirtualClock(),
+    )
+    vectors = np.asarray(corpus.vectors)
+    ids = [runtime.submit(vectors[i], 4, "label", label_words_row([0], L))
+           for i in range(3)]
+    with pytest.raises(AdmissionError):
+        runtime.submit(vectors[3], 4, "label", label_words_row([0], L))
+    assert runtime.telemetry.counters["rejected"] == 1
+    runtime.drain()
+    assert all(runtime.poll(rid) is not None for rid in ids)
+    # capacity freed: admission works again
+    runtime.submit(vectors[4], 4, "label", label_words_row([0], L))
+    runtime.drain()
+
+
+# ---------------------------------------------------------------------------
+# controller + SearchResult.filled helper
+# ---------------------------------------------------------------------------
+
+
+def test_controller_retunes_only_within_ladder():
+    tiers = _tiers(8, 16, 32)
+    ctl = AdaptiveController(
+        tiers, ControllerConfig(ema_alpha=1.0, min_batches=2)
+    )
+    assert ctl.tier_for("label") == 0
+    for _ in range(2):  # persistent under-fill at the default tier
+        ctl.record("label", 0, fill_frac=0.5, mean_iters=32.0)
+    assert ctl.tier_for("label") == 1  # promoted
+    for _ in range(2):  # full results with lots of iteration headroom
+        ctl.record("label", 1, fill_frac=1.0, mean_iters=4.0)
+    assert ctl.tier_for("label") == 0  # demoted back
+    # escalation never leaves the declared ladder
+    req = _req(0)
+    req.tier = len(tiers) - 1
+    assert ctl.escalate(req) is None
+
+
+def test_search_result_filled_helper():
+    ids = jnp.asarray([[0, 5, -1, -1], [-1, -1, -1, -1], [3, 2, 1, 7]])
+    res = SearchResult(
+        dists=jnp.zeros((3, 4)), ids=ids,
+        stats=SearchStats(
+            dist_evals=jnp.zeros((3,), jnp.int32),
+            hops=jnp.zeros((3,), jnp.int32),
+            visited=jnp.zeros((3,), jnp.int32),
+            iters=jnp.int32(0),
+        ),
+    )
+    np.testing.assert_array_equal(np.asarray(res.filled), [2, 0, 4])

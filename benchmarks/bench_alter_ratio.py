@@ -2,7 +2,6 @@
 label-randomness levels R% in {0, 1, 10, 50, 100}."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from benchmarks.common import constraint, ground_truth, row, run_mode, world

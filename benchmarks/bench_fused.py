@@ -32,7 +32,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import constraint, ground_truth, world
+from benchmarks.common import constraint, ground_truth, world, write_artifact
 from repro.core import PQBackend, SearchParams, constrained_search, pq_train, recall
 from repro.core import queue as q
 from repro.core import visited as vis
@@ -334,9 +334,7 @@ def main(out, backend: str = "exact") -> None:
                 "fuse_expand=auto resolves to unfused off-TPU "
                 "(EXPERIMENTS.md §Perf PR2)",
             ]
-        with open(path, "w") as fh:
-            json.dump(meta, fh, indent=2)
-            fh.write("\n")
+        write_artifact(path, meta, preserve=("smoke_reference",))
         out(json.dumps({"suite": "fused", "bench": "artifact", "wrote": path}))
 
 

@@ -9,12 +9,10 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import row
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 from repro.kernels.gather_distance.ref import gather_distance_ref
-from repro.kernels.l2_matmul.l2_matmul import l2_matmul
 from repro.kernels.l2_matmul.ref import l2_matmul_ref
 from repro.kernels.pq_adc.ref import pq_adc_ref
 

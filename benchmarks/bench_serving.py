@@ -26,6 +26,7 @@ import os
 
 import jax
 
+from benchmarks.common import write_artifact
 from repro.data.synthetic import make_labeled_corpus
 from repro.graph.index import build_index
 from repro.serving import (
@@ -200,9 +201,7 @@ def main(out) -> None:
                 "diverge here)",
             ],
         }
-        with open(path, "w") as fh:
-            json.dump(meta, fh, indent=2)
-            fh.write("\n")
+        write_artifact(path, meta, preserve=("smoke_reference",))
         out(json.dumps({"suite": "serving", "bench": "artifact", "wrote": path}))
 
 

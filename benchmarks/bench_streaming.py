@@ -1,0 +1,377 @@
+"""Streaming mutable index: constrained recall under churn vs a
+periodically rebuilt static oracle (ISSUE 5 / EXPERIMENTS.md §Perf PR5).
+
+One mixed op stream (inserts of new vectors near live points, deletes of
+random live ids, sized to a configurable turnover fraction of the seed
+corpus) is applied two ways:
+
+  * streaming — the ``StreamingIndex`` mutates in place: beam-search-guided
+    inserts, tombstone deletes, background consolidation; queries run on
+    the current epoch snapshot;
+  * oracle    — a static index REBUILT from scratch from the live set every
+    ``rebuild_every`` mutations (the offline gold standard this layer
+    replaces); between rebuilds it serves its last build, so it both
+    misses fresh inserts and can resurrect deleted ids — exactly the
+    index-freshness gap SIEVE (arXiv:2507.11907) measures.
+
+At evenly spaced checkpoints both indexes answer the same equal-label
+constrained queries (drawn near the CURRENT live set, so fresh inserts
+matter) and are scored against the exact tombstone-aware ground truth of
+the live collection at that instant. The acceptance row asserts the
+streaming index's mean recall within 5 points of the oracle's at equal ef,
+and ZERO tombstoned ids returned (the tombstone-as-constraint guarantee).
+
+Full mode measures a smoke-shaped reference first (the regression gate in
+CI compares smoke runs against it — same shapes, so the 15%/abs tolerances
+are apples-to-apples) and writes both into ``BENCH_PR5.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import write_artifact
+from repro.core import (
+    SearchParams,
+    constrained_search,
+    equal_constraint,
+    exact_constrained_search,
+    recall,
+)
+from repro.data.synthetic import make_labeled_corpus
+from repro.graph.index import build_index
+from repro.streaming import StreamingIndex
+
+
+def _smoke() -> bool:
+    return os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+
+
+SMOKE_CFG = dict(
+    name="smoke", n=1200, d=16, n_labels=5, degree=12, turnover=0.2,
+    checkpoints=6, batch=16, k=8, ef=48, rebuild_every=60, ef_insert=24,
+    consolidate_after=24,
+)
+FULL_CFG = dict(
+    name="full", n=8000, d=32, n_labels=10, degree=16, turnover=0.2,
+    checkpoints=8, batch=32, k=10, ef=64, rebuild_every=200, ef_insert=32,
+    consolidate_after=64,
+)
+
+
+def _build_oracle(live_vecs, live_labs, degree):
+    from repro.core.types import Corpus
+
+    corpus = Corpus(
+        vectors=jnp.asarray(live_vecs), labels=jnp.asarray(live_labs)
+    )
+    graph = build_index(
+        jax.random.PRNGKey(9), corpus, degree=degree,
+        sample_size=min(256, live_vecs.shape[0]),
+    )
+    return corpus, graph
+
+
+def _measure(out, cfg) -> dict:
+    """Replay one churn stream through both indexes; returns the record."""
+    n, d, n_labels = cfg["n"], cfg["d"], cfg["n_labels"]
+    rng = np.random.RandomState(17)
+    corpus = make_labeled_corpus(
+        jax.random.PRNGKey(0), n=n, d=d, n_labels=n_labels
+    )
+    graph = build_index(
+        jax.random.PRNGKey(1), corpus, degree=cfg["degree"], sample_size=256
+    )
+    index = StreamingIndex.from_static(
+        corpus, graph, capacity=n + int(cfg["turnover"] * n) + 64,
+        ef_insert=cfg["ef_insert"],
+    )
+    base_vecs = np.asarray(corpus.vectors)
+    base_labs = np.asarray(corpus.labels)
+
+    n_mut = int(cfg["turnover"] * n)
+    ops = rng.permutation(
+        np.array([0] * (n_mut // 2) + [1] * (n_mut - n_mut // 2))
+    )  # 0=insert, 1=delete
+    ckpt_every = max(1, len(ops) // cfg["checkpoints"])
+
+    # Oracle state: the live collection as plain host arrays.
+    oracle_vecs = {i: base_vecs[i] for i in range(n)}
+    oracle_labs = {i: int(base_labs[i]) for i in range(n)}
+    # Epoch 0: both sides start from the identical build.
+    oracle_corpus, oracle_graph = corpus, graph
+    oracle_ids = np.arange(n, dtype=np.int32)
+    live: list = list(range(n))
+
+    params = SearchParams(
+        mode="prefer", k=cfg["k"], ef_result=cfg["ef"], ef_sat=cfg["ef"],
+        ef_other=cfg["ef"], n_start=16, max_iters=4 * cfg["ef"],
+    )
+    rec_stream, rec_oracle, resurrected = [], [], 0
+    leaks = 0
+    mut_s = 0.0
+    rebuilds = 1
+    since_rebuild = 0
+
+    def checkpoint(step_no: int) -> None:
+        nonlocal leaks, resurrected
+        crng = np.random.RandomState(1000 + step_no)
+        picks = [live[i] for i in crng.randint(0, len(live), cfg["batch"])]
+        qs = np.stack([
+            np.asarray(index.pool.vectors[p])
+            + crng.randn(d).astype(np.float32) * 0.05
+            for p in picks
+        ])
+        qlab = np.asarray([index.pool.labels[p] for p in picks], np.int32)
+        cons = equal_constraint(jnp.asarray(qlab), n_labels)
+        snap = index.snapshot()
+        # Ground truth: exact constrained top-k over the CURRENT live set
+        # (the snapshot corpus is tombstone-aware, so dead slots are out).
+        _, ti = exact_constrained_search(
+            snap.corpus, jnp.asarray(qs), cons, k=cfg["k"]
+        )
+        res_s = constrained_search(
+            snap.corpus, snap.graph, jnp.asarray(qs), cons, params
+        )
+        sids = np.asarray(res_s.ids)
+        dead = {s for s in range(index.capacity) if not index.pool.is_live(s)}
+        leaks += int(sum(1 for i in sids.ravel() if i >= 0 and int(i) in dead))
+        rec_stream.append(float(recall(res_s.ids, ti)))
+
+        res_o = constrained_search(
+            oracle_corpus, oracle_graph, jnp.asarray(qs), cons, params
+        )
+        oids_local = np.asarray(res_o.ids)
+        oids = np.where(oids_local >= 0, oracle_ids[np.maximum(oids_local, 0)], -1)
+        resurrected += int(
+            sum(1 for i in oids.ravel() if i >= 0 and int(i) in dead)
+        )
+        rec_oracle.append(float(recall(jnp.asarray(oids), ti)))
+
+    for step_no, op in enumerate(ops):
+        t0 = time.perf_counter()
+        if op == 0 or len(live) < 2:
+            pick = live[rng.randint(len(live))]
+            vec = np.asarray(index.pool.vectors[pick]) + rng.randn(d).astype(
+                np.float32
+            ) * 0.05
+            lab = int(index.pool.labels[pick])
+            slot = index.insert(vec, label=lab)
+            live.append(slot)
+            oracle_vecs[slot] = vec
+            oracle_labs[slot] = lab
+        else:
+            victim = live.pop(rng.randint(len(live)))
+            index.delete(victim)
+            del oracle_vecs[victim], oracle_labs[victim]
+        if index.pool.n_pending >= cfg["consolidate_after"]:
+            index.consolidate()
+        mut_s += time.perf_counter() - t0
+
+        since_rebuild += 1
+        if since_rebuild >= cfg["rebuild_every"]:
+            # Periodic full rebuild — what the oracle pays for freshness.
+            ids = np.fromiter(oracle_vecs, np.int32, len(oracle_vecs))
+            oracle_corpus, oracle_graph = _build_oracle(
+                np.stack([oracle_vecs[i] for i in ids]),
+                np.asarray([oracle_labs[i] for i in ids], np.int32),
+                cfg["degree"],
+            )
+            oracle_ids = ids
+            rebuilds += 1
+            since_rebuild = 0
+        if (step_no + 1) % ckpt_every == 0:
+            checkpoint(step_no)
+
+    index.consolidate()
+    index.pool.check_accounting()
+    mean_s = float(np.mean(rec_stream))
+    mean_o = float(np.mean(rec_oracle))
+    rec = {
+        "suite": "streaming",
+        "bench": f"recall_under_churn_{cfg['name']}",
+        "n0": n,
+        "turnover": cfg["turnover"],
+        "mutations": len(ops),
+        "checkpoints": len(rec_stream),
+        "ef": cfg["ef"],
+        "k": cfg["k"],
+        "recall_streaming": round(mean_s, 4),
+        "recall_oracle": round(mean_o, 4),
+        "recall_gap_pts": round(100.0 * (mean_o - mean_s), 2),
+        "leaked_deleted_ids": leaks,
+        "oracle_resurrected_ids": resurrected,
+        "oracle_rebuilds": rebuilds,
+        "mutations_per_s": round(len(ops) / max(mut_s, 1e-9), 1),
+        "consolidations": index.consolidations,
+        "final_epoch": index.epoch,
+    }
+    out(json.dumps(rec))
+    return rec
+
+
+def _serving_churn(out, smoke: bool) -> dict:
+    """Churn stream through the SERVING runtime: epoch swaps at flush
+    boundaries, mutation/query interleave, zero-leak spot check."""
+    from repro.serving import (
+        ServingRuntime,
+        StreamingLocalExecutor,
+        VirtualClock,
+        churn_workload,
+        make_tier_ladder,
+        replay_churn,
+    )
+
+    n = 800 if smoke else 4000
+    d = 16 if smoke else 32
+    n_labels = 5 if smoke else 10
+    n_req = 120 if smoke else 480
+    corpus = make_labeled_corpus(
+        jax.random.PRNGKey(0), n=n, d=d, n_labels=n_labels
+    )
+    corpus = corpus.replace(
+        attrs=jax.random.uniform(jax.random.PRNGKey(50), (n, 2))
+    )
+    graph = build_index(jax.random.PRNGKey(1), corpus, degree=12, sample_size=128)
+    index = StreamingIndex.from_static(corpus, graph, ef_insert=24)
+    executor = StreamingLocalExecutor(index, consolidate_after=32)
+    tiers = make_tier_ladder(
+        k_cap=8, base_ef=32, base_iters=48, base_n_start=8, growth=4
+    )
+    runtime = ServingRuntime(
+        executor, n_labels=n_labels, tiers=tiers, ladder=(4, 16),
+        families=("label", "range"), max_wait=0.002,
+        max_pending=n_req + 1, clock=VirtualClock(),
+    )
+    runtime.warmup()
+    items = churn_workload(
+        7, corpus, n_req, n_labels, mutation_frac=0.3, k_choices=(4, 8),
+        range_width=(0.1, 0.3),
+    )
+    responses, rejected = replay_churn(runtime, items, rate=5000.0, seed=11)
+    report = runtime.report()
+    tel = report["telemetry"]
+
+    # Zero-leak check, epoch-exact: every mutation response carries the
+    # first epoch its effect is visible in, every query response the epoch
+    # it ran against. A query leaks iff the slot's LATEST visible event at
+    # the query's epoch is a delete — a slot the pool reclaimed and reused
+    # for an upsert (possibly in the very same flush) is a fresh vertex,
+    # not a leak.
+    events: dict = {}
+    for it, r in zip(items, responses):
+        if r is not None and it.family in ("upsert", "delete") and r.filled:
+            events.setdefault(int(r.ids[0]), []).append((r.epoch, it.family))
+    leaks = 0
+    for it, r in zip(items, responses):
+        if r is None or it.family in ("upsert", "delete"):
+            continue
+        for i in np.asarray(r.ids):
+            if i < 0:
+                continue
+            vis = [e for e in events.get(int(i), []) if e[0] <= r.epoch]
+            if vis:
+                last = max(ep for ep, _ in vis)
+                if {f for ep, f in vis if ep == last} == {"delete"}:
+                    leaks += 1
+    rec = {
+        "suite": "streaming",
+        "bench": "serving_churn",
+        "requests": n_req,
+        "rejected": rejected,
+        "upserts": tel.get("upserts_applied", 0),
+        "deletes": tel.get("deletes_applied", 0),
+        "epoch_swaps": tel.get("epoch_swaps", 0),
+        "qps": tel.get("qps", 0.0),
+        "mean_fill_frac": tel.get("mean_fill_frac", 0.0),
+        "leaked_deleted_ids": leaks,
+        "trace_count": report["cache"]["trace_count"],
+        "trace_budget": report["trace_budget"],
+        "index": report["index"],
+    }
+    out(json.dumps(rec))
+    return rec
+
+
+def main(out) -> None:
+    smoke = _smoke()
+    churn = _measure(out, SMOKE_CFG if smoke else FULL_CFG)
+    serving = _serving_churn(out, smoke)
+
+    acceptance = {
+        "suite": "streaming",
+        "bench": "acceptance",
+        "recall_gap_pts": churn["recall_gap_pts"],
+        "gap_target_pts": 5.0,
+        "gap_ok": churn["recall_gap_pts"] <= 5.0,
+        "leaked_deleted_ids": churn["leaked_deleted_ids"]
+        + serving["leaked_deleted_ids"],
+        "leaks_ok": churn["leaked_deleted_ids"] == 0
+        and serving["leaked_deleted_ids"] == 0,
+        "trace_bounded": serving["trace_count"] <= serving["trace_budget"],
+        "recall_streaming": churn["recall_streaming"],
+        "recall_oracle": churn["recall_oracle"],
+    }
+    out(json.dumps(acceptance))
+    if not (
+        acceptance["gap_ok"]
+        and acceptance["leaks_ok"]
+        and acceptance["trace_bounded"]
+    ):
+        raise AssertionError(f"streaming acceptance failed: {acceptance}")
+
+    if not smoke:
+        # The smoke-shaped reference the CI regression gate diffs against:
+        # measured here, at artifact-commit time, with the same shapes the
+        # smoke run will use.
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+        try:
+            smoke_churn = _measure(out, SMOKE_CFG)
+            smoke_serving = _serving_churn(out, True)
+        finally:
+            os.environ.pop("REPRO_BENCH_SMOKE", None)
+        path = os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            "BENCH_PR5.json",
+        )
+        meta = {
+            "issue": "PR5 streaming mutable index (slot pool + tombstone-"
+                     "aware search + consolidation + serving epoch swap)",
+            "host": "single-core CPU container (wall-clock; TPU numbers "
+                    "need hardware)",
+            "results": {"churn": churn, "serving": serving},
+            "smoke_reference": {
+                "recall_under_churn": smoke_churn,
+                "serving_churn": smoke_serving,
+                "acceptance": {
+                    "recall_gap_pts": smoke_churn["recall_gap_pts"],
+                    "recall_streaming": smoke_churn["recall_streaming"],
+                    "leaked_deleted_ids": 0,
+                },
+            },
+            "acceptance": acceptance,
+            "notes": [
+                "oracle = static index rebuilt from the live set every "
+                "rebuild_every mutations; between rebuilds it misses fresh "
+                "inserts and resurrects deleted ids "
+                "(oracle_resurrected_ids counts those events)",
+                "ground truth at every checkpoint is the exact constrained "
+                "top-k over the live collection at that instant "
+                "(tombstone-aware exact_constrained_search)",
+                "smoke_reference holds the same metrics at the smoke "
+                "shapes, measured at artifact-commit time — "
+                "benchmarks/check_regression.py diffs CI smoke runs "
+                "against it",
+            ],
+        }
+        write_artifact(path, meta)
+        out(json.dumps({"suite": "streaming", "bench": "artifact", "wrote": path}))
+
+
+if __name__ == "__main__":
+    main(print)

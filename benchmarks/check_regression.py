@@ -1,0 +1,262 @@
+"""Benchmark-regression gate: diff a smoke run against committed baselines.
+
+CI runs the smoke suites with ``run.py --smoke --json-out smoke.jsonl`` and
+then this script, which compares the smoke run's JSON-line metrics against
+the ``smoke_reference`` sections of the committed ``BENCH_*.json``
+artifacts (recorded at artifact-commit time AT THE SAME SHAPES, so the
+comparison is apples-to-apples) and exits non-zero on regression.
+
+Two tolerance classes, both overridable per gate:
+
+  * deterministic metrics (recall, fill, counts) use the declared default
+    tolerance (15%) — for fixed seeds these should not move at all, so a
+    trip means a real behaviour change;
+  * wall-clock-ratio metrics (pipeline/QPS speedups) are noisy on shared
+    CI runners, so their gates widen to 50% — still a hard fail on the
+    "seeded 2x slowdown" class of regression while ignoring scheduler
+    jitter.
+
+Absolute gates (``absolute=True``) compare against a fixed bound instead
+of a baseline value — e.g. ``leaked_deleted_ids`` must be exactly 0: a
+single leaked tombstone is a correctness regression, not a perf one.
+
+Usage:
+    python benchmarks/check_regression.py --current smoke.jsonl \
+        [--baseline-dir .] [--tolerance 0.15]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Gate:
+    """One gated metric: where to find it in the current run and in the
+    committed baseline, which direction is better, and how much worse than
+    the baseline is tolerated."""
+
+    name: str
+    # current side: first JSON line matching these (suite, bench) values
+    # (plus optional extra key filters), read ``metric`` from it.
+    suite: str
+    bench: str
+    metric: str
+    # baseline side: file + key path into its JSON.
+    baseline_file: str
+    baseline_path: tuple
+    direction: str = "higher"  # "higher" | "lower" is better
+    tolerance: Optional[float] = None  # None -> the CLI default
+    filters: tuple = ()  # ((key, value), ...) extra line filters
+    absolute: Optional[float] = None  # compare against this bound instead
+    required: bool = True  # missing current line fails the gate
+    # When set, the gated value is metric(filters) / metric(denom_filters)
+    # — a SAME-RUN ratio (e.g. fused vs unfused QPS measured back-to-back),
+    # which cancels host noise that absolute wall-clock numbers and
+    # cross-run ratios cannot.
+    denom_filters: tuple = ()
+
+
+GATES = (
+    # --- streaming (PR5): freshness + correctness ------------------------
+    Gate(
+        name="streaming recall under churn",
+        suite="streaming", bench="recall_under_churn_smoke",
+        metric="recall_streaming",
+        baseline_file="BENCH_PR5.json",
+        baseline_path=("smoke_reference", "recall_under_churn",
+                       "recall_streaming"),
+        direction="higher",
+    ),
+    Gate(
+        name="streaming recall gap vs rebuilt oracle",
+        suite="streaming", bench="recall_under_churn_smoke",
+        metric="recall_gap_pts",
+        baseline_file="BENCH_PR5.json",
+        baseline_path=(),
+        direction="lower",
+        absolute=5.0,  # the acceptance bound: within 5 pts of the oracle
+    ),
+    Gate(
+        name="streaming tombstone leaks",
+        suite="streaming", bench="acceptance",
+        metric="leaked_deleted_ids",
+        baseline_file="BENCH_PR5.json",
+        baseline_path=(),
+        direction="lower",
+        absolute=0.0,  # one leaked deleted id is a correctness regression
+    ),
+    # --- serving (PR4): batching throughput + cache discipline ----------
+    Gate(
+        name="serving QPS speedup vs batch=1",
+        suite="serving", bench="acceptance",
+        metric="qps_speedup_vs_b1",
+        baseline_file="BENCH_PR4.json",
+        baseline_path=("smoke_reference", "qps_speedup_vs_b1"),
+        direction="higher",
+        tolerance=0.5,  # wall-clock ratio: wide, still trips on 2x slowdown
+    ),
+    Gate(
+        name="serving compile-trace budget",
+        suite="serving", bench="acceptance",
+        metric="trace_count",
+        baseline_file="BENCH_PR4.json",
+        baseline_path=("smoke_reference", "trace_count"),
+        direction="lower",
+    ),
+    # --- fused pipeline (PR2): fused-vs-unfused traversal cost ----------
+    Gate(
+        name="fused end-to-end qps ratio (fuse on/off, same run)",
+        suite="fused", bench="end_to_end",
+        metric="qps",
+        baseline_file="BENCH_PR2.json",
+        baseline_path=("smoke_reference", "qps_ratio_on_off"),
+        direction="higher",
+        tolerance=0.5,  # catches a 2x fused-path slowdown, not host jitter
+        filters=(("fuse_expand", "on"),),
+        denom_filters=(("fuse_expand", "off"),),
+    ),
+    Gate(
+        name="fused end-to-end recall",
+        suite="fused", bench="end_to_end",
+        metric="recall",
+        baseline_file="BENCH_PR2.json",
+        baseline_path=("smoke_reference", "recall"),
+        direction="higher",
+        filters=(("fuse_expand", "on"),),
+    ),
+)
+
+
+def load_current(path: str) -> list:
+    records = []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if not line.startswith("{"):
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if isinstance(rec, dict) and "suite" in rec:
+                records.append(rec)
+    return records
+
+
+def find_record(records: list, gate: Gate) -> Optional[dict]:
+    # Newest match wins: run.py appends to --json-out, so a reused file
+    # (or CI's multi-suite appends) must gate on the LATEST run's numbers,
+    # never a stale earlier copy.
+    for rec in reversed(records):
+        if rec.get("suite") != gate.suite or rec.get("bench") != gate.bench:
+            continue
+        if all(rec.get(k) == v for k, v in gate.filters):
+            return rec
+    return None
+
+
+def baseline_value(baseline_dir: str, gate: Gate):
+    path = os.path.join(baseline_dir, gate.baseline_file)
+    if not os.path.exists(path):
+        return None, f"baseline {gate.baseline_file} not found"
+    with open(path) as fh:
+        node = json.load(fh)
+    for key in gate.baseline_path:
+        if not isinstance(node, dict) or key not in node:
+            return None, (
+                f"{gate.baseline_file} has no {'.'.join(gate.baseline_path)} "
+                "(smoke_reference not recorded yet?)"
+            )
+        node = node[key]
+    return node, None
+
+
+def check(gate: Gate, records: list, baseline_dir: str, default_tol: float):
+    """Returns (status, detail) with status in ok|fail|skip.
+
+    A missing CURRENT record on a required gate fails (the smoke run
+    silently lost coverage — that IS a regression); a baseline artifact
+    without a recorded smoke_reference merely skips (older artifacts are
+    grandfathered until their suite re-records).
+    """
+    rec = find_record(records, gate)
+    if rec is None or gate.metric not in rec:
+        if gate.required:
+            return "fail", "no matching record in the current run"
+        return "skip", "no matching record (optional gate)"
+    current = float(rec[gate.metric])
+    if gate.denom_filters:
+        denom_gate = dataclasses.replace(gate, filters=gate.denom_filters)
+        denom = find_record(records, denom_gate)
+        if denom is None or gate.metric not in denom:
+            return "fail", "no denominator record in the current run"
+        current = current / max(float(denom[gate.metric]), 1e-12)
+
+    if gate.absolute is not None:
+        bound = float(gate.absolute)
+        ok = current <= bound if gate.direction == "lower" else current >= bound
+        rel = "<=" if gate.direction == "lower" else ">="
+        return (
+            "ok" if ok else "fail",
+            f"current {current:g} (absolute bound: must be {rel} {bound:g})",
+        )
+
+    base, err = baseline_value(baseline_dir, gate)
+    if err is not None:
+        return "skip", err
+    base = float(base)
+    tol = default_tol if gate.tolerance is None else gate.tolerance
+    if gate.direction == "higher":
+        floor = base * (1.0 - tol)
+        ok = current >= floor
+        detail = f"current {current:g} vs baseline {base:g} (floor {floor:g})"
+    else:
+        ceil = base * (1.0 + tol) if base > 0 else base + tol
+        ok = current <= ceil
+        detail = f"current {current:g} vs baseline {base:g} (ceiling {ceil:g})"
+    return ("ok" if ok else "fail", detail)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", required=True,
+                    help="json-lines file from run.py --smoke --json-out")
+    ap.add_argument("--baseline-dir", default=os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))),
+        help="directory holding the committed BENCH_*.json artifacts")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="default allowed relative regression (0.15 = 15%%)")
+    args = ap.parse_args()
+
+    records = load_current(args.current)
+    if not records:
+        print(f"regression gate: no JSON records in {args.current}",
+              file=sys.stderr)
+        return 2
+
+    suites_present = {r.get("suite") for r in records}
+    failures = 0
+    for gate in GATES:
+        if gate.suite not in suites_present:
+            # A partial smoke run (e.g. --only streaming) only gates the
+            # suites it actually ran.
+            continue
+        status, detail = check(gate, records, args.baseline_dir, args.tolerance)
+        tag = {"ok": "OK  ", "fail": "FAIL", "skip": "SKIP"}[status]
+        print(f"[{tag}] {gate.name}: {detail}")
+        if status == "fail":
+            failures += 1
+    if failures:
+        print(f"regression gate: {failures} gate(s) failed", file=sys.stderr)
+        return 1
+    print("regression gate: all gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

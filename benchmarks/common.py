@@ -13,14 +13,12 @@ import time
 from functools import lru_cache
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import (
     SearchParams,
     constrained_search,
     equal_constraint,
     exact_constrained_search,
-    recall,
     unequal_pct_constraint,
 )
 from repro.data.synthetic import make_labeled_corpus, make_queries
@@ -72,3 +70,44 @@ def ground_truth(corpus, q, cons, k=10):
 
 def row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def write_artifact(path: str, meta: dict, preserve: tuple = ()) -> None:
+    """Atomically write a BENCH_*.json artifact (temp file + rename).
+
+    The regression gate (benchmarks/check_regression.py) reads these as
+    committed baselines, so an interrupted run must never leave a
+    truncated/half-written JSON behind — ``os.replace`` makes the update
+    all-or-nothing on POSIX.
+
+    ``preserve`` names top-level keys carried over from the existing
+    artifact when ``meta`` does not provide them — suites whose
+    ``smoke_reference`` is recorded out-of-band must not silently disarm
+    the regression gate by regenerating their full-shape results.
+    """
+    import json
+    import os
+    import tempfile
+
+    for key in preserve:
+        if key in meta or not os.path.exists(path):
+            continue
+        try:
+            with open(path) as fh:
+                old = json.load(fh)
+        except (OSError, json.JSONDecodeError):
+            break
+        if key in old:
+            meta[key] = old[key]
+
+    d = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=".bench_", suffix=".json.tmp")
+    try:
+        with os.fdopen(fd, "w") as fh:
+            json.dump(meta, fh, indent=2)
+            fh.write("\n")
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise

@@ -18,17 +18,24 @@ def main() -> None:
         "--only",
         default="",
         help="comma list: pipeline,constraints,alter_ratio,clusters,mnist,"
-        "kernels,beam,fused,serving",
+        "kernels,beam,fused,serving,streaming",
     )
     ap.add_argument(
         "--smoke",
         action="store_true",
         help="tiny shapes + interpret-mode kernels for the suites that "
-        "support it (currently: fused, serving) — the CI mode exercising "
-        "the fused pipeline incl. BOTH Pallas kernels (exact rows and "
-        "PQ/ADC code rows) and the serving runtime's acceptance row in "
-        "seconds, without writing BENCH_*.json artifacts; other suites "
-        "ignore the flag",
+        "support it (currently: fused, serving, streaming) — the CI mode "
+        "exercising the fused pipeline incl. BOTH Pallas kernels (exact "
+        "rows and PQ/ADC code rows), the serving runtime's acceptance row "
+        "and the streaming churn acceptance row in seconds, without "
+        "writing BENCH_*.json artifacts; other suites ignore the flag",
+    )
+    ap.add_argument(
+        "--json-out",
+        default="",
+        help="also append every suite output line to this file — the "
+        "JSON lines are what benchmarks/check_regression.py diffs "
+        "against the committed BENCH_*.json smoke references",
     )
     args = ap.parse_args()
     selected = set(filter(None, args.only.split(",")))
@@ -47,6 +54,7 @@ def main() -> None:
         bench_mnist_like,
         bench_pipeline,
         bench_serving,
+        bench_streaming,
     )
 
     suites = {
@@ -69,11 +77,21 @@ def main() -> None:
         # acceptance row (>=2x QPS, escalation-tier fill, bounded traces);
         # full mode writes top-level BENCH_PR4.json.
         "serving": bench_serving.main,
+        # bench_streaming replays a churn stream (inserts/deletes/queries)
+        # through the streaming mutable index vs a periodically rebuilt
+        # static oracle and asserts the acceptance row (recall gap <= 5
+        # pts, ZERO tombstoned ids returned); full mode writes BENCH_PR5.json.
+        "streaming": bench_streaming.main,
     }
     print("name,us_per_call,derived")
 
+    json_fh = open(args.json_out, "a") if args.json_out else None
+
     def out(line: str) -> None:
         print(line, flush=True)
+        if json_fh is not None:
+            json_fh.write(line + "\n")
+            json_fh.flush()
 
     failed = []
     for name, fn in suites.items():
@@ -86,6 +104,8 @@ def main() -> None:
             out(f"{name}/ERROR,0,{type(e).__name__}:{str(e)[:120]}")
             failed.append(name)
         print(f"# suite {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if json_fh is not None:
+        json_fh.close()
     if failed:
         # Later suites still ran, but the process must fail so CI's smoke
         # step actually gates on the benchmarked code paths.

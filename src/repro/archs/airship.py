@@ -17,7 +17,7 @@ from jax.sharding import PartitionSpec as P
 from repro.archs.base import Arch, CellSpec
 from repro.core.constraints import LabelSetConstraint
 from repro.core.distributed import make_distributed_search
-from repro.core.types import Corpus, GraphIndex, SearchParams, SearchResult, SearchStats
+from repro.core.types import Corpus, GraphIndex, SearchParams
 from repro.distributed.meshinfo import MeshInfo
 
 

@@ -11,7 +11,6 @@ Non-molecular graphs carry no 3-D coordinates; positions are synthesized
 """
 from __future__ import annotations
 
-import math
 from typing import Dict
 
 import jax

@@ -7,14 +7,13 @@ KV cache), which is linear in S and runs with sequence-sharded KV.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.archs.base import Arch, CellSpec, abstract
+from repro.archs.base import Arch, CellSpec
 from repro.distributed.meshinfo import MeshInfo
 from repro.models.transformer import model as tm
 from repro.train.optimizer import adafactor, adamw

@@ -1,7 +1,6 @@
 """MACE, the four recsys archs, and the paper's own AIRSHIP serve config."""
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from repro.archs.airship import AirshipArch, AirshipServeConfig
 from repro.archs.gnn import GNNArch

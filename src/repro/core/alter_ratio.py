@@ -13,7 +13,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import Corpus, GraphIndex, SatisfiedFn
+from repro.core.types import GraphIndex, SatisfiedFn
 
 Array = jax.Array
 

@@ -181,6 +181,12 @@ class ConstraintTables:
     meta: Array
     cons: Array
     family: str = static_field(default="label")
+    # Corpus-wide tombstone bitmap ((ceil(n/32),) uint32) from
+    # ``Corpus.tombstones``: the kernels AND the candidate's bit into the
+    # satisfied verdict so a deleted slot fails exactly like a failed
+    # constraint. None for static (never-mutated) indexes — the kernels
+    # then skip the probe entirely.
+    tomb: Optional[Array] = None
 
 
 def constraint_tables(constraint, corpus: Corpus) -> Optional[ConstraintTables]:
@@ -188,7 +194,8 @@ def constraint_tables(constraint, corpus: Corpus) -> Optional[ConstraintTables]:
     unfused path (UDF closures are arbitrary jnp code)."""
     if isinstance(constraint, LabelSetConstraint):
         return ConstraintTables(
-            meta=corpus.labels, cons=constraint.words, family="label"
+            meta=corpus.labels, cons=constraint.words, family="label",
+            tomb=corpus.tombstones,
         )
     if isinstance(constraint, RangeConstraint):
         if corpus.attrs is None:
@@ -200,18 +207,45 @@ def constraint_tables(constraint, corpus: Corpus) -> Optional[ConstraintTables]:
                  constraint.hi.astype(jnp.float32)], axis=-1,
             ),
             family="range",
+            tomb=corpus.tombstones,
         )
     return None
 
 
+def tombstone_test(tomb: Array, ids: Array) -> Array:
+    """(W,) uint32 x (B, M) ids -> (B, M) bool — is each id tombstoned?
+
+    Padding ids (< 0) report as tombstoned (they are not returnable either
+    way). The bitmap is corpus-wide, not per-query, so one word gather
+    serves the whole batch.
+    """
+    safe = jnp.maximum(ids, 0)
+    word = tomb[safe // WORD_BITS]
+    bit = (safe % WORD_BITS).astype(jnp.uint32)
+    dead = ((word >> bit) & jnp.uint32(1)).astype(bool)
+    return jnp.where(ids >= 0, dead, True)
+
+
 def make_satisfied_fn(constraint, corpus: Corpus) -> SatisfiedFn:
     if isinstance(constraint, LabelSetConstraint):
-        return label_satisfied_fn(constraint, corpus)
-    if isinstance(constraint, RangeConstraint):
-        return range_satisfied_fn(constraint, corpus)
-    if callable(constraint):
-        return udf_satisfied_fn(constraint, corpus)
-    raise TypeError(f"unsupported constraint: {type(constraint)}")
+        base = label_satisfied_fn(constraint, corpus)
+    elif isinstance(constraint, RangeConstraint):
+        base = range_satisfied_fn(constraint, corpus)
+    elif callable(constraint):
+        base = udf_satisfied_fn(constraint, corpus)
+    else:
+        raise TypeError(f"unsupported constraint: {type(constraint)}")
+    if corpus.tombstones is None:
+        return base
+    # Streaming mutable index: a tombstoned slot fails EVERY constraint
+    # family — deleted vectors stay traversable (frontier pushes key on
+    # ``fresh``, not ``satisfied``) but can never re-enter a result list.
+    tomb = corpus.tombstones
+
+    def satisfied(ids: Array) -> Array:
+        return base(ids) & ~tombstone_test(tomb, ids)
+
+    return satisfied
 
 
 def selectivity(constraint, corpus: Corpus, chunk: int = 1 << 16) -> Array:

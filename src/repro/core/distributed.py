@@ -22,7 +22,6 @@ per-backend special cases in the search body.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional, Sequence
 
 import jax

@@ -110,7 +110,7 @@ class _RowBackend:
 
         return fused_expand(
             queries, self.vectors, ids, visited,
-            tables.meta, tables.cons, family=tables.family,
+            tables.meta, tables.cons, tables.tomb, family=tables.family,
         )
 
 
@@ -198,7 +198,7 @@ class PQBackend:
 
         return fused_expand_adc(
             self.lut, self.codes, ids, visited,
-            tables.meta, tables.cons, family=tables.family,
+            tables.meta, tables.cons, tables.tomb, family=tables.family,
         )
 
 
@@ -212,7 +212,11 @@ class TraversalContext:
     backend  — the distance path (arrays it scores with are pytree children,
                so per-shard contexts shard with their corpus rows);
     tables   — the constraint's raw table views for in-kernel evaluation,
-               None for UDF closures (which force the unfused path);
+               None for UDF closures (which force the unfused path); carries
+               the corpus tombstone bitmap (streaming mutable index) so the
+               fused kernels mask deleted slots exactly like a failed
+               constraint — the unfused path gets the same mask via the
+               tombstone-wrapped ``satisfied`` closure;
     satisfied — the (B, M) ids -> bool constraint closure (static: it is
                trace-time code, never crosses a jit boundary as data);
     fuse     — the resolved fuse decision (static: it selects the compiled

@@ -34,6 +34,7 @@ from repro.core.engine.context import (
 from repro.core.engine.expand import (
     expand_beam,
     expand_beam_fused,
+    mask_first_occurrence,
     pop_frontier_beam,
 )
 from repro.core.engine.policy import is_two_queue
@@ -117,6 +118,12 @@ def seed_state(
         start_d = -neg_top
         start_ids = jnp.take_along_axis(sample_ids_b, top_pos, axis=-1)
         fresh = ~vis.visited_test(state.visited, start_ids)
+        # The visited scatter-ADD needs dup-free rows; a static build's
+        # sample is drawn without replacement but a streaming index's
+        # maintained sample may repeat ids — keep only the first copy
+        # (exact no-op for dup-free samples, so the golden path is
+        # bit-identical).
+        fresh = mask_first_occurrence(start_ids, fresh)
         state = state.replace(
             oth=q.queue_push(state.oth, start_d, start_ids, fresh),
             visited=vis.visited_set(state.visited, start_ids, fresh),
@@ -135,6 +142,8 @@ def seed_state(
     start_valid = jnp.isfinite(start_d)
     # Entry vertex may coincide with a start — only set genuinely fresh bits.
     fresh = start_valid & ~vis.visited_test(state.visited, start_ids)
+    # Dup-free guard for the visited scatter-ADD (see the vanilla branch).
+    fresh = mask_first_occurrence(start_ids, fresh)
 
     target = "oth" if params.mode == "start" else "sat"
     pushed = q.queue_push(getattr(state, target), start_d, start_ids, fresh)

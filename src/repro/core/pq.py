@@ -14,7 +14,6 @@ same (codes, lut) bundle that drives graph traversal when
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

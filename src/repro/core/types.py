@@ -1,7 +1,7 @@
 """Core value types for the constrained-search system."""
 from __future__ import annotations
 
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,11 +19,19 @@ class Corpus:
     labels:  (n,)   int32 — the categorical attribute used by the paper's
              equal / unequal-X% constraint families
     attrs:   (n, m) float32 — optional numeric attributes for range UDFs
+    tombstones: (ceil(n/32),) uint32 — optional dead-slot bitmap for the
+             streaming mutable index (repro.streaming). A set bit marks a
+             slot that must never be RETURNED — deleted-but-unconsolidated
+             vertices (still traversable as routing nodes) and free pool
+             slots alike. None (the static-index default) means every row
+             is live; every constraint family masks against this bitmap
+             exactly like a failed constraint (core/constraints.py).
     """
 
     vectors: Array
     labels: Array
     attrs: Optional[Array] = None
+    tombstones: Optional[Array] = None
 
     @property
     def n(self) -> int:

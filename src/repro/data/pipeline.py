@@ -8,7 +8,6 @@ mesh's data-parallel layout.
 """
 from __future__ import annotations
 
-from typing import Iterator, Optional
 
 import jax
 import jax.numpy as jnp

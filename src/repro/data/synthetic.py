@@ -9,7 +9,6 @@ labeling + R% randomization, and synthesizes queries with labels generated
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

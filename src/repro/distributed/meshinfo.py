@@ -12,10 +12,9 @@ test mesh, the 16x16 single pod, and the 2x16x16 multi-pod mesh.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 

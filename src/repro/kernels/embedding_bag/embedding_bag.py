@@ -25,13 +25,13 @@ Array = jax.Array
 
 def _kernel(ids_ref, row_ref, out_ref, *, bag: int):
     b = pl.program_id(0)
-    l = pl.program_id(1)
+    lane = pl.program_id(1)
 
-    @pl.when(l == 0)
+    @pl.when(lane == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    valid = (ids_ref[b, l] >= 0).astype(jnp.float32)
+    valid = (ids_ref[b, lane] >= 0).astype(jnp.float32)
     out_ref[...] += valid * row_ref[...].astype(jnp.float32)
 
 

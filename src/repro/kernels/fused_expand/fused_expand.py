@@ -81,22 +81,38 @@ def _constraint_ok(family, meta_val, cons_ref):
     return (meta_val >= cons_ref[0, 0]) & (meta_val <= cons_ref[0, 1])
 
 
-def _make_kernel(family: str, m_blk: int):
+def _alive(tomb_ref, cid):
+    """Probe the corpus-wide tombstone bitmap (VMEM-resident, shared by
+    every query): True when the candidate has NOT been deleted/freed."""
+    sid = jnp.maximum(cid, 0)
+    tword = tomb_ref[0, sid // WORD_BITS]
+    tbit = (sid % WORD_BITS).astype(jnp.uint32)
+    return ((tword >> tbit) & jnp.uint32(1)) == jnp.uint32(0)
+
+
+def _make_kernel(family: str, m_blk: int, with_tomb: bool):
     def kernel(
         ids_ref,  # (B, M) int32, scalar-prefetched (SMEM)
         q_ref,  # (1, d) query row (VMEM)
         cons_ref,  # (1, Lw) uint32 words | (1, 2) f32 bounds (VMEM)
         vis_ref,  # (1, W) uint32 visited words (VMEM)
-        corpus_hbm,  # (n, d) full corpus (ANY/HBM)
-        meta_hbm,  # (n, 1) label/attr column (ANY/HBM)
-        dist_ref,  # (1, M_blk) f32 out
-        sat_ref,  # (1, M_blk) int32 out
-        fresh_ref,  # (1, M_blk) int32 out
-        row_buf,  # (2, 1, d) VMEM scratch — double-buffered corpus rows
-        meta_buf,  # (2, 1, 1) VMEM scratch — double-buffered metadata words
-        row_sem,  # (2,) DMA semaphores
-        meta_sem,  # (2,) DMA semaphores
+        *rest,  # [tomb_ref (1, Wt) u32,] corpus/meta HBM, outs, scratch
     ):
+        if with_tomb:
+            tomb_ref, *rest = rest
+        else:
+            tomb_ref = None
+        (
+            corpus_hbm,  # (n, d) full corpus (ANY/HBM)
+            meta_hbm,  # (n, 1) label/attr column (ANY/HBM)
+            dist_ref,  # (1, M_blk) f32 out
+            sat_ref,  # (1, M_blk) int32 out
+            fresh_ref,  # (1, M_blk) int32 out
+            row_buf,  # (2, 1, d) VMEM scratch — double-buffered corpus rows
+            meta_buf,  # (2, 1, 1) VMEM scratch — double-buffered metadata words
+            row_sem,  # (2,) DMA semaphores
+            meta_sem,  # (2,) DMA semaphores
+        ) = rest
         i = pl.program_id(0)
         jb = pl.program_id(1)
         base = jb * m_blk
@@ -141,6 +157,10 @@ def _make_kernel(family: str, m_blk: int):
             # --- visited probe + constraint on the metadata word -----------
             unvisited = _unvisited(vis_ref, cid)
             ok = _constraint_ok(family, meta_buf[slot, 0, 0], cons_ref)
+            if with_tomb:
+                # Tombstone-as-constraint (streaming mutable index): a
+                # deleted slot fails `sat` but stays `fresh`-traversable.
+                ok = ok & _alive(tomb_ref, cid)
 
             dist_ref[0, t] = jnp.where(valid, d2, jnp.inf)
             sat_ref[0, t] = (valid & ok).astype(jnp.int32)
@@ -162,12 +182,14 @@ def fused_expand_kernel(
     visited: Array,
     meta: Array,
     cons: Array,
+    tomb: Array | None = None,
     *,
     family: str,
     m_blk: int | None = None,
     interpret: bool = False,
 ) -> tuple[Array, Array, Array]:
     """(B, d), (n, d), (B, M) i32, (B, W) u32, (n,|n,1) meta, (B, ·) cons
+    [, (Wt,) u32 tombstones]
     -> ((B, M) f32 dists, (B, M) i32 satisfied, (B, M) i32 fresh)."""
     if family not in ("label", "range"):
         raise ValueError(f"unsupported in-kernel constraint family: {family}")
@@ -184,6 +206,16 @@ def fused_expand_kernel(
     if family == "range":
         meta2d = meta2d.astype(jnp.float32)
 
+    with_tomb = tomb is not None
+    # The tombstone bitmap is corpus-wide: ONE (1, Wt) VMEM block revisited
+    # by every grid step (index map pins it to block (0, 0)), unlike the
+    # per-query operands that follow the batch axis.
+    tomb_specs = (
+        [pl.BlockSpec((1, tomb.shape[0]), lambda i, j, ids_p: (0, 0))]
+        if with_tomb
+        else []
+    )
+    tomb_args = (tomb.reshape(1, -1),) if with_tomb else ()
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b, m_pad // m_blk),
@@ -191,6 +223,7 @@ def fused_expand_kernel(
             pl.BlockSpec((1, d), lambda i, j, ids_p: (i, 0)),
             pl.BlockSpec((1, cons.shape[1]), lambda i, j, ids_p: (i, 0)),
             pl.BlockSpec((1, visited.shape[1]), lambda i, j, ids_p: (i, 0)),
+            *tomb_specs,
             pl.BlockSpec(memory_space=pltpu.ANY),  # corpus stays in HBM
             pl.BlockSpec(memory_space=pltpu.ANY),  # metadata column in HBM
         ],
@@ -207,7 +240,7 @@ def fused_expand_kernel(
         ],
     )
     dists, sat, fresh = pl.pallas_call(
-        _make_kernel(family, m_blk),
+        _make_kernel(family, m_blk, with_tomb),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((b, m_pad), jnp.float32),
@@ -215,26 +248,35 @@ def fused_expand_kernel(
             jax.ShapeDtypeStruct((b, m_pad), jnp.int32),
         ],
         interpret=interpret,
-    )(ids, queries, cons, visited, corpus, meta2d)
+    )(ids, queries, cons, visited, *tomb_args, corpus, meta2d)
     return dists[:, :m], sat[:, :m], fresh[:, :m]
 
 
-def _make_adc_kernel(family: str, m_blk: int, m_sub: int, n_cent: int):
+def _make_adc_kernel(
+    family: str, m_blk: int, m_sub: int, n_cent: int, with_tomb: bool
+):
     def kernel(
         ids_ref,  # (B, M) int32, scalar-prefetched (SMEM)
         lut_ref,  # (1, m_sub, n_cent) f32 ADC table for this query (VMEM)
         cons_ref,  # (1, Lw) uint32 words | (1, 2) f32 bounds (VMEM)
         vis_ref,  # (1, W) uint32 visited words (VMEM)
-        codes_hbm,  # (n, m_sub) int32 full code matrix (ANY/HBM)
-        meta_hbm,  # (n, 1) label/attr column (ANY/HBM)
-        dist_ref,  # (1, M_blk) f32 out
-        sat_ref,  # (1, M_blk) int32 out
-        fresh_ref,  # (1, M_blk) int32 out
-        code_buf,  # (2, 1, m_sub) VMEM scratch — double-buffered code rows
-        meta_buf,  # (2, 1, 1) VMEM scratch — double-buffered metadata words
-        code_sem,  # (2,) DMA semaphores
-        meta_sem,  # (2,) DMA semaphores
+        *rest,  # [tomb_ref (1, Wt) u32,] codes/meta HBM, outs, scratch
     ):
+        if with_tomb:
+            tomb_ref, *rest = rest
+        else:
+            tomb_ref = None
+        (
+            codes_hbm,  # (n, m_sub) int32 full code matrix (ANY/HBM)
+            meta_hbm,  # (n, 1) label/attr column (ANY/HBM)
+            dist_ref,  # (1, M_blk) f32 out
+            sat_ref,  # (1, M_blk) int32 out
+            fresh_ref,  # (1, M_blk) int32 out
+            code_buf,  # (2, 1, m_sub) VMEM scratch — double-buffered code rows
+            meta_buf,  # (2, 1, 1) VMEM scratch — double-buffered metadata words
+            code_sem,  # (2,) DMA semaphores
+            meta_sem,  # (2,) DMA semaphores
+        ) = rest
         i = pl.program_id(0)
         jb = pl.program_id(1)
         base = jb * m_blk
@@ -282,6 +324,10 @@ def _make_adc_kernel(family: str, m_blk: int, m_sub: int, n_cent: int):
             # --- visited probe + constraint on the metadata word -----------
             unvisited = _unvisited(vis_ref, cid)
             ok = _constraint_ok(family, meta_buf[slot, 0, 0], cons_ref)
+            if with_tomb:
+                # Tombstone-as-constraint (streaming mutable index): a
+                # deleted slot fails `sat` but stays `fresh`-traversable.
+                ok = ok & _alive(tomb_ref, cid)
 
             dist_ref[0, t] = jnp.where(valid, d2, jnp.inf)
             sat_ref[0, t] = (valid & ok).astype(jnp.int32)
@@ -303,13 +349,14 @@ def fused_expand_adc_kernel(
     visited: Array,
     meta: Array,
     cons: Array,
+    tomb: Array | None = None,
     *,
     family: str,
     m_blk: int | None = None,
     interpret: bool = False,
 ) -> tuple[Array, Array, Array]:
     """(B, m_sub, n_cent) f32 LUT, (n, m_sub) i32 codes, (B, M) i32 ids,
-    (B, W) u32 visited, (n,|n,1) meta, (B, ·) cons
+    (B, W) u32 visited, (n,|n,1) meta, (B, ·) cons [, (Wt,) u32 tombstones]
     -> ((B, M) f32 ADC dists, (B, M) i32 satisfied, (B, M) i32 fresh)."""
     if family not in ("label", "range"):
         raise ValueError(f"unsupported in-kernel constraint family: {family}")
@@ -328,6 +375,13 @@ def fused_expand_adc_kernel(
     codes = codes.astype(jnp.int32)
     lut = lut.astype(jnp.float32)
 
+    with_tomb = tomb is not None
+    tomb_specs = (
+        [pl.BlockSpec((1, tomb.shape[0]), lambda i, j, ids_p: (0, 0))]
+        if with_tomb
+        else []
+    )
+    tomb_args = (tomb.reshape(1, -1),) if with_tomb else ()
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b, m_pad // m_blk),
@@ -335,6 +389,7 @@ def fused_expand_adc_kernel(
             pl.BlockSpec((1, m_sub, n_cent), lambda i, j, ids_p: (i, 0, 0)),
             pl.BlockSpec((1, cons.shape[1]), lambda i, j, ids_p: (i, 0)),
             pl.BlockSpec((1, visited.shape[1]), lambda i, j, ids_p: (i, 0)),
+            *tomb_specs,
             pl.BlockSpec(memory_space=pltpu.ANY),  # code matrix stays in HBM
             pl.BlockSpec(memory_space=pltpu.ANY),  # metadata column in HBM
         ],
@@ -351,7 +406,7 @@ def fused_expand_adc_kernel(
         ],
     )
     dists, sat, fresh = pl.pallas_call(
-        _make_adc_kernel(family, m_blk, m_sub, n_cent),
+        _make_adc_kernel(family, m_blk, m_sub, n_cent, with_tomb),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((b, m_pad), jnp.float32),
@@ -359,5 +414,5 @@ def fused_expand_adc_kernel(
             jax.ShapeDtypeStruct((b, m_pad), jnp.int32),
         ],
         interpret=interpret,
-    )(ids, lut, cons, visited, codes, meta2d)
+    )(ids, lut, cons, visited, *tomb_args, codes, meta2d)
     return dists[:, :m], sat[:, :m], fresh[:, :m]

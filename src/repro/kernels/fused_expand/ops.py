@@ -25,6 +25,7 @@ def fused_expand(
     visited: Array,
     meta: Array,
     cons: Array,
+    tomb: Array | None = None,
     *,
     family: str,
     force_kernel: bool = False,
@@ -36,19 +37,23 @@ def fused_expand(
     (n,) f32 attribute values for family="range"); cons the per-query operand
     ((B, Lw) uint32 words / (B, 2) f32 bounds) — see
     ``repro.core.constraints.constraint_tables`` for the raw-view builder.
+    ``tomb`` is the optional corpus-wide tombstone bitmap ((Wt,) uint32,
+    streaming mutable index): a set bit clears ``satisfied`` in-kernel,
+    exactly like a failed constraint.
     """
     if jax.default_backend() == "tpu":
         d, s, f = fused_expand_kernel(
-            queries, corpus, ids, visited, meta, cons, family=family, m_blk=m_blk
+            queries, corpus, ids, visited, meta, cons, tomb,
+            family=family, m_blk=m_blk,
         )
     elif force_kernel:
         d, s, f = fused_expand_kernel(
-            queries, corpus, ids, visited, meta, cons,
+            queries, corpus, ids, visited, meta, cons, tomb,
             family=family, m_blk=m_blk, interpret=True,
         )
     else:
         return fused_expand_ref(
-            queries, corpus, ids, visited, meta, cons, family=family
+            queries, corpus, ids, visited, meta, cons, tomb, family=family
         )
     return d, s.astype(bool), f.astype(bool)
 
@@ -60,6 +65,7 @@ def fused_expand_adc(
     visited: Array,
     meta: Array,
     cons: Array,
+    tomb: Array | None = None,
     *,
     family: str,
     force_kernel: bool = False,
@@ -76,15 +82,16 @@ def fused_expand_adc(
     """
     if jax.default_backend() == "tpu":
         d, s, f = fused_expand_adc_kernel(
-            lut, codes, ids, visited, meta, cons, family=family, m_blk=m_blk
+            lut, codes, ids, visited, meta, cons, tomb,
+            family=family, m_blk=m_blk,
         )
     elif force_kernel:
         d, s, f = fused_expand_adc_kernel(
-            lut, codes, ids, visited, meta, cons,
+            lut, codes, ids, visited, meta, cons, tomb,
             family=family, m_blk=m_blk, interpret=True,
         )
     else:
         return fused_expand_adc_ref(
-            lut, codes, ids, visited, meta, cons, family=family
+            lut, codes, ids, visited, meta, cons, tomb, family=family
         )
     return d, s.astype(bool), f.astype(bool)

@@ -23,9 +23,19 @@ WORD_BITS = 32
 
 
 def _fresh_and_sat(
-    ids: Array, visited: Array, meta: Array, cons: Array, family: str
+    ids: Array,
+    visited: Array,
+    meta: Array,
+    cons: Array,
+    family: str,
+    tomb: Array | None = None,
 ) -> tuple[Array, Array]:
-    """Shared mask logic: (valid & unvisited, valid & constraint-ok)."""
+    """Shared mask logic: (valid & unvisited, valid & constraint-ok).
+
+    ``tomb`` is the optional corpus-wide tombstone bitmap ((W,) uint32,
+    streaming mutable index): a set bit fails ``satisfied`` exactly like a
+    failed constraint while leaving ``fresh`` (traversability) untouched.
+    """
     safe = jnp.maximum(ids, 0)
     valid = ids >= 0
 
@@ -45,6 +55,10 @@ def _fresh_and_sat(
         ok = (val >= cons[:, 0:1]) & (val <= cons[:, 1:2])
     else:
         raise ValueError(f"unsupported in-kernel constraint family: {family}")
+    if tomb is not None:
+        tword = tomb.reshape(-1)[safe // WORD_BITS]
+        alive = ((tword >> vbit) & jnp.uint32(1)) == jnp.uint32(0)
+        ok = ok & alive
     return fresh, valid & ok
 
 
@@ -55,6 +69,7 @@ def fused_expand_ref(
     visited: Array,
     meta: Array,
     cons: Array,
+    tomb: Array | None = None,
     *,
     family: str,
 ) -> tuple[Array, Array, Array]:
@@ -66,7 +81,7 @@ def fused_expand_ref(
     dists = batched_rowwise_sqdist(queries, rows)
     dists = jnp.where(valid, dists, jnp.inf)
 
-    fresh, sat = _fresh_and_sat(ids, visited, meta, cons, family)
+    fresh, sat = _fresh_and_sat(ids, visited, meta, cons, family, tomb)
     return dists, sat, fresh
 
 
@@ -77,6 +92,7 @@ def fused_expand_adc_ref(
     visited: Array,
     meta: Array,
     cons: Array,
+    tomb: Array | None = None,
     *,
     family: str,
 ) -> tuple[Array, Array, Array]:
@@ -98,5 +114,5 @@ def fused_expand_adc_ref(
     dists = jnp.sum(gathered, axis=-1)
     dists = jnp.where(valid, dists, jnp.inf)
 
-    fresh, sat = _fresh_and_sat(ids, visited, meta, cons, family)
+    fresh, sat = _fresh_and_sat(ids, visited, meta, cons, family, tomb)
     return dists, sat, fresh

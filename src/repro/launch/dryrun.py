@@ -16,12 +16,11 @@ Usage:
 """
 import argparse  # noqa: E402
 import json  # noqa: E402
-import re  # noqa: E402
 import time  # noqa: E402
 import traceback  # noqa: E402
 
 import jax  # noqa: E402
-from repro.common.compat import cost_analysis_dict, set_mesh
+from repro.common.compat import cost_analysis_dict, set_mesh  # noqa: E402
 from jax.sharding import NamedSharding  # noqa: E402
 
 from repro.archs.base import get_arch  # noqa: E402

@@ -46,7 +46,26 @@ def build_runtime(args, corpus, clock):
         print(f"training PQ codebooks (m_sub={m_sub})...")
         return pq_train(jax.random.PRNGKey(4), vectors, m_sub=m_sub, n_cent=256)
 
-    if args.distributed:
+    if args.churn > 0:
+        if args.distributed or args.approx == "pq":
+            raise SystemExit(
+                "--churn serves through the streaming local executor "
+                "(exact backend); drop --distributed/--approx pq"
+            )
+        from repro.serving import StreamingLocalExecutor
+        from repro.streaming import StreamingIndex
+
+        print("building streaming index (slot pool)...")
+        graph = build_index(
+            jax.random.PRNGKey(1), corpus, degree=16, sample_size=512
+        )
+        index = StreamingIndex.from_static(
+            corpus, graph, ef_insert=args.base_ef
+        )
+        executor = StreamingLocalExecutor(
+            index, consolidate_after=args.consolidate_after
+        )
+    elif args.distributed:
         from repro.core import shard_corpus_for_mesh
         from repro.serving import DistributedExecutor
 
@@ -117,6 +136,13 @@ def main():
                     help="admission-queue bound (backpressure)")
     ap.add_argument("--distributed", action="store_true",
                     help="serve through the scatter-search-merge mesh path")
+    ap.add_argument("--churn", type=float, default=0.0,
+                    help="fraction of the stream that is upsert/delete "
+                    "traffic against the streaming mutable index (0 = "
+                    "static index; try 0.3 to replay the churn workload)")
+    ap.add_argument("--consolidate-after", type=int, default=64,
+                    help="pending tombstones that trigger a background "
+                    "consolidation pass at the next flush boundary")
     ap.add_argument(
         "--approx", default="exact", choices=("exact", "pq"),
         help="distance backend for the walk: exact rows or PQ/ADC codes "
@@ -144,12 +170,25 @@ def main():
     print(f"compiled {compiled} closures; serving {args.requests} requests "
           f"at Poisson rate {args.rate}/s...")
 
-    items = mixed_workload(
-        7, corpus, args.requests, args.labels,
-        k_choices=tuple(sorted({min(4, args.k_cap), min(8, args.k_cap),
-                                args.k_cap})),
-    )
-    responses, rejected = replay_poisson(runtime, items, rate=args.rate, seed=11)
+    k_choices = tuple(sorted({min(4, args.k_cap), min(8, args.k_cap),
+                              args.k_cap}))
+    if args.churn > 0:
+        from repro.serving import churn_workload, replay_churn
+
+        items = churn_workload(
+            7, corpus, args.requests, args.labels,
+            mutation_frac=args.churn, k_choices=k_choices,
+        )
+        responses, rejected = replay_churn(
+            runtime, items, rate=args.rate, seed=11
+        )
+    else:
+        items = mixed_workload(
+            7, corpus, args.requests, args.labels, k_choices=k_choices,
+        )
+        responses, rejected = replay_poisson(
+            runtime, items, rate=args.rate, seed=11
+        )
 
     report = runtime.report()
     print(json.dumps(report, indent=2, default=str))

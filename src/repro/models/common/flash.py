@@ -17,7 +17,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from functools import partial
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -74,7 +74,7 @@ def _fwd_core(q: Array, k: Array, v: Array, meta: AttnMeta):
     q_pos = meta.q_offset + jnp.arange(sq)
 
     def step(carry, idx):
-        m, l, acc = carry
+        m, lsum, acc = carry
         kc = jax.lax.dynamic_slice_in_dim(kp, idx * chunk, chunk, axis=1)
         vc = jax.lax.dynamic_slice_in_dim(vp, idx * chunk, chunk, axis=1)
         s = jnp.einsum(
@@ -93,7 +93,7 @@ def _fwd_core(q: Array, k: Array, v: Array, meta: AttnMeta):
         p = jnp.exp(s - m_safe[..., None])
         p = jnp.where(valid[None, None, None], p, 0.0)
         corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
-        l_new = l * corr + jnp.sum(p, axis=-1)
+        l_new = lsum * corr + jnp.sum(p, axis=-1)
         pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
         acc_new = acc * corr[..., None] + pv
         return (m_new, l_new, acc_new), None
@@ -103,10 +103,10 @@ def _fwd_core(q: Array, k: Array, v: Array, meta: AttnMeta):
         _c(jnp.zeros((b, hkv, g, sq), jnp.float32)),
         _c(jnp.zeros((b, hkv, g, sq, dhv), jnp.float32)),
     )
-    (m, l, acc), _ = jax.lax.scan(step, init, jnp.arange(n_chunks))
-    out5 = acc / jnp.maximum(l, 1e-30)[..., None]  # (b, hkv, g, sq, dhv)
+    (m, lsum, acc), _ = jax.lax.scan(step, init, jnp.arange(n_chunks))
+    out5 = acc / jnp.maximum(lsum, 1e-30)[..., None]  # (b, hkv, g, sq, dhv)
     lse = jnp.where(
-        (l > 0) & jnp.isfinite(m), m + jnp.log(jnp.maximum(l, 1e-30)), -jnp.inf
+        (lsum > 0) & jnp.isfinite(m), m + jnp.log(jnp.maximum(lsum, 1e-30)), -jnp.inf
     )
     out = out5.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dhv).astype(q.dtype)
     return out, lse  # lse: (b, hkv, g, sq)

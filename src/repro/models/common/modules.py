@@ -7,7 +7,7 @@ emit (params, shardings) pairs without a module system.
 from __future__ import annotations
 
 import math
-from typing import Any, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,7 @@ accumulators are combined with one psum per layer (see gnn train_step).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

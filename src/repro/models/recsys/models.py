@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -359,17 +359,17 @@ def two_tower_loss(p, cfg, mi, batch, *, neg_chunk: int = 4096):
 
         @jax.checkpoint
         def step(carry, vc):
-            m, l = carry
+            m, lsum = carry
             logits = (u32 @ vc.T) / tau  # (B, chunk)
             m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
-            l = l * jnp.exp(m - m_new) + jnp.sum(
+            lsum = lsum * jnp.exp(m - m_new) + jnp.sum(
                 jnp.exp(logits - m_new[:, None]), axis=-1
             )
-            return (m_new, l), None
+            return (m_new, lsum), None
 
         init = (jnp.full((b,), -jnp.inf, jnp.float32), jnp.zeros((b,), jnp.float32))
-        (m, l), _ = jax.lax.scan(step, init, vc_all)
-        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        (m, lsum), _ = jax.lax.scan(step, init, vc_all)
+        lse = m + jnp.log(jnp.maximum(lsum, 1e-30))
     loss = jnp.mean(lse - diag)
     return loss, {"loss": loss}
 

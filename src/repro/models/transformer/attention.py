@@ -80,15 +80,15 @@ def gqa_train(p: Params, cfg, mi: MeshInfo, x: Array, positions: Array) -> Array
 # ---------------------------------------------------------------------------
 # Split-KV decode with LSE combine (shared by GQA and MLA)
 # ---------------------------------------------------------------------------
-def _lse_combine(m: Array, l: Array, o: Array, axis: Optional[str]):
-    """Combine per-shard partial softmax (m,l,o) exactly across ``axis``."""
+def _lse_combine(m: Array, lsum: Array, o: Array, axis: Optional[str]):
+    """Combine per-shard partial softmax (m,lsum,o) exactly across ``axis``."""
     if axis is None:
-        safe_l = jnp.maximum(l, 1e-30)
+        safe_l = jnp.maximum(lsum, 1e-30)
         return o / safe_l[..., None]
     m_g = jax.lax.pmax(m, axis)
     m_safe = jnp.where(jnp.isfinite(m_g), m_g, 0.0)
     corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
-    l_g = jax.lax.psum(l * corr, axis)
+    l_g = jax.lax.psum(lsum * corr, axis)
     o_g = jax.lax.psum(o * corr[..., None], axis)
     return o_g / jnp.maximum(l_g, 1e-30)[..., None]
 
@@ -110,14 +110,14 @@ def _chunked_partial_softmax(score_fn, value_fn, s_local: int, kv_base, pos,
     assert s_local % chunk == 0, (s_local, chunk)
 
     def step(carry, idx):
-        m, l, o = carry
+        m, lsum, o = carry
         start = idx * chunk
         s = score_fn(start, chunk)  # (..., chunk), -inf masked
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
         p = jnp.where(jnp.isfinite(s), jnp.exp(s - m_safe[..., None]), 0.0)
         corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
-        l_new = l * corr + jnp.sum(p, axis=-1)
+        l_new = lsum * corr + jnp.sum(p, axis=-1)
         o_new = o * corr[..., None] + value_fn(p, start, chunk)
         return (m_new, l_new, o_new), None
 
@@ -126,8 +126,8 @@ def _chunked_partial_softmax(score_fn, value_fn, s_local: int, kv_base, pos,
         jnp.zeros(init_o_shape[:-1], jnp.float32),
         jnp.zeros(init_o_shape, jnp.float32),
     )
-    (m, l, o), _ = jax.lax.scan(step, init, jnp.arange(n_chunks))
-    return m, l, o
+    (m, lsum, o), _ = jax.lax.scan(step, init, jnp.arange(n_chunks))
+    return m, lsum, o
 
 
 def gqa_decode_attend(
@@ -176,10 +176,10 @@ def gqa_decode_attend(
             preferred_element_type=jnp.float32,
         )
 
-    m, l, o = _chunked_partial_softmax(
+    m, lsum, o = _chunked_partial_softmax(
         score_fn, value_fn, s_local, None, pos, (b, hkv, g, dh)
     )
-    out = _lse_combine(m, l, o, seq_axis)  # (B, Hkv, G, dh)
+    out = _lse_combine(m, lsum, o, seq_axis)  # (B, Hkv, G, dh)
     return out.reshape(b, h, dh), k_cache, v_cache
 
 
@@ -328,10 +328,10 @@ def mla_decode_attend(
             preferred_element_type=jnp.float32,
         )
 
-    m, l, o_lat = _chunked_partial_softmax(
+    m, lsum, o_lat = _chunked_partial_softmax(
         score_fn, value_fn, s_local, None, pos, (b, h, r)
     )
-    o_lat = _lse_combine(m, l, o_lat, seq_axis)
+    o_lat = _lse_combine(m, lsum, o_lat, seq_axis)
     out = jnp.einsum("bhr,rhd->bhd", o_lat, w_uv)  # (B, H, dv)
     out = out.reshape(b, h * dv).astype(x_tok.dtype)
     return out @ p["wo"]["w"].astype(x_tok.dtype), c_cache

@@ -6,8 +6,7 @@ sequence-sharded KV-cache decode path, and optional multi-token prediction
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ ICI (per the assignment).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 PEAK_FLOPS = 197e12  # bf16 / chip
 HBM_BW = 819e9  # B/s

@@ -9,7 +9,6 @@ from __future__ import annotations
 import glob
 import json
 import os
-from typing import Optional
 
 from repro.archs.base import get_arch
 from repro.roofline import model as rm

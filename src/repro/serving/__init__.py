@@ -13,21 +13,27 @@ from repro.serving.runtime import (
     DistributedExecutor,
     LocalExecutor,
     ServingRuntime,
+    StreamingLocalExecutor,
     assemble_constraint,
     assemble_queries,
 )
 from repro.serving.telemetry import Telemetry, percentile
 from repro.serving.types import (
+    MUTATION_FAMILIES,
     AdmissionError,
+    DeleteRequest,
     Request,
     Response,
+    UpsertRequest,
     VirtualClock,
     wall_clock,
 )
 from repro.serving.workload import (
     WorkItem,
+    churn_workload,
     label_words_row,
     mixed_workload,
+    replay_churn,
     replay_poisson,
 )
 
@@ -37,24 +43,30 @@ __all__ = [
     "BATCH_LADDER",
     "CompileCache",
     "ControllerConfig",
+    "DeleteRequest",
     "DistributedExecutor",
     "DynamicBatcher",
     "LocalExecutor",
+    "MUTATION_FAMILIES",
     "MicroBatch",
     "Request",
     "Response",
     "ServingRuntime",
+    "StreamingLocalExecutor",
     "Telemetry",
     "TraceBudgetError",
+    "UpsertRequest",
     "VirtualClock",
     "WorkItem",
     "assemble_constraint",
     "assemble_queries",
     "bucket_for",
+    "churn_workload",
     "label_words_row",
     "make_tier_ladder",
     "mixed_workload",
     "percentile",
+    "replay_churn",
     "replay_poisson",
     "wall_clock",
 ]

@@ -37,7 +37,15 @@ from repro.serving.batcher import BATCH_LADDER, DynamicBatcher, MicroBatch
 from repro.serving.cache import CompileCache
 from repro.serving.controller import AdaptiveController, make_tier_ladder
 from repro.serving.telemetry import Telemetry
-from repro.serving.types import AdmissionError, Request, Response, wall_clock
+from repro.serving.types import (
+    MUTATION_FAMILIES,
+    AdmissionError,
+    DeleteRequest,
+    Request,
+    Response,
+    UpsertRequest,
+    wall_clock,
+)
 
 Array = jax.Array
 
@@ -108,6 +116,92 @@ class LocalExecutor:
 
         def fn(queries: Array, constraint) -> SearchResult:
             return jitted(self.corpus, self.graph, queries, constraint, self.pq_index)
+
+        return fn
+
+
+class StreamingLocalExecutor:
+    """Epoch-versioned closures over a mutable ``StreamingIndex``.
+
+    The slot pool keeps every array shape static at the pool capacity, so
+    ONE compiled closure per (bucket, family, tier) serves every epoch —
+    mutations swap the snapshot the closure reads, never its shapes. The
+    swap is explicit (``refresh``): the runtime calls it once per flush
+    boundary after applying that flush's mutation microbatches, so every
+    query batch of a flush runs against one epoch and queries already
+    dispatched keep the epoch they started with.
+    """
+
+    def __init__(self, index, *, consolidate_after: int = 64):
+        self.index = index
+        # Background consolidation policy: splice tombstones out once this
+        # many deletes are pending (0 disables auto-consolidation).
+        self.consolidate_after = int(consolidate_after)
+        self.traces = 0
+        self.snapshot = index.snapshot()
+
+    @property
+    def dim(self) -> int:
+        return self.index.dim
+
+    @property
+    def epoch(self) -> int:
+        return self.snapshot.epoch
+
+    def refresh(self) -> int:
+        """Publish the latest epoch (running consolidation when due) and
+        atomically swap the snapshot future dispatches will read."""
+        if (
+            self.consolidate_after
+            and self.index.pool.n_pending >= self.consolidate_after
+        ):
+            self.index.consolidate()
+        self.snapshot = self.index.snapshot()
+        return self.snapshot.epoch
+
+    def apply_mutations(self, requests: Sequence[Request]) -> list:
+        """Host-side mutation application; returns one (ok, slot) per
+        request. The new epoch is NOT published here — ``refresh`` does
+        that once per flush boundary. A request that cannot apply (e.g.
+        pool exhaustion after an emergency consolidation) reports
+        ``ok=False`` instead of raising: an exception mid-batch would
+        strand the batch's requests in the runtime's in-flight count.
+        """
+        out = []
+        for req in requests:
+            if isinstance(req, UpsertRequest):
+                label, attrs = req.operand
+                try:
+                    if self.index.pool.n_free == 0 and self.index.pool.n_pending:
+                        # Emergency reclaim: trade one early consolidation
+                        # for not shedding the insert.
+                        self.index.consolidate()
+                    slot = self.index.insert(req.query, label=label, attrs=attrs)
+                    out.append((True, slot))
+                except RuntimeError:  # pool exhausted, nothing reclaimable
+                    out.append((False, -1))
+            elif isinstance(req, DeleteRequest):
+                slot = int(req.operand)
+                out.append((self.index.delete(slot), slot))
+            else:
+                raise TypeError(f"not a mutation request: {type(req)}")
+        return out
+
+    def build(
+        self, bucket: int, family: str, params: SearchParams
+    ) -> Callable[..., SearchResult]:
+        del bucket, family  # fixed by the traced shapes themselves
+
+        def impl(corpus, graph, queries, constraint):
+            self.traces += 1  # trace-time side effect: runs once per trace
+            ctx = build_context(corpus, constraint, queries, params, None)
+            return search_with_context(ctx, corpus, graph, queries, params)
+
+        jitted = jax.jit(impl)
+
+        def fn(queries: Array, constraint) -> SearchResult:
+            snap = self.snapshot  # the epoch pinned at dispatch time
+            return jitted(snap.corpus, snap.graph, queries, constraint)
 
         return fn
 
@@ -243,28 +337,89 @@ class ServingRuntime:
             raise ValueError(f"family {family!r} not served (have {self.families})")
         if k > self.controller.k_cap:
             raise ValueError(f"k={k} exceeds the ladder's k cap {self.controller.k_cap}")
+        return self._admit(
+            Request(
+                req_id=self._next_id,
+                query=np.asarray(query, dtype=np.float32),
+                k=int(k),
+                family=family,
+                operand=operand,
+                deadline=deadline,
+                arrival_t=self.clock(),
+                tier=self.controller.tier_for(family),
+            )
+        )
+
+    def _admit(self, req: Request) -> int:
         if self._in_flight >= self.max_pending:
             self.telemetry.on_reject()
             raise AdmissionError(
                 f"{self._in_flight} requests in flight >= max_pending="
                 f"{self.max_pending}"
             )
-        now = self.clock()
-        req = Request(
-            req_id=self._next_id,
-            query=np.asarray(query, dtype=np.float32),
-            k=int(k),
-            family=family,
-            operand=operand,
-            deadline=deadline,
-            arrival_t=now,
-            tier=self.controller.tier_for(family),
-        )
         self._next_id += 1
         self._in_flight += 1
         self.telemetry.on_submit()
-        self.batcher.add(req, now)
+        self.batcher.add(req, req.arrival_t)
         return req.req_id
+
+    def submit_upsert(
+        self, vector: np.ndarray, label: int = 0, attrs=None
+    ) -> int:
+        """Admit one insert for the streaming index; returns its request id.
+
+        The response's ``ids[0]`` is the assigned slot id. Requires a
+        streaming executor (one exposing ``apply_mutations``). Predictable
+        failures are rejected HERE (bad shape) or reported as a failed
+        response (pool exhaustion) — they must never escape mid-flush and
+        corrupt the runtime's in-flight accounting.
+        """
+        self._require_streaming()
+        vec = np.asarray(vector, dtype=np.float32)
+        if vec.size != self.executor.dim:
+            raise ValueError(
+                f"upsert vector has {vec.size} elements, index dim is "
+                f"{self.executor.dim}"
+            )
+        return self._admit(
+            UpsertRequest(
+                req_id=self._next_id,
+                query=vec.reshape(self.executor.dim),
+                k=1,
+                family="upsert",
+                operand=(int(label), attrs),
+                arrival_t=self.clock(),
+            )
+        )
+
+    def submit_delete(self, slot: int) -> int:
+        """Admit one tombstone delete; the response's ``filled`` is 1 iff
+        the slot was live (idempotent otherwise)."""
+        self._require_streaming()
+        slot = int(slot)
+        if not 0 <= slot < self.executor.index.capacity:
+            raise ValueError(
+                f"slot {slot} outside the pool [0, "
+                f"{self.executor.index.capacity})"
+            )
+        return self._admit(
+            DeleteRequest(
+                req_id=self._next_id,
+                query=np.zeros((0,), np.float32),
+                k=1,
+                family="delete",
+                operand=slot,
+                arrival_t=self.clock(),
+            )
+        )
+
+    def _require_streaming(self) -> None:
+        if not hasattr(self.executor, "apply_mutations"):
+            raise TypeError(
+                "mutations need a streaming executor "
+                "(StreamingLocalExecutor over a StreamingIndex); "
+                f"have {type(self.executor).__name__}"
+            )
 
     def poll(self, req_id: int) -> Optional[Response]:
         """Completed response for ``req_id`` (popped), or None if pending."""
@@ -272,9 +427,31 @@ class ServingRuntime:
 
     # --- the pump ---------------------------------------------------------
     def step(self, force: bool = False) -> int:
-        """Flush and execute every microbatch due now; returns completions."""
+        """Flush and execute every microbatch due now; returns completions.
+
+        Flush-boundary epoch semantics (streaming executors): the flush's
+        mutation microbatches are applied FIRST, then the executor swaps in
+        the new index epoch exactly once, then every query microbatch of
+        the flush runs against that one snapshot. Queries already executing
+        hold the snapshot they were dispatched with; nothing observes a
+        half-applied flush.
+        """
         done = 0
-        for mb in self.batcher.flush(self.clock(), force=force):
+        batches = self.batcher.flush(self.clock(), force=force)
+        mutations = [mb for mb in batches if mb.family in MUTATION_FAMILIES]
+        queries = [mb for mb in batches if mb.family not in MUTATION_FAMILIES]
+        applied: list = []
+        for mb in mutations:
+            applied.extend(self._execute_mutation(mb))
+        if mutations:
+            epoch = self.executor.refresh()  # the atomic epoch swap
+            self.telemetry.on_epoch_swap()
+            for resp in applied:
+                # The first epoch this mutation is visible in — queries
+                # with Response.epoch >= this one see its effect.
+                resp.epoch = epoch
+        done += len(applied)
+        for mb in queries:
             done += self._execute(mb)
         return done
 
@@ -284,6 +461,46 @@ class ServingRuntime:
         while self._in_flight:
             done += self.step(force=True)
         return done
+
+    def _execute_mutation(self, mb: MicroBatch) -> list:
+        """Apply one upsert/delete microbatch on the host; returns the
+        created responses (``step`` stamps their visibility epoch after
+        the flush's swap).
+
+        Mutations never touch the compile cache (no padded lanes are
+        materialized — ``bucket`` is irrelevant to a host loop); their
+        measured wall time still advances a virtual-time replay so churn
+        costs land in the same timeline as query execution.
+        """
+        t0 = time.perf_counter()
+        results = self.executor.apply_mutations(mb.requests)
+        dt = time.perf_counter() - t0
+        if hasattr(self.clock, "advance"):
+            self.clock.advance(dt)
+        now = self.clock()
+        self.telemetry.on_mutation(mb.family, len(mb.requests))
+        responses = []
+        for req, (ok, slot) in zip(mb.requests, results):
+            while len(self._responses) >= self._max_unpolled:
+                self._responses.pop(next(iter(self._responses)))
+                self.telemetry.counters["responses_evicted"] += 1
+            resp = Response(
+                req_id=req.req_id,
+                ids=np.asarray([slot], np.int32),
+                dists=np.zeros((1,), np.float32),
+                k=1,
+                filled=int(ok),
+                tier=req.tier,
+                escalations=0,
+                fill_history=(int(ok),),
+                arrival_t=req.arrival_t,
+                complete_t=now,
+                deadline_missed=req.deadline is not None and now > req.deadline,
+            )
+            self._responses[req.req_id] = resp
+            responses.append(resp)
+            self._in_flight -= 1
+        return responses
 
     def _execute(self, mb: MicroBatch) -> int:
         # The whole request-processing path is the service time: operand
@@ -344,6 +561,7 @@ class ServingRuntime:
                 arrival_t=req.arrival_t,
                 complete_t=now,
                 deadline_missed=req.deadline is not None and now > req.deadline,
+                epoch=getattr(self.executor, "epoch", None),
             )
             self._in_flight -= 1
             self.telemetry.on_complete(self._responses[req.req_id])
@@ -358,10 +576,21 @@ class ServingRuntime:
 
     # --- reporting --------------------------------------------------------
     def report(self) -> dict:
-        return {
+        out = {
             "telemetry": self.telemetry.summary(),
             "cache": self.cache.stats(),
             "trace_budget": self.trace_budget,
             "controller": self.controller.snapshot(),
             "pending": self.batcher.pending_count(),
         }
+        if hasattr(self.executor, "apply_mutations"):
+            idx = self.executor.index
+            out["index"] = {
+                "epoch": self.executor.epoch,
+                "capacity": idx.capacity,
+                "n_live": idx.pool.n_live,
+                "n_pending": idx.pool.n_pending,
+                "n_free": idx.pool.n_free,
+                "consolidations": idx.consolidations,
+            }
+        return out

@@ -49,6 +49,15 @@ class Telemetry:
     def on_escalate(self) -> None:
         self.counters["escalations"] += 1
 
+    def on_mutation(self, family: str, n: int) -> None:
+        """Streaming mutations are counted, not mixed into the query
+        latency/fill percentiles (they complete on the host, not through
+        the compiled search path)."""
+        self.counters[f"{family}s_applied"] += n
+
+    def on_epoch_swap(self) -> None:
+        self.counters["epoch_swaps"] += 1
+
     def on_complete(self, resp: Response) -> None:
         self.counters["completed"] += 1
         if resp.deadline_missed:

@@ -18,6 +18,11 @@ from typing import Optional, Tuple
 import numpy as np
 
 FAMILIES = ("label", "range")
+# Mutation "families" ride the SAME batcher as queries (their own groups,
+# so they never share a microbatch with a search) but execute on the host
+# against the streaming index — they never touch the compile cache, so the
+# trace budget stays a pure query-shape quantity.
+MUTATION_FAMILIES = ("upsert", "delete")
 
 
 class AdmissionError(RuntimeError):
@@ -56,6 +61,31 @@ class Request:
 
 
 @dataclasses.dataclass
+class UpsertRequest(Request):
+    """Insert one vector into the streaming index.
+
+    ``query`` carries the new vector; ``operand`` is ``(label, attrs_row)``
+    (attrs_row None when the corpus has no numeric attributes). The
+    response's ``ids[0]`` is the assigned slot id.
+    """
+
+    def group(self) -> tuple:
+        return ("upsert",)
+
+
+@dataclasses.dataclass
+class DeleteRequest(Request):
+    """Tombstone one slot id (``operand``) in the streaming index.
+
+    The response's ``filled`` is 1 when the slot was live and is now
+    tombstoned, 0 when it was already dead (idempotent delete).
+    """
+
+    def group(self) -> tuple:
+        return ("delete",)
+
+
+@dataclasses.dataclass
 class Response:
     req_id: int
     ids: np.ndarray  # (k,) int32, -1 padded
@@ -68,6 +98,10 @@ class Response:
     arrival_t: float = 0.0
     complete_t: float = 0.0
     deadline_missed: bool = False
+    # Index epoch the answer was computed against (streaming executors
+    # only; None for static indexes). Queries in one flush share an epoch —
+    # the snapshot swap is atomic at flush boundaries (DESIGN.md §8).
+    epoch: Optional[int] = None
 
     @property
     def latency(self) -> float:

@@ -94,6 +94,142 @@ def mixed_workload(
     return items
 
 
+def churn_workload(
+    seed: int,
+    corpus: Corpus,
+    n_requests: int,
+    n_labels: int,
+    *,
+    mutation_frac: float = 0.3,
+    delete_frac: float = 0.5,
+    k_choices: Tuple[int, ...] = (4, 8, 16),
+    mix: Tuple[float, float, float] = (0.4, 0.4, 0.2),
+    unequal_pct: float = 20.0,
+    range_col: int = 0,
+    range_width: Tuple[float, float] = (0.05, 0.3),
+    jitter: float = 0.05,
+) -> List[WorkItem]:
+    """One Poisson-replayable stream mixing QUERIES with index mutations.
+
+    ``mutation_frac`` of the stream is upsert/delete traffic (split by
+    ``delete_frac``); the rest is the usual constrained-query mix. Upsert
+    items carry the new vector + ``(label, attrs_row)`` operand; delete
+    items carry no target — ``replay_churn`` picks a live id at submit time
+    (the generator cannot know slot assignments that only exist once the
+    runtime has processed earlier upserts).
+    """
+    rng = np.random.RandomState(seed)
+    queries = mixed_workload(
+        seed + 1, corpus, n_requests, n_labels,
+        k_choices=k_choices, mix=mix, unequal_pct=unequal_pct,
+        range_col=range_col, range_width=range_width, jitter=jitter,
+    )
+    vectors = np.asarray(corpus.vectors)
+    labels = np.asarray(corpus.labels)
+    attrs = None if corpus.attrs is None else np.asarray(corpus.attrs)
+    n, d = vectors.shape
+
+    items: List[WorkItem] = []
+    for q in queries:
+        if rng.rand() >= mutation_frac:
+            items.append(q)
+            continue
+        if rng.rand() < delete_frac:
+            items.append(
+                WorkItem(np.zeros((0,), np.float32), 1, "delete", None, "delete")
+            )
+        else:
+            pick = rng.randint(0, n)
+            vec = vectors[pick] + rng.randn(d).astype(np.float32) * jitter
+            arow = None if attrs is None else attrs[pick].copy()
+            items.append(
+                WorkItem(vec, 1, "upsert", (int(labels[pick]), arow), "upsert")
+            )
+    return items
+
+
+def replay_churn(
+    runtime: ServingRuntime,
+    items: Sequence[WorkItem],
+    rate: float,
+    seed: int = 0,
+    initial_live: Optional[Sequence[int]] = None,
+) -> Tuple[List[Optional[Response]], int]:
+    """Drive a churn stream (queries + upserts/deletes) with Poisson arrivals.
+
+    Like ``replay_poisson`` but routes mutation items through
+    ``submit_upsert``/``submit_delete`` and tracks the live-id set as
+    upsert responses surface slot assignments, so deletes always target an
+    id that was live at submit time. Returns (responses aligned with items
+    — None for rejected or skipped [no live id to delete] items, rejection
+    count).
+    """
+    clock = runtime.clock
+    if not isinstance(clock, VirtualClock):
+        raise TypeError("replay_churn needs a runtime built on a VirtualClock")
+    rng = np.random.RandomState(seed)
+    live: List[int] = list(
+        initial_live
+        if initial_live is not None
+        else range(runtime.executor.index.pool.n_live)
+    )
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=len(items)))
+    req_ids: List[Optional[int]] = []
+    open_upserts: dict = {}
+
+    def harvest_upserts() -> None:
+        # Learn slot assignments as upsert responses complete, so later
+        # deletes can target freshly inserted items too.
+        for rid in list(open_upserts):
+            resp = runtime.poll(rid)
+            if resp is not None:
+                open_upserts.pop(rid)
+                _responses[rid] = resp
+                if resp.filled:
+                    live.append(int(resp.ids[0]))
+
+    _responses: dict = {}
+    rejected = 0
+    for item, t_arr in zip(items, arrivals):
+        clock.advance_to(t_arr)
+        runtime.step()
+        harvest_upserts()
+        target: Optional[int] = None
+        try:
+            if item.family == "upsert":
+                rid = runtime.submit_upsert(item.query, *item.operand)
+                open_upserts[rid] = True
+            elif item.family == "delete":
+                if not live:
+                    req_ids.append(None)
+                    continue
+                target = live.pop(rng.randint(len(live)))
+                rid = runtime.submit_delete(target)
+            else:
+                rid = runtime.submit(item.query, item.k, item.family, item.operand)
+            req_ids.append(rid)
+        except AdmissionError:
+            if target is not None:
+                live.append(target)  # the delete was shed, the id stays live
+            req_ids.append(None)
+            rejected += 1
+        runtime.step()
+        harvest_upserts()
+    while runtime.in_flight:
+        clock.advance(runtime.batcher.max_wait)
+        runtime.step()
+        harvest_upserts()
+    out: List[Optional[Response]] = []
+    for rid in req_ids:
+        if rid is None:
+            out.append(None)
+        elif rid in _responses:
+            out.append(_responses[rid])
+        else:
+            out.append(runtime.poll(rid))
+    return out, rejected
+
+
 def replay_poisson(
     runtime: ServingRuntime,
     items: Sequence[WorkItem],

@@ -1,0 +1,17 @@
+# Streaming mutable index over the proximity graph (DESIGN.md §8):
+# slot-pool corpus under static shapes, beam-search-guided insert with
+# degree-bounded edge patching, tombstone deletes masked by every search
+# path exactly like a failed constraint, and background consolidation that
+# splices dead vertices out and returns their slots to the pool.
+from repro.streaming.consolidate import consolidate
+from repro.streaming.mutate import insert_one, patch_neighbor_row
+from repro.streaming.slots import IndexSnapshot, SlotPool, StreamingIndex
+
+__all__ = [
+    "IndexSnapshot",
+    "SlotPool",
+    "StreamingIndex",
+    "consolidate",
+    "insert_one",
+    "patch_neighbor_row",
+]

@@ -1,0 +1,102 @@
+"""Background consolidation: splice tombstoned vertices out of the graph.
+
+A deleted vertex stays wired in as a routing node (tombstone-as-constraint
+keeps it out of every result list) so connectivity never degrades between
+consolidations. This pass does the actual surgery, slot by slot:
+
+  * every in-neighbor ``u`` of a target ``t`` drops its ``u -> t`` edge and
+    considers ``t``'s out-edges as replacement candidates (the classic
+    delete-splice: paths through ``t`` survive as direct edges), re-ranked
+    with ``u``'s surviving edges under the degree bound;
+  * ``t``'s own row is cleared to PAD and the slot returns to the free
+    list — only now, so a recycled slot id can never be dangling-referenced
+    by a stale edge;
+  * the entry point and AIRSHIP-Start sample are re-pointed at live
+    vertices when they died.
+
+All four adjacency invariants (distance-ascending, self-free, dup-free,
+PAD-padded) are preserved row by row, and the slot-pool accounting
+(live + pending + free == capacity) is restored (property-tested in
+tests/test_streaming.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.streaming.slots import PAD, StreamingIndex
+
+
+def _rewrite_row(index: StreamingIndex, u: int, cand: np.ndarray) -> None:
+    """Write u's row = the ``degree`` closest of ``cand`` (ascending)."""
+    if cand.shape[0] == 0:
+        index.neighbors[u] = PAD
+        return
+    diffs = index.pool.vectors[cand] - index.pool.vectors[u]
+    d = np.sum(diffs * diffs, axis=-1)
+    order = np.argsort(d, kind="stable")[: index.degree]
+    out = np.full((index.degree,), PAD, np.int32)
+    out[: order.shape[0]] = cand[order]
+    index.neighbors[u] = out
+
+
+def consolidate(index: StreamingIndex, max_slots: Optional[int] = None) -> int:
+    """Splice out up to ``max_slots`` pending tombstones; returns the count."""
+    targets = list(
+        index.pool.pending
+        if max_slots is None
+        else index.pool.pending[:max_slots]
+    )
+    if not targets:
+        return 0
+    tset = set(targets)
+    nbrs = index.neighbors
+
+    # In-neighbor scan: one vectorized membership test over the adjacency.
+    hit = np.isin(nbrs, np.asarray(targets, np.int32))
+    for u in np.nonzero(hit.any(axis=1))[0]:
+        if u in tset:
+            continue  # target rows are cleared below
+        row = nbrs[u]
+        keep = [e for e in row if e >= 0 and e not in tset]
+        cand = dict.fromkeys(keep)  # ordered de-dup
+        for e in row:
+            if e >= 0 and e in tset:
+                for w in nbrs[e]:
+                    # Splice: t's out-edges stand in for paths through t.
+                    if w >= 0 and w not in tset and w != u:
+                        cand[w] = None
+        _rewrite_row(index, int(u), np.fromiter(cand, np.int32, len(cand)))
+
+    for t in targets:
+        nbrs[t] = PAD
+        index.pool.reclaim(t)
+
+    # Re-point dead seeds at the live set (the tombstone wrap already keeps
+    # them out of results; this keeps SEEDING useful).
+    live = index.pool.live_ids()
+    if live.shape[0]:
+        if not index.pool.is_live(index.entry_point):
+            mean = index.pool.vectors[live].mean(axis=0)
+            diffs = index.pool.vectors[live] - mean
+            index.entry_point = int(live[np.argmin(np.sum(diffs * diffs, -1))])
+        dead_sample = ~np.isin(
+            index.sample_ids, live, assume_unique=False
+        )
+        if dead_sample.any():
+            # Replacements are drawn from live ids NOT already sampled —
+            # the sample must stay duplicate-free (the engine's seeding is
+            # dup-guarded, but a degenerate sample still wastes starts).
+            pool_ids = np.setdiff1d(live, index.sample_ids)
+            n_new = int(dead_sample.sum())
+            if pool_ids.shape[0] >= n_new:
+                repl = index.rng.choice(pool_ids, size=n_new, replace=False)
+            else:
+                repl = index.rng.choice(live, size=n_new, replace=True)
+            index.sample_ids[dead_sample] = repl.astype(np.int32)
+
+    index.consolidations += 1
+    index.mark_dirty()
+    index.pool.check_accounting()
+    return len(targets)

@@ -1,0 +1,128 @@
+"""Online insert: beam-search-guided neighbor selection + edge patching.
+
+An insert is two writes under the builder's adjacency contract
+(graph/build.py: rows distance-ascending, self-free, dup-free, PAD-padded):
+
+  1. the new slot's OWN row — the ``degree`` closest LIVE vertices found by
+     a beam search over the current snapshot (the graph-guided analogue of
+     the offline builder's exact kNN row; tombstoned routing nodes and free
+     slots are excluded because the search masks the tombstone bitmap);
+  2. degree-bounded PATCHES of those neighbors' rows — the new id is merged
+     into each selected neighbor's sorted row, evicting its worst edge when
+     the row is full (HNSW-style reverse wiring, which is what keeps newly
+     inserted regions reachable).
+
+The candidate search reuses the compiled engine: one ``constrained_search``
+trace (fixed B=1 / k=degree shapes over the static pool capacity) serves
+every insert; the match-all UDF constraint is a module-level function so
+its jit key is stable.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.search import constrained_search
+from repro.core.types import SearchParams
+from repro.streaming.slots import PAD, StreamingIndex
+
+
+def _match_all(label, attrs):
+    """Match-all UDF: tombstone masking alone decides returnability."""
+    del attrs
+    return label == label  # noqa: PLR0124 — int self-compare is always True
+
+
+def _insert_params(index: StreamingIndex) -> SearchParams:
+    # vanilla mode with rng=None walks from the fixed entry vertex with
+    # unconstrained multi-start — the right shape for neighbor finding
+    # (the constraint only filters the RESULT list, and the tombstone wrap
+    # keeps dead slots out of it).
+    return SearchParams(
+        mode="vanilla",
+        k=index.degree,
+        ef_result=max(index.ef_insert, index.degree),
+        ef_other=max(index.ef_insert, 2 * index.degree),
+        n_start=min(16, index.ef_insert),
+        max_iters=max(64, 4 * index.ef_insert),
+    )
+
+
+def patch_neighbor_row(
+    index: StreamingIndex, v: int, new_id: int, d_new: float
+) -> None:
+    """Merge ``new_id`` (at distance ``d_new`` from ``v``) into v's row.
+
+    Degree-bounded: when the row is full the worst edge is evicted iff the
+    new edge is closer. Distances of existing edges are recomputed from the
+    pool vectors (rows only store ids), so the ascending invariant is exact.
+    """
+    row = index.neighbors[v]
+    live_e = row[row >= 0]
+    if new_id in live_e:  # re-patching the same id is a no-op
+        return
+    diffs = index.pool.vectors[live_e] - index.pool.vectors[v]
+    d_old = np.sum(diffs * diffs, axis=-1)
+    ids = np.concatenate([live_e, [new_id]]).astype(np.int32)
+    dists = np.concatenate([d_old, [d_new]]).astype(np.float32)
+    order = np.argsort(dists, kind="stable")[: index.degree]
+    out = np.full((index.degree,), PAD, np.int32)
+    out[: order.shape[0]] = ids[order]
+    index.neighbors[v] = out
+
+
+def insert_one(index: StreamingIndex, vector, label=0, attrs=None) -> int:
+    """Insert one vector; returns its slot id."""
+    vec = np.asarray(vector, np.float32).reshape(index.dim)
+    snap = index.snapshot()  # pre-insert epoch guides the neighbor search
+
+    import jax.numpy as jnp
+
+    res = constrained_search(
+        snap.corpus,
+        snap.graph,
+        jnp.asarray(vec[None]),
+        _match_all,
+        _insert_params(index),
+    )
+    cand_ids = np.asarray(res.ids[0])
+    cand_d = np.asarray(res.dists[0])
+    keep = cand_ids >= 0
+    cand_ids, cand_d = cand_ids[keep], cand_d[keep]
+    # Defensive dedup (keeps ascending order): the searcher's result list
+    # is dup-free by construction, but the new row's dup-free invariant
+    # must not hinge on that.
+    _, uniq = np.unique(cand_ids, return_index=True)
+    uniq.sort()
+    cand_ids, cand_d = cand_ids[uniq], cand_d[uniq]
+
+    pool = index.pool
+    slot = pool.alloc()
+    pool.vectors[slot] = vec
+    pool.labels[slot] = np.int32(label)
+    if pool.attrs is not None:
+        pool.attrs[slot] = (
+            0.0 if attrs is None else np.asarray(attrs, np.float32)
+        )
+
+    # Own row: the search's ascending, dup-free live top-k IS the row.
+    row = np.full((index.degree,), PAD, np.int32)
+    sel = cand_ids[: index.degree]
+    row[: sel.shape[0]] = sel
+    index.neighbors[slot] = row
+
+    # Reverse wiring: patch each selected neighbor's degree-bounded row.
+    for v, dv in zip(sel, cand_d[: index.degree]):
+        patch_neighbor_row(index, int(v), slot, float(dv))
+
+    pool.commit(slot)
+    # Keep AIRSHIP-Start's sample drifting with the live set: occasionally
+    # point a random sample slot at the new vertex (uniform reservoir-ish;
+    # a fresh slot id cannot already be sampled, so the sample stays
+    # duplicate-free).
+    if index.sample_ids.shape[0] and slot not in index.sample_ids and (
+        index.rng.rand()
+        < index.sample_ids.shape[0] / max(pool.n_live, 1)
+    ):
+        index.sample_ids[index.rng.randint(index.sample_ids.shape[0])] = slot
+    index.mark_dirty()
+    return slot

@@ -1,0 +1,276 @@
+"""Slot-pool corpus: fixed-capacity mutable storage under static shapes.
+
+Compiled searches are fixed-shape, so a mutable index must never change its
+array shapes — the pool pre-allocates ``capacity`` slots and mutates rows in
+place (host-side numpy; snapshots transfer to device on publish):
+
+  * a slot is LIVE (searchable + returnable), PENDING (deleted via
+    tombstone, still wired into the graph as a routing node until
+    consolidation), or FREE (on the free list, unreferenced by any edge);
+  * the tombstone bitmap marks everything non-returnable (PENDING ∪ FREE) —
+    the traversal masks it exactly like a failed constraint
+    (core/constraints.py, kernels/fused_expand/);
+  * accounting invariant: ``n_live + n_pending + n_free == capacity`` and
+    ``popcount(tombstones) == n_pending + n_free`` (property-tested).
+
+``StreamingIndex`` wraps one pool + the adjacency/sample/entry arrays and
+publishes immutable epoch-versioned ``IndexSnapshot``s: queries in flight
+keep the epoch they were dispatched against; the serving runtime swaps
+snapshots only at flush boundaries (serving/runtime.py, DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import Corpus, GraphIndex
+
+WORD_BITS = 32
+PAD = -1
+
+
+def _bitmap_words(capacity: int) -> int:
+    return (capacity + WORD_BITS - 1) // WORD_BITS
+
+
+class SlotPool:
+    """Fixed-capacity row storage with a LIFO free list + tombstone bitmap."""
+
+    def __init__(
+        self,
+        vectors: np.ndarray,
+        labels: np.ndarray,
+        attrs: Optional[np.ndarray],
+        capacity: int,
+    ):
+        n0, d = vectors.shape
+        if capacity < n0:
+            raise ValueError(f"capacity {capacity} < initial corpus size {n0}")
+        self.capacity = int(capacity)
+        self.vectors = np.zeros((capacity, d), np.float32)
+        self.vectors[:n0] = np.asarray(vectors, np.float32)
+        self.labels = np.zeros((capacity,), np.int32)
+        self.labels[:n0] = np.asarray(labels, np.int32)
+        self.attrs: Optional[np.ndarray] = None
+        if attrs is not None:
+            attrs = np.asarray(attrs, np.float32)
+            self.attrs = np.zeros((capacity, attrs.shape[1]), np.float32)
+            self.attrs[:n0] = attrs
+        self.tombstones = np.zeros((_bitmap_words(capacity),), np.uint32)
+        # Slots [n0, capacity) start FREE: tombstoned (non-returnable) and
+        # unreferenced until an insert claims them.
+        for s in range(n0, capacity):
+            self._set_dead(s)
+        self.free: List[int] = list(range(capacity - 1, n0 - 1, -1))  # LIFO
+        self.pending: List[int] = []
+        self.n_live = n0
+
+    # --- bitmap ----------------------------------------------------------
+    def _set_dead(self, slot: int) -> None:
+        self.tombstones[slot // WORD_BITS] |= np.uint32(1) << np.uint32(
+            slot % WORD_BITS
+        )
+
+    def _set_alive(self, slot: int) -> None:
+        self.tombstones[slot // WORD_BITS] &= ~(
+            np.uint32(1) << np.uint32(slot % WORD_BITS)
+        )
+
+    def is_live(self, slot: int) -> bool:
+        word = self.tombstones[slot // WORD_BITS]
+        return not bool((word >> np.uint32(slot % WORD_BITS)) & np.uint32(1))
+
+    def live_ids(self) -> np.ndarray:
+        bits = np.unpackbits(
+            self.tombstones.view(np.uint8), bitorder="little"
+        )[: self.capacity]
+        return np.nonzero(bits == 0)[0].astype(np.int32)
+
+    # --- lifecycle -------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self.free)
+
+    @property
+    def n_pending(self) -> int:
+        return len(self.pending)
+
+    def alloc(self) -> int:
+        """Claim a FREE slot (still tombstoned until ``commit``)."""
+        if not self.free:
+            raise RuntimeError(
+                "slot pool exhausted: consolidate pending tombstones or "
+                "grow capacity"
+            )
+        return self.free.pop()
+
+    def commit(self, slot: int) -> None:
+        """FREE -> LIVE after the caller wrote the slot's rows + edges."""
+        self._set_alive(slot)
+        self.n_live += 1
+
+    def release(self, slot: int) -> bool:
+        """LIVE -> PENDING (tombstoned; edges stay until consolidation)."""
+        if not self.is_live(slot):
+            return False
+        self._set_dead(slot)
+        self.pending.append(slot)
+        self.n_live -= 1
+        return True
+
+    def reclaim(self, slot: int) -> None:
+        """PENDING -> FREE once consolidation has unhooked every in-edge."""
+        self.pending.remove(slot)
+        self.free.append(slot)
+
+    def check_accounting(self) -> None:
+        """Raise if the slot-state partition or the bitmap drifted."""
+        total = self.n_live + self.n_pending + self.n_free
+        if total != self.capacity:
+            raise AssertionError(
+                f"slot accounting broken: live {self.n_live} + pending "
+                f"{self.n_pending} + free {self.n_free} != {self.capacity}"
+            )
+        dead_bits = int(
+            np.unpackbits(self.tombstones.view(np.uint8), bitorder="little")[
+                : self.capacity
+            ].sum()
+        )
+        if dead_bits != self.n_pending + self.n_free:
+            raise AssertionError(
+                f"tombstone popcount {dead_bits} != pending+free "
+                f"{self.n_pending + self.n_free}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexSnapshot:
+    """One immutable epoch of the mutable index (device arrays)."""
+
+    epoch: int
+    corpus: Corpus  # tombstones set — every search masks dead slots
+    graph: GraphIndex
+
+
+class StreamingIndex:
+    """Mutable proximity-graph index over a slot pool.
+
+    Mutations (``insert``/``delete``/``consolidate``, implemented in
+    mutate.py / consolidate.py) edit host arrays in place and mark the
+    index dirty; ``snapshot()`` publishes the next epoch on demand. The
+    adjacency invariants of graph/build.py (rows distance-ascending,
+    self-free, dup-free, PAD-padded) are preserved by every mutation.
+    """
+
+    def __init__(
+        self,
+        pool: SlotPool,
+        neighbors: np.ndarray,
+        sample_ids: np.ndarray,
+        entry_point: int,
+        *,
+        ef_insert: int = 32,
+        seed: int = 0,
+    ):
+        self.pool = pool
+        cap, deg = pool.capacity, neighbors.shape[1]
+        self.neighbors = np.full((cap, deg), PAD, np.int32)
+        self.neighbors[: neighbors.shape[0]] = np.asarray(neighbors, np.int32)
+        self.sample_ids = np.asarray(sample_ids, np.int32).copy()
+        self.entry_point = int(entry_point)
+        self.ef_insert = int(ef_insert)
+        self.rng = np.random.RandomState(seed)
+        self.epoch = 0
+        self._dirty = True
+        self._snap: Optional[IndexSnapshot] = None
+        self.consolidations = 0
+
+    @classmethod
+    def from_static(
+        cls,
+        corpus: Corpus,
+        graph: GraphIndex,
+        *,
+        capacity: Optional[int] = None,
+        ef_insert: int = 32,
+        seed: int = 0,
+    ) -> "StreamingIndex":
+        """Pool-ify a built (corpus, graph): pad all arrays to ``capacity``
+        (default 1.5x the seed size) and start the free list after them."""
+        n0 = corpus.n
+        cap = int(capacity) if capacity is not None else n0 + max(64, n0 // 2)
+        pool = SlotPool(
+            np.asarray(corpus.vectors),
+            np.asarray(corpus.labels),
+            None if corpus.attrs is None else np.asarray(corpus.attrs),
+            cap,
+        )
+        return cls(
+            pool,
+            np.asarray(graph.neighbors),
+            np.asarray(graph.sample_ids),
+            int(graph.entry_point),
+            ef_insert=ef_insert,
+            seed=seed,
+        )
+
+    # --- geometry --------------------------------------------------------
+    @property
+    def dim(self) -> int:
+        return self.pool.vectors.shape[1]
+
+    @property
+    def degree(self) -> int:
+        return self.neighbors.shape[1]
+
+    @property
+    def capacity(self) -> int:
+        return self.pool.capacity
+
+    def mark_dirty(self) -> None:
+        self._dirty = True
+
+    # --- epoch publication ------------------------------------------------
+    def snapshot(self) -> IndexSnapshot:
+        """Publish (or reuse) the current epoch's immutable device view."""
+        if self._snap is None or self._dirty:
+            self.epoch += 1
+            corpus = Corpus(
+                vectors=jnp.asarray(self.pool.vectors),
+                labels=jnp.asarray(self.pool.labels),
+                attrs=(
+                    None
+                    if self.pool.attrs is None
+                    else jnp.asarray(self.pool.attrs)
+                ),
+                tombstones=jnp.asarray(self.pool.tombstones),
+            )
+            graph = GraphIndex(
+                neighbors=jnp.asarray(self.neighbors),
+                sample_ids=jnp.asarray(self.sample_ids),
+                entry_point=jnp.int32(self.entry_point),
+            )
+            self._snap = IndexSnapshot(epoch=self.epoch, corpus=corpus, graph=graph)
+            self._dirty = False
+        return self._snap
+
+    # --- mutations (implementations live in mutate.py / consolidate.py) --
+    def insert(self, vector, label=0, attrs=None) -> int:
+        from repro.streaming.mutate import insert_one
+
+        return insert_one(self, vector, label, attrs)
+
+    def delete(self, slot: int) -> bool:
+        """Tombstone one live slot; its edges stay until consolidation."""
+        ok = self.pool.release(int(slot))
+        if ok:
+            self.mark_dirty()
+        return ok
+
+    def consolidate(self, max_slots: Optional[int] = None) -> int:
+        from repro.streaming.consolidate import consolidate
+
+        return consolidate(self, max_slots=max_slots)

@@ -6,7 +6,7 @@ Distribution is carried by shardings on params / optimizer state / batch
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

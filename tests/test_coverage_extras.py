@@ -3,7 +3,6 @@ PQ index quality, NN-descent-built search, launcher batch functions."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.distributed.meshinfo import single_device_meshinfo
 

@@ -9,8 +9,6 @@ import sys
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.ckpt import checkpoint as ck
 from repro.data.pipeline import lm_batch

@@ -22,7 +22,6 @@ from repro.core import (
     RangeConstraint,
     SearchParams,
     constrained_search,
-    constraint_tables,
     equal_constraint,
     pq_train,
     unequal_pct_constraint,

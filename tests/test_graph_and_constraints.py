@@ -5,13 +5,12 @@ import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
-from repro.common.distances import squared_l2
-from repro.core import (
+from repro.common.distances import squared_l2  # noqa: E402
+from repro.core import (  # noqa: E402
     Corpus,
-    LabelSetConstraint,
     RangeConstraint,
     equal_constraint,
     estimate_alter_ratio,
@@ -19,9 +18,9 @@ from repro.core import (
     make_satisfied_fn,
     unequal_pct_constraint,
 )
-from repro.data.synthetic import make_labeled_corpus
-from repro.graph.build import build_knn_graph, medoid, nn_descent
-from repro.graph.index import build_index
+from repro.data.synthetic import make_labeled_corpus  # noqa: E402
+from repro.graph.build import build_knn_graph, medoid, nn_descent  # noqa: E402
+from repro.graph.index import build_index  # noqa: E402
 
 
 def _rand_vectors(n=200, d=8, seed=0):

@@ -1,14 +1,13 @@
 """Property tests for the fixed-capacity sorted-array priority queues."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
-from repro.core import queue as q
+from repro.core import queue as q  # noqa: E402
 
 
 @st.composite

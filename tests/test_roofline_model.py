@@ -7,7 +7,6 @@
 """
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.common.compat import cost_analysis_dict
 from repro.distributed.meshinfo import single_device_meshinfo

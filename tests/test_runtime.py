@@ -8,7 +8,7 @@ import pytest
 
 from repro.ckpt import checkpoint as ck
 from repro.train.compression import dequantize_int8, quantize_int8
-from repro.train.optimizer import adafactor, adamw, apply_updates
+from repro.train.optimizer import adafactor, adamw
 from repro.train.train_step import make_train_step
 
 
@@ -17,8 +17,8 @@ def _quadratic_problem():
 
     def loss_fn(params, batch):
         pred = batch["x"] @ params["w"]
-        l = jnp.mean((pred - batch["y"]) ** 2)
-        return l, {"loss": l}
+        mse = jnp.mean((pred - batch["y"]) ** 2)
+        return mse, {"loss": mse}
 
     x = jax.random.normal(jax.random.PRNGKey(0), (64, 3))
     batch = {"x": x, "y": x @ w_true}

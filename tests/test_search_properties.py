@@ -16,7 +16,7 @@ from repro.core import (
     label_set_from_lists,
     recall,
 )
-from repro.core.types import Corpus, GraphIndex
+from repro.core.types import Corpus
 from repro.data.synthetic import make_labeled_corpus, make_queries
 from repro.graph.index import build_index
 

@@ -1,0 +1,358 @@
+"""Streaming mutable index: tombstone semantics + consolidation invariants.
+
+The correctness contract of the streaming layer (DESIGN.md §8):
+
+  * a tombstoned id is NEVER returned, by any search mode x constraint
+    family x distance backend x fused/unfused combination — deletion masks
+    exactly like a failed constraint;
+  * every mutation preserves the builder's four adjacency invariants
+    (rows distance-ascending, self-free, dup-free, PAD-padded) and
+    consolidation restores the slot-pool accounting
+    (live + pending + free == capacity, popcount(tombstones) == dead);
+  * the serving runtime swaps index epochs atomically at flush boundaries
+    (queries in one flush share an epoch; a delete completed before a
+    query's arrival is never visible in its results).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    RangeConstraint,
+    SearchParams,
+    constrained_search,
+    equal_constraint,
+    pq_train,
+)
+from repro.data.synthetic import make_labeled_corpus, make_queries
+from repro.graph.index import build_index
+from repro.streaming import StreamingIndex
+
+N, D, L = 400, 8, 4
+PAD = -1
+
+
+@pytest.fixture(scope="module")
+def world():
+    corpus = make_labeled_corpus(jax.random.PRNGKey(0), n=N, d=D, n_labels=L)
+    corpus = corpus.replace(
+        attrs=jax.random.uniform(jax.random.PRNGKey(5), (N, 2))
+    )
+    graph = build_index(jax.random.PRNGKey(1), corpus, degree=8, sample_size=64)
+    q, qlab = make_queries(jax.random.PRNGKey(2), corpus, 6)
+    return corpus, graph, q, qlab
+
+
+@pytest.fixture(scope="module")
+def churned(world):
+    """One churned index shared by the search-path matrix: delete each
+    query's true nearest neighbours (the adversarial case — the walk WILL
+    visit them) plus a random slice."""
+    corpus, graph, q, qlab = world
+    idx = StreamingIndex.from_static(corpus, graph, capacity=N + 64, seed=3)
+    params = SearchParams(mode="prefer", k=6, ef_result=32, n_start=16,
+                          max_iters=64)
+    cons = equal_constraint(qlab, L)
+    res = constrained_search(corpus, graph, q, cons, params)
+    targets = {int(i) for i in np.asarray(res.ids)[:, :2].ravel() if i >= 0}
+    targets |= set(np.random.RandomState(7).choice(N, 40, replace=False).tolist())
+    for t in targets:
+        assert idx.delete(t)
+    idx.pool.check_accounting()
+    return idx, targets
+
+
+def _assert_no_dead(res, dead):
+    ids = {int(i) for i in np.asarray(res.ids).ravel() if i >= 0}
+    leaked = ids & dead
+    assert not leaked, f"tombstoned ids returned: {sorted(leaked)}"
+
+
+@pytest.mark.parametrize("family", ["label", "range", "udf"])
+@pytest.mark.parametrize("backend", ["exact", "kernel", "pq"])
+@pytest.mark.parametrize("fuse", ["off", "on"])
+def test_no_tombstoned_id_returned(churned, world, family, backend, fuse):
+    """The full search matrix: every backend x family x fuse combination
+    masks tombstones (deleted ids were each query's true top results, so a
+    leak would absolutely surface here)."""
+    if family == "udf" and fuse == "on":
+        pytest.skip("UDF constraints have no fused path by design")
+    corpus, graph, q, qlab = world
+    idx, targets = churned
+    snap = idx.snapshot()
+
+    if family == "label":
+        cons = equal_constraint(qlab, L)
+    elif family == "range":
+        b = q.shape[0]
+        cons = RangeConstraint(
+            lo=jnp.zeros((b,), jnp.float32),
+            hi=jnp.ones((b,), jnp.float32),
+            col=jnp.int32(0),
+        )
+    else:
+        def cons(label, attrs):  # noqa: ANN001 — jnp UDF
+            return label >= 0
+
+    pq_index = (
+        pq_train(jax.random.PRNGKey(4), snap.corpus.vectors, m_sub=4, n_cent=16)
+        if backend == "pq"
+        else None
+    )
+    params = SearchParams(
+        mode="prefer", k=6, ef_result=32, n_start=16, max_iters=64,
+        use_kernel=backend == "kernel",
+        approx="pq" if backend == "pq" else "exact",
+        fuse_expand=fuse,
+    )
+    res = constrained_search(
+        snap.corpus, snap.graph, q, cons, params, pq_index=pq_index
+    )
+    _assert_no_dead(res, targets)
+
+
+@pytest.mark.parametrize("mode", ["vanilla", "start", "alter", "prefer"])
+def test_no_tombstoned_id_any_mode(churned, world, mode):
+    corpus, graph, q, qlab = world
+    idx, targets = churned
+    snap = idx.snapshot()
+    params = SearchParams(mode=mode, k=6, ef_result=32, n_start=16, max_iters=64)
+    res = constrained_search(
+        snap.corpus, snap.graph, q, equal_constraint(qlab, L), params,
+        rng=jax.random.PRNGKey(11),
+    )
+    _assert_no_dead(res, targets)
+
+
+def test_fused_kernels_honor_tombstones(world):
+    """Interpret-mode Pallas kernels == jnp ref with a tombstone bitmap:
+    sat is masked for dead candidates, fresh (traversability) is not."""
+    from repro.core import visited as vis
+    from repro.core.constraints import constraint_tables, tombstone_test
+    from repro.kernels.fused_expand.ops import fused_expand, fused_expand_adc
+    from repro.kernels.fused_expand.ref import fused_expand_adc_ref, fused_expand_ref
+
+    corpus, graph, q, qlab = world
+    rng = np.random.RandomState(0)
+    words = np.zeros(((N + 31) // 32,), np.uint32)
+    dead = rng.choice(N, 60, replace=False)
+    for i in dead:
+        words[i // 32] |= np.uint32(1) << np.uint32(i % 32)
+    tomb = jnp.asarray(words)
+    corpus_t = corpus.replace(tombstones=tomb)
+
+    cons = equal_constraint(qlab, L)
+    tables = constraint_tables(cons, corpus_t)
+    assert tables.tomb is not None
+    ids = jax.random.randint(jax.random.PRNGKey(6), (q.shape[0], 16), -1, N)
+    visited = vis.visited_init(q.shape[0], N)
+
+    d_k, s_k, f_k = fused_expand(
+        q, corpus.vectors, ids, visited, tables.meta, tables.cons, tables.tomb,
+        family="label", force_kernel=True, m_blk=8,
+    )
+    d_r, s_r, f_r = fused_expand_ref(
+        q, corpus.vectors, ids, visited, tables.meta, tables.cons, tables.tomb,
+        family="label",
+    )
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+    np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_r))
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_r), rtol=1e-6)
+    # dead candidates: never satisfied, still traversable when unvisited
+    dead_mask = np.asarray(tombstone_test(tomb, ids))
+    assert not np.any(np.asarray(s_k) & dead_mask)
+    valid = np.asarray(ids) >= 0
+    assert np.array_equal(np.asarray(f_k).astype(bool), valid)
+
+    pq_index = pq_train(jax.random.PRNGKey(4), corpus.vectors, m_sub=4, n_cent=16)
+    from repro.core.pq import adc_table
+
+    lut = adc_table(pq_index, q)
+    d_k, s_k, f_k = fused_expand_adc(
+        lut, pq_index.codes, ids, visited, tables.meta, tables.cons,
+        tables.tomb, family="label", force_kernel=True, m_blk=8,
+    )
+    d_r, s_r, f_r = fused_expand_adc_ref(
+        lut, pq_index.codes, ids, visited, tables.meta, tables.cons,
+        tables.tomb, family="label",
+    )
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+    np.testing.assert_array_equal(np.asarray(f_k), np.asarray(f_r))
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_r), rtol=1e-6)
+    assert not np.any(np.asarray(s_k) & dead_mask)
+
+
+def _check_adjacency_invariants(idx):
+    nbrs = idx.neighbors
+    vecs = idx.pool.vectors
+    for u in range(idx.capacity):
+        row = nbrs[u]
+        live_e = row[row >= 0]
+        # dup-free
+        assert len(set(live_e.tolist())) == len(live_e), f"dup in row {u}"
+        # self-free
+        assert u not in live_e, f"self edge in row {u}"
+        # PAD only at the tail
+        pad_pos = np.nonzero(row < 0)[0]
+        if pad_pos.size:
+            assert (row[pad_pos[0]:] < 0).all(), f"PAD not tail in row {u}"
+        # distance-ascending
+        if live_e.size > 1:
+            d = np.sum((vecs[live_e] - vecs[u]) ** 2, axis=-1)
+            assert (np.diff(d) >= -1e-5).all(), f"row {u} not ascending"
+
+
+def test_consolidation_invariants_and_accounting(world):
+    corpus, graph, q, qlab = world
+    idx = StreamingIndex.from_static(corpus, graph, capacity=N + 80, seed=5)
+    rng = np.random.RandomState(1)
+    base = np.asarray(corpus.vectors)
+    inserted = []
+    for i in range(30):
+        p = rng.randint(N)
+        slot = idx.insert(
+            base[p] + rng.randn(D).astype(np.float32) * 0.05,
+            label=int(np.asarray(corpus.labels)[p]),
+            attrs=rng.rand(2).astype(np.float32),
+        )
+        inserted.append(slot)
+    victims = rng.choice(N, 50, replace=False).tolist() + inserted[:5]
+    for v in victims:
+        assert idx.delete(int(v))
+    assert idx.delete(int(victims[0])) is False  # idempotent
+    idx.pool.check_accounting()
+    assert idx.pool.n_pending == len(victims)
+
+    n_done = idx.consolidate()
+    assert n_done == len(victims)
+    assert idx.pool.n_pending == 0
+    idx.pool.check_accounting()  # live + pending + free == capacity restored
+    _check_adjacency_invariants(idx)
+
+    # no edges point at reclaimed (free) slots, and seeds are live
+    freed = set(idx.pool.free)
+    referenced = set(idx.neighbors[idx.neighbors >= 0].ravel().tolist())
+    assert not (referenced & freed)
+    assert idx.pool.is_live(idx.entry_point)
+    live = set(idx.pool.live_ids().tolist())
+    assert set(idx.sample_ids.tolist()) <= live
+
+
+def test_insert_is_reachable_and_reuses_slots(world):
+    corpus, graph, q, qlab = world
+    idx = StreamingIndex.from_static(corpus, graph, capacity=N + 16, seed=9)
+    rng = np.random.RandomState(2)
+    base = np.asarray(corpus.vectors)
+
+    # fill the pool, delete some, consolidate, insert again -> slots reuse
+    first = [
+        idx.insert(base[i] + 0.01, label=int(np.asarray(corpus.labels)[i]))
+        for i in range(10)
+    ]
+    for s in first[:6]:
+        idx.delete(s)
+    idx.consolidate()
+    freed = set(first[:6])
+    again = [
+        idx.insert(base[i] - 0.01, label=int(np.asarray(corpus.labels)[i]))
+        for i in range(6)
+    ]
+    assert set(again) <= freed  # LIFO pool hands the reclaimed slots back
+    _check_adjacency_invariants(idx)
+
+    # a fresh insert is findable by an equal-label search for itself
+    p = rng.randint(N)
+    vec = base[p] + rng.randn(D).astype(np.float32) * 0.02
+    lab = int(np.asarray(corpus.labels)[p])
+    slot = idx.insert(vec, label=lab)
+    snap = idx.snapshot()
+    params = SearchParams(mode="prefer", k=4, ef_result=32, n_start=16,
+                          max_iters=64)
+    res = constrained_search(
+        snap.corpus, snap.graph, jnp.asarray(vec[None]),
+        equal_constraint(jnp.asarray([lab]), L), params,
+    )
+    assert slot in set(np.asarray(res.ids)[0].tolist())
+
+
+def test_serving_epoch_swap_and_mutation_flow(world):
+    from repro.serving import (
+        ServingRuntime,
+        StreamingLocalExecutor,
+        VirtualClock,
+        label_words_row,
+        make_tier_ladder,
+    )
+
+    corpus, graph, q, qlab = world
+    idx = StreamingIndex.from_static(corpus, graph, capacity=N + 64, seed=13)
+    executor = StreamingLocalExecutor(idx, consolidate_after=8)
+    clock = VirtualClock()
+    rt = ServingRuntime(
+        executor, n_labels=L,
+        tiers=make_tier_ladder(k_cap=6, base_ef=32, base_iters=48,
+                               base_n_start=8, growth=4),
+        ladder=(4,), max_wait=0.001, clock=clock,
+    )
+    qv = np.asarray(q)[0]
+    operand = label_words_row(list(range(L)), L)  # match-all label mask
+
+    # epoch swap is atomic at the flush boundary: a query and a delete in
+    # the same flush -> the query runs AFTER the swap, never mid-mutation
+    r1 = rt.submit(qv, 6, "label", operand)
+    clock.advance(0.01)
+    rt.step(force=True)
+    resp1 = rt.poll(r1)
+    assert resp1 is not None and resp1.epoch == executor.epoch
+
+    victim = int(resp1.ids[0])
+    d1 = rt.submit_delete(victim)
+    r2 = rt.submit(qv, 6, "label", operand)
+    clock.advance(0.01)
+    rt.step(force=True)
+    dresp = rt.poll(d1)
+    resp2 = rt.poll(r2)
+    assert dresp is not None and dresp.filled == 1
+    assert resp2 is not None and resp2.epoch > resp1.epoch
+    assert victim not in set(resp2.ids.tolist())
+
+    # upsert returns the assigned slot; the new vertex is immediately
+    # findable by the next flush's queries
+    u1 = rt.submit_upsert(qv, label=int(np.asarray(qlab)[0]))
+    clock.advance(0.01)
+    rt.step(force=True)
+    uresp = rt.poll(u1)
+    assert uresp is not None and uresp.filled == 1
+    slot = int(uresp.ids[0])
+    assert idx.pool.is_live(slot)
+    r3 = rt.submit(qv, 6, "label", operand)
+    clock.advance(0.01)
+    rt.step(force=True)
+    resp3 = rt.poll(r3)
+    assert slot in set(resp3.ids.tolist())
+
+    # double delete is idempotent (filled == 0), and the trace budget is
+    # untouched by mutation traffic
+    d2 = rt.submit_delete(victim)
+    clock.advance(0.01)
+    rt.step(force=True)
+    assert rt.poll(d2).filled == 0
+    assert rt.cache.trace_count <= rt.trace_budget
+    tel = rt.telemetry.counters
+    assert tel["upserts_applied"] == 1 and tel["deletes_applied"] == 2
+    assert tel["epoch_swaps"] >= 2
+
+
+def test_mutations_require_streaming_executor(world):
+    from repro.serving import LocalExecutor, ServingRuntime, VirtualClock
+
+    corpus, graph, q, qlab = world
+    rt = ServingRuntime(
+        LocalExecutor(corpus, graph), n_labels=L, ladder=(4,),
+        clock=VirtualClock(),
+    )
+    with pytest.raises(TypeError, match="streaming executor"):
+        rt.submit_upsert(np.asarray(q)[0])
+    with pytest.raises(TypeError, match="streaming executor"):
+        rt.submit_delete(0)

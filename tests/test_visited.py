@@ -4,10 +4,10 @@ import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
-from repro.core import visited as vis
+from repro.core import visited as vis  # noqa: E402
 
 
 @settings(deadline=None, max_examples=40)

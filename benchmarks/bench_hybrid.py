@@ -1,0 +1,369 @@
+"""Selectivity-adaptive hybrid execution: strategy crossover sweep
+(ISSUE 6 / EXPERIMENTS.md §Perf PR6).
+
+One corpus with skewed label frequencies gives a selectivity sweep from
+~0.1% to 50% without changing shapes. At every sweep point a B-query
+equal-label batch is timed under each applicable strategy:
+
+  * graph   — the standard AIRSHIP constrained walk (the universal plan);
+  * posting — brute-force scan of the label's posting set (exact over the
+    set: fetch ids from the posting lists, one fused distance + top-k);
+  * overlay — traversal over the label's cached sub-graph (built once,
+    steady-state timing is pure search; build cost reported separately);
+  * router  — the per-query strategy router end-to-end: host-side
+    selectivity estimate -> lattice dispatch -> execution. The controller
+    is pre-warmed with each strategy's observed latency/fill (the serving
+    layer does this continuously), so the router's pick reflects measured
+    evidence, constrained to the declared lattice.
+
+Acceptance (full mode): the router stays within 10% of the best
+*admissible* single strategy (inside the bucket's lattice row, passing
+its applicability gate) at every sweep point, is >= 2x faster than the
+pure graph walk at
+<= 1% selectivity, never loses recall there, and its returned ids match the
+dispatched strategy's standalone output bit-for-bit. Full mode re-measures
+the smoke shapes and writes both into ``BENCH_PR6.json`` — the regression
+gate (benchmarks/check_regression.py) diffs CI smoke runs against that
+reference, with recall deltas and id mismatches gated at absolute zero.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import write_artifact
+from repro.core import (
+    AttributeHistograms,
+    PostingLists,
+    RouterConfig,
+    SearchParams,
+    SelectivityEstimator,
+    StrategyRouter,
+    build_overlay,
+    constrained_search,
+    equal_constraint,
+    exact_constrained_search,
+    overlay_search,
+    posting_search,
+    recall,
+)
+from repro.core.overlay import OverlayCache
+from repro.core.posting import pad_posting, posting_bucket
+from repro.core.types import Corpus
+from repro.graph.index import build_index
+from repro.serving import AdaptiveController, ControllerConfig, make_tier_ladder
+from repro.serving.workload import label_words_row
+
+
+def _smoke() -> bool:
+    return os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+
+
+# Sweep labels 0..S-1 carry the listed posting counts; one filler label
+# absorbs the rest of the corpus. Counts are chosen so the sweep covers
+# ~0.3%-50% (smoke) / 0.1%-50% (full) of the live set.
+# repeats=9: sub-millisecond strategies (posting scan ~0.1ms) need the
+# extra samples for a stable median — the router-vs-best ratio compares
+# numbers that differ by tens of microseconds of host-side routing cost.
+SMOKE_CFG = dict(
+    name="smoke", n=1200, d=16, counts=(4, 8, 24, 60, 120, 600),
+    b=16, k=8, ef=48, iters=192, n_start=8, repeats=9, degree=12,
+)
+FULL_CFG = dict(
+    name="full", n=20_000, d=32, counts=(20, 100, 200, 600, 2000, 10_000),
+    b=32, k=10, ef=64, iters=512, n_start=16, repeats=9, degree=16,
+)
+
+# The lattice stops considering overlays above this selectivity (bucket 4
+# is graph-only), so the sweep does not pay sub-index builds there.
+OVERLAY_SEL_CAP = 0.2
+
+
+def _build_world(cfg):
+    n, d = cfg["n"], cfg["d"]
+    counts = cfg["counts"]
+    n_labels = len(counts) + 1
+    labels = np.full((n,), len(counts), np.int32)  # filler label
+    pos = 0
+    for lab, c in enumerate(counts):
+        labels[pos: pos + c] = lab
+        pos += c
+    np.random.RandomState(0).shuffle(labels)
+    vectors = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    corpus = Corpus(vectors=vectors, labels=jnp.asarray(labels))
+    graph = build_index(
+        jax.random.PRNGKey(1), corpus, degree=cfg["degree"],
+        sample_size=min(256, n),
+    )
+    return corpus, graph, labels, n_labels
+
+
+def _queries_near(label_ids, vectors, b, seed):
+    rng = np.random.RandomState(seed)
+    picks = label_ids[rng.randint(0, label_ids.shape[0], b)]
+    q = vectors[picks] + rng.randn(b, vectors.shape[1]).astype(np.float32) * 0.1
+    return jnp.asarray(q)
+
+
+def _timed(fn, repeats):
+    """(median seconds, min seconds, last result) — fn is called once
+    untimed first so every strategy is measured post-compile. The median
+    is what the sweep rows report; the min feeds the router-vs-best
+    ratio, where scheduler noise on sub-100us codepaths would otherwise
+    dominate the tens-of-microseconds routing overhead being measured."""
+    res = fn()
+    jax.block_until_ready(res.dists)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = fn()
+        jax.block_until_ready(res.dists)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), float(np.min(ts)), res
+
+
+def _timed_pair(fn_a, fn_b, repeats):
+    """(min seconds of a, min seconds of b), measured interleaved inside
+    ONE window. The router-vs-best ratio compares two sub-100us codepaths
+    whose difference is ~10us of host-side routing; timing them in
+    separate windows lets CPU frequency drift between the windows dwarf
+    the quantity being measured."""
+    jax.block_until_ready(fn_a().dists)
+    jax.block_until_ready(fn_b().dists)
+    ta, tb = [], []
+    for i in range(repeats):
+        # alternate the order so first-in-window bias cancels too
+        pair = ((fn_a, ta), (fn_b, tb)) if i % 2 == 0 else ((fn_b, tb), (fn_a, ta))
+        for fn, acc in pair:
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn().dists)
+            acc.append(time.perf_counter() - t0)
+    return float(np.min(ta)), float(np.min(tb))
+
+
+def _measure(out, cfg) -> dict:
+    corpus, graph, labels, n_labels = _build_world(cfg)
+    n, k, b = cfg["n"], cfg["k"], cfg["b"]
+    host_vecs = np.asarray(corpus.vectors)
+    params = SearchParams(
+        mode="prefer", k=k, ef_result=cfg["ef"], ef_sat=cfg["ef"],
+        ef_other=cfg["ef"], n_start=cfg["n_start"], max_iters=cfg["iters"],
+    )
+
+    hist = AttributeHistograms.from_arrays(labels, None, n_labels=n_labels)
+    postings = PostingLists.from_arrays(labels, n_labels=n_labels)
+    estimator = SelectivityEstimator(
+        histograms=hist, corpus=corpus, sample_ids=graph.sample_ids
+    )
+    # The controller is the serving layer's: it retunes the router's pick
+    # within the lattice from observed latency/fill. min_batches=1 because
+    # the bench feeds it one clean post-compile measurement per strategy.
+    controller = AdaptiveController(
+        make_tier_ladder(k_cap=k, n_tiers=1),
+        ControllerConfig(ema_alpha=1.0, min_batches=1),
+    )
+    config = RouterConfig(overlay_hot_after=1)
+    router = StrategyRouter(
+        estimator, n=n, config=config, postings=postings,
+        controller=controller,
+    )
+    overlays = OverlayCache(max_overlays=len(cfg["counts"]))
+
+    def overlay_for(lab):
+        return overlays.get(
+            lab, 0,
+            lambda label, epoch: build_overlay(
+                label, postings.ids_for_label(label), host_vecs, epoch
+            ),
+        )
+
+    points = []
+    id_mismatches = 0
+    for lab, count in enumerate(cfg["counts"]):
+        sel = count / n
+        words = label_words_row([lab], n_labels)
+        lab_ids = postings.ids_for_label(lab)
+        q = _queries_near(lab_ids, host_vecs, b, seed=100 + lab)
+        cons = equal_constraint(jnp.full((b,), lab, jnp.int32), n_labels)
+        _, oracle_ids = exact_constrained_search(corpus, q, cons, k=k)
+
+        strategies = {}
+
+        def run_graph():
+            return constrained_search(corpus, graph, q, cons, params)
+
+        strategies["graph"] = _timed(run_graph, cfg["repeats"])
+
+        padded = jnp.asarray(pad_posting(lab_ids, posting_bucket(count)))
+
+        def run_posting():
+            return posting_search(corpus, q, cons, padded, params)
+
+        strategies["posting"] = _timed(run_posting, cfg["repeats"])
+
+        runners = {"graph": run_graph, "posting": run_posting}
+        t_build = None
+        if sel <= OVERLAY_SEL_CAP and count >= 2:
+            t0 = time.perf_counter()
+            ov = overlay_for(lab)
+            t_build = time.perf_counter() - t0
+
+            def run_overlay(ov=ov, q=q):
+                return overlay_search(ov, q, params)
+
+            runners["overlay"] = run_overlay
+            strategies["overlay"] = _timed(run_overlay, cfg["repeats"])
+
+        # Feed the controller what serving telemetry would have recorded:
+        # each strategy's measured per-point latency and fill.
+        bucket = router.bucket_of(sel)
+        for name, (dt, _mn, res) in strategies.items():
+            fill = float(np.mean(np.asarray(res.filled)) / k)
+            controller.record_strategy(("label", bucket), name, dt, fill)
+
+        def run_routed():
+            decision = router.route("label", words)
+            fn = runners.get(decision.strategy, run_graph)
+            res = fn()
+            run_routed.decision = decision
+            return res
+
+        t_router, t_router_min, res_router = _timed(run_routed, cfg["repeats"])
+        decision = run_routed.decision
+        # Bit-parity: the router's ids must equal the dispatched strategy's
+        # standalone output (same compiled function, same operands).
+        standalone = strategies.get(decision.strategy)
+        if standalone is not None:
+            mism = int(
+                (np.asarray(res_router.ids) != np.asarray(standalone[2].ids))
+                .sum()
+            )
+            id_mismatches += mism
+
+        # Router-vs-best ratio. "Best" means best ADMISSIBLE strategy:
+        # inside the bucket's lattice row and passing its applicability
+        # gate. The lattice deliberately forbids e.g. scanning 50% of the
+        # corpus — at accelerator scale that plan is not viable even where
+        # a tiny CPU corpus makes it look fast — so the router is held to
+        # the best plan it is *allowed* to pick. (The sweep row still
+        # reports every strategy's raw latency, admissible or not.)
+        admissible = {
+            name: strategies[name][1]
+            for name in strategies
+            if name in config.lattice[bucket]
+            and (name != "posting" or count <= config.resolved_posting_cap(n))
+        }
+        best_name = min(admissible, key=admissible.get)
+        pr, pb = _timed_pair(run_routed, runners[best_name], 4 * cfg["repeats"])
+        ratio = pr / pb
+
+        rec = {
+            "suite": "hybrid",
+            "bench": f"sweep_{cfg['name']}",
+            "selectivity": round(sel, 5),
+            "posting_count": count,
+            "routed": decision.strategy,
+            "est_selectivity": round(decision.est_selectivity or -1.0, 5),
+            "sel_source": decision.source,
+            "t_router_ms": round(1e3 * t_router, 3),
+            "overlay_build_ms": (
+                None if t_build is None else round(1e3 * t_build, 3)
+            ),
+        }
+        for name, (dt, _mn, res) in strategies.items():
+            rec[f"t_{name}_ms"] = round(1e3 * dt, 3)
+            rec[f"recall_{name}"] = round(
+                float(recall(res.ids, oracle_ids)), 4
+            )
+        rec["recall_router"] = round(float(recall(res_router.ids, oracle_ids)), 4)
+        rec["best_admissible"] = best_name
+        rec["router_vs_best_ratio"] = round(ratio, 3)
+        out(json.dumps(rec))
+        points.append((sel, rec, t_router, strategies))
+
+    # --- acceptance metrics ----------------------------------------------
+    best_ratios = []
+    speedups_1pct, shortfalls_1pct = [], []
+    for sel, rec, t_router, strategies in points:
+        best_ratios.append((rec["selectivity"], rec["router_vs_best_ratio"]))
+        if sel <= 0.0105:
+            speedups_1pct.append(strategies["graph"][0] / t_router)
+            shortfalls_1pct.append(rec["recall_graph"] - rec["recall_router"])
+    acceptance = {
+        "suite": "hybrid",
+        "bench": f"acceptance_{cfg['name']}",
+        "router_best_ratio_max": max(r for _, r in best_ratios),
+        "router_best_ratios": best_ratios,
+        "speedup_at_1pct": round(min(speedups_1pct), 2),
+        "recall_shortfall_at_1pct": round(max(shortfalls_1pct), 4),
+        "id_mismatches": id_mismatches,
+        "overlay_cache": overlays.stats(),
+        "controller": controller.snapshot().get("strategies", {}),
+    }
+    out(json.dumps(acceptance))
+    return acceptance
+
+
+def main(out) -> None:
+    smoke = _smoke()
+    cfg = SMOKE_CFG if smoke else FULL_CFG
+    acc = _measure(out, cfg)
+
+    # Correctness halves of the acceptance bind in BOTH modes; the
+    # wall-clock halves only where timing is trustworthy (full mode runs
+    # on an idle host; CI smoke legs gate them via check_regression.py
+    # against the committed smoke_reference instead).
+    ok_ids = acc["id_mismatches"] == 0
+    ok_recall = acc["recall_shortfall_at_1pct"] <= 0.0
+    # Smoke's fastest strategies are ~60us/batch, so the few-us routing
+    # cost plus CI-runner jitter reads as tens of percent; the 10% bound
+    # binds in full mode, and check_regression.py gates smoke relatively.
+    ratio_cap = 1.1 if not smoke else 2.0
+    ok_ratio = acc["router_best_ratio_max"] <= ratio_cap
+    ok_speedup = acc["speedup_at_1pct"] >= 2.0
+    if not (ok_ids and ok_recall and ok_ratio and ok_speedup):
+        raise AssertionError(f"hybrid acceptance failed: {acc}")
+
+    if not smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+        try:
+            smoke_acc = _measure(out, SMOKE_CFG)
+        finally:
+            os.environ.pop("REPRO_BENCH_SMOKE", None)
+        path = os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            "BENCH_PR6.json",
+        )
+        meta = {
+            "issue": "PR6 selectivity-adaptive hybrid execution (strategy "
+                     "router + posting-set scan + label-subgraph overlay)",
+            "host": "single-core CPU container (wall-clock; TPU numbers "
+                    "need hardware)",
+            "acceptance": acc,
+            "smoke_reference": smoke_acc,
+            "notes": [
+                "sweep points are equal-label query batches over a "
+                "skew-labeled corpus; per-point rows carry each strategy's "
+                "median post-compile latency and recall vs the exact "
+                "constrained oracle",
+                "the router's controller is pre-warmed with one measured "
+                "(latency, fill) observation per strategy per bucket — the "
+                "same feedback the serving layer records continuously",
+                "smoke_reference holds the acceptance metrics at the smoke "
+                "shapes, measured at artifact-commit time — "
+                "benchmarks/check_regression.py diffs CI smoke runs "
+                "against it (id mismatches and recall shortfall at "
+                "absolute zero)",
+            ],
+        }
+        write_artifact(path, meta)
+        out(json.dumps({"suite": "hybrid", "bench": "artifact", "wrote": path}))
+
+
+if __name__ == "__main__":
+    main(print)

@@ -129,6 +129,43 @@ GATES = (
         direction="higher",
         filters=(("fuse_expand", "on"),),
     ),
+    # --- hybrid (PR6): router correctness + crossover wins ---------------
+    Gate(
+        name="hybrid routed-vs-standalone id mismatches",
+        suite="hybrid", bench="acceptance_smoke",
+        metric="id_mismatches",
+        baseline_file="BENCH_PR6.json",
+        baseline_path=(),
+        direction="lower",
+        absolute=0.0,  # router ids must equal the dispatched strategy's
+    ),
+    Gate(
+        name="hybrid router recall shortfall at <=1% selectivity",
+        suite="hybrid", bench="acceptance_smoke",
+        metric="recall_shortfall_at_1pct",
+        baseline_file="BENCH_PR6.json",
+        baseline_path=(),
+        direction="lower",
+        absolute=0.0,  # the router never loses recall vs the pure walk
+    ),
+    Gate(
+        name="hybrid speedup over pure graph at <=1% selectivity",
+        suite="hybrid", bench="acceptance_smoke",
+        metric="speedup_at_1pct",
+        baseline_file="BENCH_PR6.json",
+        baseline_path=(),
+        direction="higher",
+        absolute=2.0,  # the tentpole claim: >= 2x at low selectivity
+    ),
+    Gate(
+        name="hybrid router-vs-best-admissible ratio",
+        suite="hybrid", bench="acceptance_smoke",
+        metric="router_best_ratio_max",
+        baseline_file="BENCH_PR6.json",
+        baseline_path=("smoke_reference", "router_best_ratio_max"),
+        direction="lower",
+        tolerance=0.5,  # wall-clock ratio: wide, trips on routing bloat
+    ),
 )
 
 

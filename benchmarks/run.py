@@ -18,7 +18,7 @@ def main() -> None:
         "--only",
         default="",
         help="comma list: pipeline,constraints,alter_ratio,clusters,mnist,"
-        "kernels,beam,fused,serving,streaming",
+        "kernels,beam,fused,serving,streaming,hybrid",
     )
     ap.add_argument(
         "--smoke",
@@ -50,6 +50,7 @@ def main() -> None:
         bench_clusters,
         bench_constraints,
         bench_fused,
+        bench_hybrid,
         bench_kernels,
         bench_mnist_like,
         bench_pipeline,
@@ -82,6 +83,13 @@ def main() -> None:
         # static oracle and asserts the acceptance row (recall gap <= 5
         # pts, ZERO tombstoned ids returned); full mode writes BENCH_PR5.json.
         "streaming": bench_streaming.main,
+        # bench_hybrid sweeps constraint selectivity 0.1%-50% and times
+        # graph walk vs posting scan vs label overlay vs the strategy
+        # router; asserts router within 10% of the best lattice-admissible
+        # strategy everywhere, >= 2x over
+        # pure graph at <= 1% selectivity at equal recall, bit-exact ids
+        # vs the dispatched strategy; full mode writes BENCH_PR6.json.
+        "hybrid": bench_hybrid.main,
     }
     print("name,us_per_call,derived")
 

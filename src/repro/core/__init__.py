@@ -17,9 +17,29 @@ from repro.core.constraints import (
     unequal_pct_constraint,
 )
 from repro.core.distributed import make_distributed_search, shard_corpus_for_mesh
+from repro.core.estimator import (
+    SelectivityEstimator,
+    sample_satisfied_mask,
+    sampled_selectivity,
+    scan_selectivity,
+)
 from repro.core.exact import exact_constrained_search, recall
+from repro.core.histogram import AttributeHistograms
+from repro.core.overlay import (
+    LabelOverlay,
+    OverlayCache,
+    build_overlay,
+    overlay_search,
+)
+from repro.core.posting import PostingLists, RangeIndex, posting_search
 from repro.core.pipeline import three_stage_pipeline
 from repro.core.pq import PQIndex, pq_constrained_search, pq_train
+from repro.core.router import (
+    RouteDecision,
+    RouterConfig,
+    StrategyRouter,
+    single_label_of_words,
+)
 from repro.core.search import (
     ExactBackend,
     L2KernelBackend,
@@ -38,20 +58,30 @@ from repro.core.types import (
 )
 
 __all__ = [
+    "AttributeHistograms",
     "ConstraintTables",
     "Corpus",
     "ExactBackend",
     "GraphIndex",
     "L2KernelBackend",
+    "LabelOverlay",
     "LabelSetConstraint",
+    "OverlayCache",
     "PQBackend",
     "PQIndex",
+    "PostingLists",
     "RangeConstraint",
+    "RangeIndex",
+    "RouteDecision",
+    "RouterConfig",
+    "SelectivityEstimator",
+    "StrategyRouter",
     "SearchParams",
     "SearchResult",
     "SearchStats",
     "TraversalContext",
     "build_context",
+    "build_overlay",
     "constrained_search",
     "constraint_tables",
     "equal_constraint",
@@ -60,12 +90,18 @@ __all__ = [
     "label_set_from_lists",
     "make_distributed_search",
     "make_satisfied_fn",
+    "overlay_search",
+    "posting_search",
     "pq_constrained_search",
     "pq_train",
     "recall",
+    "sample_satisfied_mask",
+    "sampled_selectivity",
+    "scan_selectivity",
     "search_with_context",
     "selectivity",
     "shard_corpus_for_mesh",
+    "single_label_of_words",
     "three_stage_pipeline",
     "unequal_pct_constraint",
 ]

@@ -28,8 +28,10 @@ def estimate_alter_ratio(
     """Per-query alter_ratio estimate.
 
     sample_sat_mask: (B, S) bool — which of ``graph.sample_ids`` satisfy each
-    query's constraint (already computed by the start-point selection; reused
-    here for free).
+    query's constraint, produced by the shared sample probe
+    (``core.estimator.sample_satisfied_mask``) during start-point selection
+    and reused here for free; its row-mean is the sampled selectivity
+    estimate the hybrid router falls back to for UDF constraints.
 
     Returns (B,) float32 in [0, 1]; ``default`` when a query has no satisfied
     sample vertex (Assumption 1 violated within the sample).

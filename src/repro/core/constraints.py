@@ -251,30 +251,12 @@ def make_satisfied_fn(constraint, corpus: Corpus) -> SatisfiedFn:
 def selectivity(constraint, corpus: Corpus, chunk: int = 1 << 16) -> Array:
     """(B,) fraction of the corpus satisfying each query's constraint.
 
-    Linear scan — used by Assumption-1 fallback logic and by benchmarks.
-    Chunked over the corpus axis: the one-shot (B, n) id grid + bool mask
-    peaked at ~1 GB transient for B=256, n=1M; scanning ``chunk``-wide
-    windows holds the working set at B*chunk bytes while the satisfied
-    counts accumulate in (B,) int32.
+    Thin wrapper kept for the historical import path — the implementation
+    (and every other selectivity probe: the sampled satisfied-fraction, the
+    streaming histograms' host-side estimates) lives in the shared
+    estimator module, ``repro.core.estimator`` (lazy import: estimator
+    imports this module at load time).
     """
-    fn = make_satisfied_fn(constraint, corpus)
-    n = corpus.n
-    if isinstance(constraint, LabelSetConstraint):
-        b = constraint.batch
-    elif isinstance(constraint, RangeConstraint):
-        b = constraint.lo.shape[0]
-    else:
-        b = 1
-    chunk = min(chunk, n)
-    n_chunks = (n + chunk - 1) // chunk
-    starts = jnp.arange(n_chunks, dtype=jnp.int32) * chunk
+    from repro.core.estimator import scan_selectivity
 
-    def body(acc, start):
-        ids = start + jnp.arange(chunk, dtype=jnp.int32)
-        # Tail chunk: ids past the corpus report unsatisfied (fn masks < 0).
-        ids = jnp.where(ids < n, ids, -1)
-        ok = fn(jnp.broadcast_to(ids[None, :], (b, chunk)))
-        return acc + jnp.sum(ok, axis=-1, dtype=jnp.int32), None
-
-    total, _ = jax.lax.scan(body, jnp.zeros((b,), jnp.int32), starts)
-    return total.astype(jnp.float32) / n
+    return scan_selectivity(constraint, corpus, chunk=chunk)

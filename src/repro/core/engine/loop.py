@@ -26,6 +26,7 @@ from repro.common.pytree import pytree_dataclass
 from repro.core import queue as q
 from repro.core import visited as vis
 from repro.core.alter_ratio import estimate_alter_ratio
+from repro.core.estimator import sample_satisfied_mask
 from repro.core.engine.context import (
     ExactBackend,
     TraversalContext,
@@ -132,7 +133,10 @@ def seed_state(
         return state, ratio
 
     # --- AIRSHIP-Start: filter the pre-drawn sample by the constraint -------
-    sample_sat = ctx.satisfied(sample_ids_b)  # (B, S)
+    # Shared probe (core/estimator.py): the same mask feeds start-point
+    # selection here, Eq.-1 alter_ratio below, and — host-side — the hybrid
+    # router's sampled-selectivity fallback.
+    sample_sat = sample_satisfied_mask(ctx.satisfied, sample, b)  # (B, S)
     d_masked = jnp.where(sample_sat, d_sample, jnp.inf)
 
     n_start = min(params.n_start, s)

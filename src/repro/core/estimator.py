@@ -1,0 +1,182 @@
+"""Selectivity estimation — ONE module for every probe of "what fraction
+of the corpus satisfies this constraint" (DESIGN.md §9).
+
+Before this module the repo carried two ad-hoc probes: the chunked O(n)
+corpus scan (``core.selectivity``) and the sampled satisfied-fraction that
+AIRSHIP-Start / the Eq.-1 alter_ratio estimator compute over the pre-drawn
+build sample (engine/loop.py ``seed_state``). The hybrid strategy router
+needs a third — a *cheap host-side* estimate per request — so all three now
+share this module:
+
+  * ``scan_selectivity``        — the exact chunked scan (moved here from
+                                  constraints.py; ``core.selectivity`` is a
+                                  thin delegating wrapper).
+  * ``sample_satisfied_mask`` / ``sampled_selectivity`` — the (B, S) sample
+                                  verdict mask and its mean, shared by the
+                                  engine's start-point seeding and by the
+                                  router's fallback estimate.
+  * ``SelectivityEstimator``    — the router front: prefers the incremental
+                                  label/range histograms maintained by the
+                                  streaming layer (core/histogram.py, O(1)
+                                  per estimate, no device round trip) and
+                                  falls back to the sampled estimate when no
+                                  histogram covers the constraint (the UDF
+                                  case — an arbitrary closure has no table).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.constraints import (
+    LabelSetConstraint,
+    RangeConstraint,
+    make_satisfied_fn,
+)
+from repro.core.types import Corpus, SatisfiedFn
+
+Array = jax.Array
+
+
+def sample_satisfied_mask(
+    satisfied: SatisfiedFn, sample_ids: Array, batch: int
+) -> Array:
+    """(B, S) constraint verdicts over the pre-drawn build sample.
+
+    The one sample probe shared by AIRSHIP-Start seeding, the Eq.-1
+    alter_ratio estimator (both consume the mask itself), and the sampled
+    selectivity estimate below (its mean).
+    """
+    s = sample_ids.shape[0]
+    ids_b = jnp.broadcast_to(sample_ids[None, :], (batch, s))
+    return satisfied(ids_b)
+
+
+def sampled_selectivity(
+    satisfied: SatisfiedFn, sample_ids: Array, batch: int
+) -> Array:
+    """(B,) satisfied fraction of the build sample — an unbiased O(S)
+    selectivity estimate (the sample is drawn uniformly at build time)."""
+    mask = sample_satisfied_mask(satisfied, sample_ids, batch)
+    return jnp.mean(mask.astype(jnp.float32), axis=-1)
+
+
+def scan_selectivity(constraint, corpus: Corpus, chunk: int = 1 << 16) -> Array:
+    """(B,) EXACT fraction of the corpus satisfying each query's constraint.
+
+    Linear scan — Assumption-1 fallback logic, benchmarks, and ground truth
+    for the estimators above. Chunked over the corpus axis: the one-shot
+    (B, n) id grid + bool mask peaked at ~1 GB transient for B=256, n=1M;
+    scanning ``chunk``-wide windows holds the working set at B*chunk bytes
+    while the satisfied counts accumulate in (B,) int32.
+    """
+    fn = make_satisfied_fn(constraint, corpus)
+    n = corpus.n
+    if isinstance(constraint, LabelSetConstraint):
+        b = constraint.batch
+    elif isinstance(constraint, RangeConstraint):
+        b = constraint.lo.shape[0]
+    else:
+        b = 1
+    chunk = min(chunk, n)
+    n_chunks = (n + chunk - 1) // chunk
+    starts = jnp.arange(n_chunks, dtype=jnp.int32) * chunk
+
+    def body(acc, start):
+        ids = start + jnp.arange(chunk, dtype=jnp.int32)
+        # Tail chunk: ids past the corpus report unsatisfied (fn masks < 0).
+        ids = jnp.where(ids < n, ids, -1)
+        ok = fn(jnp.broadcast_to(ids[None, :], (b, chunk)))
+        return acc + jnp.sum(ok, axis=-1, dtype=jnp.int32), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((b,), jnp.int32), starts)
+    return total.astype(jnp.float32) / n
+
+
+class SelectivityEstimator:
+    """Host-side estimator front for the strategy router.
+
+    ``histograms`` (core/histogram.py ``AttributeHistograms``) covers the
+    label / range families in O(words) per estimate with zero device work;
+    ``corpus`` + ``sample_ids`` arm the sampled fallback for constraints no
+    histogram covers (UDF closures). Either side may be None — ``estimate``
+    reports the source it actually used so routing decisions are debuggable
+    (the source rides ``Response`` telemetry).
+    """
+
+    def __init__(
+        self,
+        histograms=None,
+        corpus: Optional[Corpus] = None,
+        sample_ids: Optional[Array] = None,
+    ):
+        self.histograms = histograms
+        self.corpus = corpus
+        self.sample_ids = sample_ids
+
+    # --- host-side operand estimates (serving hot path) -------------------
+    def estimate_operand(
+        self, family: str, operand
+    ) -> Tuple[Optional[float], str]:
+        """(estimate, source) for one request's host-side operand.
+
+        family "label": operand is the (Lw,) uint32 allowed-label bitmask
+        row; "range": (lo, hi, col). Returns (None, "none") when no
+        histogram covers the family — the caller decides the fallback
+        (serving routes to the graph default; core callers can afford the
+        sampled device probe via ``estimate_constraint``).
+        """
+        if self.histograms is not None:
+            est = self.histograms.estimate(family, operand)
+            if est is not None:
+                return float(est), "histogram"
+        return None, "none"
+
+    # --- traced-constraint estimates (bench / UDF fallback) ---------------
+    def estimate_constraint(
+        self, constraint, corpus: Optional[Corpus] = None
+    ) -> Tuple[np.ndarray, str]:
+        """((B,) estimates, source) for a full constraint object.
+
+        Histogram-covered families evaluate per row on the host; anything
+        else (UDF) falls back to the sampled satisfied-fraction over the
+        pre-drawn build sample — the dedup the router rides on.
+        """
+        if self.histograms is not None:
+            if isinstance(constraint, LabelSetConstraint):
+                words = np.asarray(constraint.words)
+                out = np.asarray(
+                    [self.histograms.estimate("label", w) for w in words],
+                    np.float32,
+                )
+                return out, "histogram"
+            if isinstance(constraint, RangeConstraint):
+                lo = np.asarray(constraint.lo)
+                hi = np.asarray(constraint.hi)
+                col = int(constraint.col)
+                out = np.asarray(
+                    [
+                        self.histograms.estimate("range", (lo[i], hi[i], col))
+                        for i in range(lo.shape[0])
+                    ],
+                    np.float32,
+                )
+                return out, "histogram"
+        corpus = corpus if corpus is not None else self.corpus
+        if corpus is None or self.sample_ids is None:
+            raise ValueError(
+                "no histogram covers this constraint and no (corpus, "
+                "sample_ids) were provided for the sampled fallback"
+            )
+        satisfied = make_satisfied_fn(constraint, corpus)
+        if isinstance(constraint, LabelSetConstraint):
+            b = constraint.batch
+        elif isinstance(constraint, RangeConstraint):
+            b = int(constraint.lo.shape[0])
+        else:
+            b = 1
+        est = sampled_selectivity(satisfied, jnp.asarray(self.sample_ids), b)
+        return np.asarray(est), "sampled"

@@ -1,0 +1,224 @@
+"""Label-subgraph overlays: cached sub-indexes over hot posting sets.
+
+The middle of the selectivity range (~1–5%) is where neither extreme wins:
+the full-graph walk still wastes most expansions on failing vertices, but
+the posting set is already thousands of ids — too many to brute-force
+per request. For a *hot* label the fix is a small dedicated proximity
+graph over exactly its posting set: built lazily on first use (one
+``graph.build_index`` over P rows), cached, and searched with the standard
+traversal engine — every vertex satisfies, so the walk never wastes an
+expansion.
+
+Lifecycle: an overlay is pinned to the streaming epoch it was built from.
+Epoch swaps (snapshot publication after upsert/delete/consolidate)
+invalidate it — ``OverlayCache.get`` rebuilds on epoch mismatch, so a
+stale overlay is never served (asserted in tests). Sub-corpora pad to a
+size ladder with tombstoned pad slots so one compiled search serves every
+overlay in a bucket.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.pytree import pytree_dataclass, static_field
+from repro.core.constraints import LabelSetConstraint, WORD_BITS
+from repro.core.types import Corpus, GraphIndex, SearchParams, SearchResult
+
+Array = jax.Array
+PAD = -1
+
+OVERLAY_BUCKETS = (256, 1024, 4096, 16384)
+
+
+def overlay_bucket(count: int, ladder=OVERLAY_BUCKETS) -> int:
+    for b in ladder:
+        if count <= b:
+            return b
+    return int(count)
+
+
+@pytree_dataclass
+class LabelOverlay:
+    """One label's cached sub-index (device arrays; static identity)."""
+
+    corpus: Corpus  # (bucket, d) rows; pad slots tombstoned
+    graph: GraphIndex  # (bucket, deg) local adjacency; pad rows all-PAD
+    ids_dev: Array  # (bucket,) int32 local -> global slot map; PAD pads
+    label: int = static_field(default=0)
+    epoch: int = static_field(default=0)
+    n_real: int = static_field(default=0)
+
+
+def build_overlay(
+    label: int,
+    posting_ids: np.ndarray,
+    vectors: np.ndarray,
+    epoch: int,
+    *,
+    rng: Optional[Array] = None,
+    degree: int = 12,
+    sample_size: int = 64,
+    bucket: Optional[int] = None,
+) -> LabelOverlay:
+    """Build one label's overlay from its LIVE posting ids (host arrays).
+
+    Needs P >= 2 (a 1-row graph has no edges — the router never dispatches
+    here below that, and the posting scan owns tiny sets anyway). The
+    sub-corpus pads to the size-ladder ``bucket`` with zero rows that are
+    tombstoned AND labeled -2, so they fail the equal-label constraint two
+    independent ways.
+    """
+    from repro.graph.index import build_index
+
+    posting_ids = np.asarray(posting_ids, np.int32)
+    p = int(posting_ids.shape[0])
+    if p < 2:
+        raise ValueError(f"overlay needs >= 2 postings, got {p}")
+    b = int(bucket) if bucket is not None else overlay_bucket(p)
+    d = vectors.shape[1]
+
+    rows = np.zeros((b, d), np.float32)
+    rows[:p] = np.asarray(vectors, np.float32)[posting_ids]
+    labels = np.full((b,), -2, np.int32)
+    labels[:p] = int(label)
+    # pad slots tombstoned: bits [p, b) set
+    words = (b + WORD_BITS - 1) // WORD_BITS
+    tomb = np.zeros((words,), np.uint32)
+    for s in range(p, b):
+        tomb[s // WORD_BITS] |= np.uint32(1) << np.uint32(s % WORD_BITS)
+
+    sub_corpus_real = Corpus(
+        vectors=jnp.asarray(rows[:p]), labels=jnp.asarray(labels[:p])
+    )
+    key = rng if rng is not None else jax.random.PRNGKey(
+        (int(label) * 1_000_003 + int(epoch)) & 0x7FFFFFFF
+    )
+    sub_graph = build_index(
+        key,
+        sub_corpus_real,
+        degree=min(int(degree), p - 1),
+        sample_size=min(int(sample_size), p),
+    )
+    # Adjacency pads to the REQUESTED degree (not the possibly-smaller
+    # built one) so every overlay in a size bucket shares one traced shape.
+    sub_nbrs = np.asarray(sub_graph.neighbors)
+    nbrs = np.full((b, int(degree)), PAD, np.int32)
+    nbrs[:p, : sub_nbrs.shape[1]] = sub_nbrs
+    # The sample also pads to a fixed length (cycling real ids — the
+    # engine's seeding dedups repeats) for the same one-trace-per-bucket
+    # reason.
+    sample = np.resize(
+        np.asarray(sub_graph.sample_ids, np.int32), (int(sample_size),)
+    )
+
+    ids_map = np.full((b,), PAD, np.int32)
+    ids_map[:p] = posting_ids
+
+    corpus = Corpus(
+        vectors=jnp.asarray(rows),
+        labels=jnp.asarray(labels),
+        tombstones=jnp.asarray(tomb),
+    )
+    graph = GraphIndex(
+        neighbors=jnp.asarray(nbrs),
+        sample_ids=jnp.asarray(sample),
+        entry_point=sub_graph.entry_point,
+    )
+    return LabelOverlay(
+        corpus=corpus,
+        graph=graph,
+        ids_dev=jnp.asarray(ids_map),
+        label=int(label),
+        epoch=int(epoch),
+        n_real=p,
+    )
+
+
+def overlay_search(
+    overlay: LabelOverlay, queries: Array, params: SearchParams
+) -> SearchResult:
+    """Traversal over the overlay's sub-graph; global ids out.
+
+    The constraint is the overlay's own equal-label mask — every real
+    sub-row satisfies (the walk never wastes an expansion on a failing
+    vertex) while pad rows fail via tombstone + label. Local result ids
+    map back through ``ids_dev``.
+    """
+    from repro.core.engine.loop import constrained_search
+
+    bq = queries.shape[0]
+    lab = overlay.label
+    words = jnp.zeros((bq, lab // WORD_BITS + 1), jnp.uint32)
+    words = words.at[:, lab // WORD_BITS].set(
+        jnp.uint32(1) << jnp.uint32(lab % WORD_BITS)
+    )
+    constraint = LabelSetConstraint(words=words)
+    res = constrained_search(
+        overlay.corpus, overlay.graph, queries, constraint, params
+    )
+    local = res.ids
+    global_ids = jnp.where(
+        local >= 0, overlay.ids_dev[jnp.maximum(local, 0)], PAD
+    )
+    return SearchResult(dists=res.dists, ids=global_ids, stats=res.stats)
+
+
+class OverlayCache:
+    """LRU cache of built overlays, keyed by label, pinned to an epoch.
+
+    ``get`` returns a fresh overlay for (label, epoch): a cached overlay
+    from an older epoch is invalidated and rebuilt — the staleness
+    guarantee the acceptance criteria assert. ``build_fn(label, epoch,
+    bucket)`` supplies the rebuild (the serving layer closes it over the
+    current snapshot's postings + vectors).
+    """
+
+    def __init__(self, max_overlays: int = 8):
+        self.max_overlays = int(max_overlays)
+        self._cache: "OrderedDict[int, LabelOverlay]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.builds = 0
+        self.invalidations = 0
+
+    def get(
+        self,
+        label: int,
+        epoch: int,
+        build_fn: Callable[[int, int], Optional[LabelOverlay]],
+    ) -> Optional[LabelOverlay]:
+        label = int(label)
+        cached = self._cache.get(label)
+        if cached is not None:
+            if cached.epoch == int(epoch):
+                self.hits += 1
+                self._cache.move_to_end(label)
+                return cached
+            # epoch moved under us: never serve stale
+            self.invalidations += 1
+            del self._cache[label]
+        self.misses += 1
+        overlay = build_fn(label, int(epoch))
+        if overlay is None:
+            return None
+        assert overlay.epoch == int(epoch), "build_fn returned wrong epoch"
+        self.builds += 1
+        self._cache[label] = overlay
+        self._cache.move_to_end(label)
+        while len(self._cache) > self.max_overlays:
+            self._cache.popitem(last=False)
+        return overlay
+
+    def stats(self) -> dict:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "builds": self.builds,
+            "invalidations": self.invalidations,
+            "resident": len(self._cache),
+        }

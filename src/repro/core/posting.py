@@ -1,0 +1,288 @@
+"""Posting lists + brute-force posting-set scan executor (DESIGN.md §9).
+
+At ≤1% selectivity the graph walk burns iterations on mostly-failing
+vertices (the regime SIEVE, arXiv:2507.11907, attacks with per-predicate
+indexes). There the optimal plan is not a walk at all: gather the
+constraint's posting set — the ids that *can* satisfy — and score exactly
+those with ONE batched distance call. The scan reuses the traversal's
+``DistanceBackend.distances`` surface, so Exact | L2Kernel | PQ all work;
+the PQ path prunes with ADC and exactly re-ranks survivors, mirroring the
+in-loop engine's contract.
+
+Host side, ``PostingLists`` maintains the per-label id sets (incrementally
+updated by the streaming layer alongside the histograms) and ``RangeIndex``
+keeps a per-column value-sorted id array (rebuilt lazily per epoch — range
+postings are a sorted-slice lookup, not a per-bin set union).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine.context import ExactBackend, build_context
+from repro.core.types import Corpus, SearchParams, SearchResult, SearchStats
+
+Array = jax.Array
+WORD_BITS = 32
+PAD = -1
+
+
+# ---------------------------------------------------------------------------
+# host-side posting maintenance
+# ---------------------------------------------------------------------------
+
+
+class PostingLists:
+    """Per-label LIVE id sets with cached sorted-array views.
+
+    Mutations are O(1) set ops; ``ids_for_label`` materializes (and caches)
+    the sorted int32 array a scan gathers with — the cache invalidates on
+    the first mutation touching that label.
+    """
+
+    def __init__(self, n_labels: int):
+        self._sets: List[set] = [set() for _ in range(max(int(n_labels), 1))]
+        self._cache: Dict[int, np.ndarray] = {}
+
+    @classmethod
+    def from_arrays(
+        cls,
+        labels: np.ndarray,
+        live_mask: Optional[np.ndarray] = None,
+        n_labels: Optional[int] = None,
+    ) -> "PostingLists":
+        labels = np.asarray(labels)
+        nl = int(n_labels) if n_labels is not None else (
+            int(labels.max()) + 1 if labels.size else 1
+        )
+        p = cls(nl)
+        ids = np.arange(labels.shape[0])
+        if live_mask is not None:
+            ids = ids[np.asarray(live_mask, bool)]
+        for i in ids:
+            p._sets[int(labels[i])].add(int(i))
+        return p
+
+    def _grow(self, label: int) -> None:
+        while label >= len(self._sets):
+            self._sets.append(set())
+
+    def on_insert(self, label: int, slot: int) -> None:
+        label = int(label)
+        self._grow(label)
+        self._sets[label].add(int(slot))
+        self._cache.pop(label, None)
+
+    def on_delete(self, label: int, slot: int) -> None:
+        label = int(label)
+        self._grow(label)
+        self._sets[label].discard(int(slot))
+        self._cache.pop(label, None)
+
+    def count_label(self, label: int) -> int:
+        label = int(label)
+        return len(self._sets[label]) if label < len(self._sets) else 0
+
+    def count_words(self, words: np.ndarray) -> int:
+        """Posting-set size for a label-bitmask operand row."""
+        return sum(self.count_label(lab) for lab in _labels_of_words(words))
+
+    def ids_for_label(self, label: int) -> np.ndarray:
+        label = int(label)
+        if label >= len(self._sets):
+            return np.empty((0,), np.int32)
+        arr = self._cache.get(label)
+        if arr is None:
+            arr = np.fromiter(self._sets[label], np.int32, len(self._sets[label]))
+            arr.sort()
+            self._cache[label] = arr
+        return arr
+
+    def ids_for_words(self, words: np.ndarray) -> np.ndarray:
+        """Sorted union of postings across every set bit of the operand."""
+        labs = _labels_of_words(words)
+        if not labs:
+            return np.empty((0,), np.int32)
+        if len(labs) == 1:
+            return self.ids_for_label(labs[0])
+        parts = [self.ids_for_label(lab) for lab in labs]
+        return np.unique(np.concatenate(parts)).astype(np.int32)
+
+
+def _labels_of_words(words: np.ndarray) -> List[int]:
+    labs: List[int] = []
+    for w, word in enumerate(np.asarray(words, np.uint32).reshape(-1)):
+        word = int(word)
+        while word:
+            bit = (word & -word).bit_length() - 1
+            labs.append(w * WORD_BITS + bit)
+            word &= word - 1
+    return labs
+
+
+class RangeIndex:
+    """Per-column value-sorted LIVE ids; [lo, hi] posting = one sorted slice.
+
+    Rebuilt lazily: callers bump ``version`` (the streaming layer passes its
+    epoch) and the sort re-runs only when the version moved — a range
+    posting lookup is then two binary searches.
+    """
+
+    def __init__(self):
+        self.version = -1
+        self._order: Dict[int, np.ndarray] = {}  # col -> ids sorted by value
+        self._vals: Dict[int, np.ndarray] = {}  # col -> sorted values
+
+    def refresh(
+        self,
+        attrs: np.ndarray,
+        live_mask: np.ndarray,
+        version: int,
+    ) -> None:
+        if version == self.version:
+            return
+        attrs = np.asarray(attrs)
+        live = np.nonzero(np.asarray(live_mask, bool))[0].astype(np.int32)
+        self._order.clear()
+        self._vals.clear()
+        for c in range(attrs.shape[1]):
+            v = attrs[live, c]
+            o = np.argsort(v, kind="stable")
+            self._order[c] = live[o]
+            self._vals[c] = v[o]
+        self.version = version
+
+    def ids_for_range(self, lo: float, hi: float, col: int) -> np.ndarray:
+        vals = self._vals.get(int(col))
+        if vals is None:
+            return np.empty((0,), np.int32)
+        a = int(np.searchsorted(vals, lo, side="left"))
+        b = int(np.searchsorted(vals, hi, side="right"))
+        out = self._order[int(col)][a:b]
+        return np.sort(out).astype(np.int32)
+
+    def count_range(self, lo: float, hi: float, col: int) -> int:
+        vals = self._vals.get(int(col))
+        if vals is None:
+            return 0
+        return int(np.searchsorted(vals, hi, side="right")) - int(
+            np.searchsorted(vals, lo, side="left")
+        )
+
+
+def pad_posting(ids: np.ndarray, bucket: int) -> np.ndarray:
+    """Pad a posting array to ``bucket`` with PAD (-1) for shape reuse."""
+    out = np.full((bucket,), PAD, np.int32)
+    out[: ids.shape[0]] = ids
+    return out
+
+
+def posting_bucket(count: int, ladder=(256, 1024, 4096, 16384)) -> int:
+    """Smallest ladder bucket holding ``count`` postings (compile reuse:
+    one traced scan per bucket size, not per posting-set size)."""
+    for b in ladder:
+        if count <= b:
+            return b
+    return ladder[-1] if count <= ladder[-1] else int(count)
+
+
+# ---------------------------------------------------------------------------
+# the scan itself
+# ---------------------------------------------------------------------------
+
+
+def posting_scan_with_context(
+    ctx,
+    corpus: Corpus,
+    queries: Array,
+    posting_ids: Array,
+    params: SearchParams,
+) -> SearchResult:
+    """Brute-force top-k over a padded posting set via the context backend.
+
+    posting_ids: (P,) int32, PAD (-1) entries ignored — shared across the
+    batch (every query in a micro-batch carries the same operand group).
+    The constraint closure still runs over the postings: it masks pads,
+    tombstones, and (for multi-label / range operands) any id the posting
+    union over-included. Empty posting set (all PAD) returns all-unfilled
+    (+inf, -1) rows — never crashes.
+
+    Approximate backends (PQ/ADC) prune to the ef_result capacity then
+    re-rank exactly — identical contract to the traversal engine's
+    post-loop re-rank, so parity tests compare like for like.
+    """
+    b = queries.shape[0]
+    p = posting_ids.shape[0]
+    ids_b = jnp.broadcast_to(posting_ids[None, :], (b, p))
+    d = ctx.backend.distances(queries, ids_b)  # (B, P)
+    ok = ctx.satisfied(ids_b)  # masks pads, tombstones, constraint
+    d = jnp.where(ok, d, jnp.inf)
+    ids_live = jnp.where(ok, ids_b, PAD)
+
+    if ctx.backend.approximate:
+        # ADC prune to the candidate capacity, then exact re-rank — the
+        # same two-stage contract as the engine's post-loop re-rank.
+        r = min(params.result_capacity, p)
+        neg, pos = jax.lax.top_k(-d, r)
+        cand_ids = jnp.take_along_axis(ids_live, pos, axis=-1)
+        exact_d = ExactBackend(vectors=corpus.vectors).distances(
+            queries, cand_ids
+        )
+        d = jnp.where(cand_ids >= 0, exact_d, jnp.inf)
+        ids_live = cand_ids
+        p = r
+
+    k = params.k
+    if p < k:  # lax.top_k needs k <= columns
+        padw = k - p
+        d = jnp.pad(d, ((0, 0), (0, padw)), constant_values=jnp.inf)
+        ids_live = jnp.pad(ids_live, ((0, 0), (0, padw)), constant_values=PAD)
+    neg_top, pos = jax.lax.top_k(-d, k)
+    out_d = -neg_top
+    out_i = jnp.take_along_axis(ids_live, pos, axis=-1)
+    out_i = jnp.where(jnp.isfinite(out_d), out_i, PAD)
+
+    n_real = jnp.sum(posting_ids >= 0).astype(jnp.int32)
+    stats = SearchStats(
+        dist_evals=jnp.broadcast_to(n_real, (b,)),
+        hops=jnp.zeros((b,), jnp.int32),
+        visited=jnp.sum(ok, axis=-1, dtype=jnp.int32),
+        iters=jnp.int32(0),
+    )
+    return SearchResult(dists=out_d, ids=out_i, stats=stats)
+
+
+@partial(jax.jit, static_argnames=("params",))
+def _posting_search(corpus, queries, constraint, posting_ids, params, pq_index):
+    ctx = build_context(corpus, constraint, queries, params, pq_index)
+    return posting_scan_with_context(ctx, corpus, queries, posting_ids, params)
+
+
+@partial(jax.jit, static_argnames=("params", "constraint"))
+def _posting_search_static(
+    corpus, queries, constraint, posting_ids, params, pq_index
+):
+    ctx = build_context(corpus, constraint, queries, params, pq_index)
+    return posting_scan_with_context(ctx, corpus, queries, posting_ids, params)
+
+
+def posting_search(
+    corpus: Corpus,
+    queries: Array,
+    constraint,
+    posting_ids: Array,
+    params: SearchParams,
+    pq_index=None,
+) -> SearchResult:
+    """Jitted public entry: posting-set brute-force constrained top-k.
+
+    Same calling convention as ``constrained_search`` plus the (P,) padded
+    posting ids. One compiled scan serves every (P-bucket, params) pair;
+    UDF constraints are static like the traversal path.
+    """
+    impl = _posting_search_static if callable(constraint) else _posting_search
+    return impl(corpus, queries, constraint, posting_ids, params, pq_index)

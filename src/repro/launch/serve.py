@@ -104,7 +104,7 @@ def build_runtime(args, corpus, clock):
             for t in tiers
         )
     ladder = tuple(int(b) for b in args.ladder.split(","))
-    return ServingRuntime(
+    runtime = ServingRuntime(
         executor,
         n_labels=args.labels,
         tiers=tiers,
@@ -114,6 +114,18 @@ def build_runtime(args, corpus, clock):
         max_pending=args.max_pending,
         clock=clock,
     )
+    if args.hybrid:
+        if args.distributed:
+            raise SystemExit(
+                "--hybrid needs host-side posting lists; the distributed "
+                "executor is graph-only for now (drop --distributed)"
+            )
+        from repro.serving import make_serving_router
+
+        runtime.router = make_serving_router(
+            executor, n_labels=args.labels, controller=runtime.controller
+        )
+    return runtime
 
 
 def main():
@@ -147,6 +159,13 @@ def main():
         "--approx", default="exact", choices=("exact", "pq"),
         help="distance backend for the walk: exact rows or PQ/ADC codes "
         "(trains a PQ index on the corpus; exact re-rank post-loop)",
+    )
+    ap.add_argument(
+        "--hybrid", action="store_true",
+        help="selectivity-adaptive execution (DESIGN.md §9): a per-query "
+        "strategy router estimates constraint selectivity from incremental "
+        "histograms and dispatches each request to the graph walk, a "
+        "brute-force posting-set scan, or a cached label-subgraph overlay",
     )
     ap.add_argument(
         "--fuse", default="auto", choices=("auto", "on", "off"),

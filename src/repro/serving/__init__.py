@@ -11,11 +11,13 @@ from repro.serving.controller import (
 )
 from repro.serving.runtime import (
     DistributedExecutor,
+    EpochRangeView,
     LocalExecutor,
     ServingRuntime,
     StreamingLocalExecutor,
     assemble_constraint,
     assemble_queries,
+    make_serving_router,
 )
 from repro.serving.telemetry import Telemetry, percentile
 from repro.serving.types import (
@@ -46,6 +48,7 @@ __all__ = [
     "DeleteRequest",
     "DistributedExecutor",
     "DynamicBatcher",
+    "EpochRangeView",
     "LocalExecutor",
     "MUTATION_FAMILIES",
     "MicroBatch",
@@ -63,6 +66,7 @@ __all__ = [
     "bucket_for",
     "churn_workload",
     "label_words_row",
+    "make_serving_router",
     "make_tier_ladder",
     "mixed_workload",
     "percentile",

@@ -44,6 +44,12 @@ class MicroBatch:
         return self.group[0]
 
     @property
+    def strategy(self) -> str:
+        """Executor strategy shared by the batch ("graph" unless the hybrid
+        router stamped something else; group keys separate strategies)."""
+        return self.requests[0].strategy if self.requests else "graph"
+
+    @property
     def n_real(self) -> int:
         return len(self.requests)
 

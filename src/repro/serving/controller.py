@@ -76,6 +76,33 @@ class _FamilyState:
     batches_at_tier: int = 0
 
 
+@dataclasses.dataclass
+class _StrategyStats:
+    """Per-strategy EMAs within one (family, selectivity-bucket) key."""
+
+    lat_ema: Optional[float] = None  # per-request latency at this strategy
+    fill_ema: Optional[float] = None
+    batches: int = 0
+
+
+@dataclasses.dataclass
+class _StrategyState:
+    """Observed-performance state for one (family, sel-bucket) routing key.
+
+    ``preferred`` is None until enough evidence accumulates — the router
+    then uses its own lattice default. Retuning only ever *selects among*
+    strategies the router's lattice row allows (the router re-checks
+    membership + applicability before honouring the preference), so the
+    controller cannot route outside the declared lattice.
+    """
+
+    preferred: Optional[str] = None
+    stats: Dict[str, _StrategyStats] = dataclasses.field(default_factory=dict)
+    # best-first ordering, recomputed at record time so the router's
+    # per-request hot path reads a cached tuple instead of sorting
+    ranking: Tuple[str, ...] = ()
+
+
 class AdaptiveController:
     def __init__(
         self,
@@ -90,6 +117,10 @@ class AdaptiveController:
         self.tiers = tuple(tiers)
         self.config = config
         self._families: Dict[str, _FamilyState] = {}
+        self._strategies: Dict[tuple, _StrategyState] = {}
+        # bumped on every record_strategy; the router's plan cache keys
+        # decision validity on it so retuning invalidates cached plans
+        self.generation = 0
 
     @property
     def max_tier(self) -> int:
@@ -146,8 +177,72 @@ class AdaptiveController:
                 st.fill_ema = st.iter_ema = None
                 st.batches_at_tier = 0
 
+    # --- hybrid strategy retuning (DESIGN.md §9) --------------------------
+    def strategy_for(self, key: tuple, default: str) -> str:
+        """Preferred executor strategy for a (family, sel-bucket) routing
+        key, or the router's lattice ``default`` before evidence exists.
+        The router re-validates the preference against its lattice row and
+        applicability gates — this is a hint, never an override beyond the
+        declared lattice."""
+        st = self._strategies.get(key)
+        if st is None or st.preferred is None:
+            return default
+        return st.preferred
+
+    def strategy_ranking(self, key: tuple) -> tuple:
+        """All observed strategies for the key, best-first: adequately
+        filling ones (within 1% of the best fill EMA) by ascending latency,
+        then under-filling ones by ascending latency. Empty before any
+        strategy has ``min_batches`` observations. The router walks this
+        ranking so that when the globally fastest strategy is outside the
+        bucket's lattice row (or inapplicable), the *next-best observed*
+        strategy still wins over the static lattice default. Cached at
+        record time — this sits on the per-request routing hot path."""
+        st = self._strategies.get(key)
+        return () if st is None else st.ranking
+
+    def record_strategy(
+        self, key: tuple, strategy: str, latency: float, fill_frac: float
+    ) -> None:
+        """Fold one completed microbatch's per-request latency + fill into
+        the (family, sel-bucket) strategy EMAs, and retune the preference:
+        the lowest-latency strategy among those that fill essentially as
+        well as the best observed (within 1%), once every candidate has
+        ``min_batches`` observations."""
+        st = self._strategies.setdefault(key, _StrategyState())
+        self.generation += 1
+        s = st.stats.setdefault(strategy, _StrategyStats())
+        a = self.config.ema_alpha
+        s.lat_ema = (
+            latency if s.lat_ema is None else (1 - a) * s.lat_ema + a * latency
+        )
+        s.fill_ema = (
+            fill_frac
+            if s.fill_ema is None
+            else (1 - a) * s.fill_ema + a * fill_frac
+        )
+        s.batches += 1
+        ready = {
+            name: stats
+            for name, stats in st.stats.items()
+            if stats.batches >= self.config.min_batches
+        }
+        if not ready:
+            return
+        best_fill = max(stats.fill_ema for stats in ready.values())
+        adequate = sorted(
+            (name for name, s in ready.items() if s.fill_ema >= best_fill - 0.01),
+            key=lambda name: ready[name].lat_ema,
+        )
+        lagging = sorted(
+            (name for name, s in ready.items() if s.fill_ema < best_fill - 0.01),
+            key=lambda name: ready[name].lat_ema,
+        )
+        st.ranking = tuple(adequate) + tuple(lagging)
+        st.preferred = st.ranking[0]
+
     def snapshot(self) -> dict:
-        return {
+        out = {
             fam: {
                 "default_tier": st.default_tier,
                 "fill_ema": None if st.fill_ema is None else round(st.fill_ema, 4),
@@ -155,3 +250,27 @@ class AdaptiveController:
             }
             for fam, st in self._families.items()
         }
+        if self._strategies:
+            out["strategies"] = {
+                f"{key[0]}@bucket{key[1]}": {
+                    "preferred": st.preferred,
+                    "observed": {
+                        name: {
+                            "lat_ema": (
+                                None
+                                if s.lat_ema is None
+                                else round(s.lat_ema, 6)
+                            ),
+                            "fill_ema": (
+                                None
+                                if s.fill_ema is None
+                                else round(s.fill_ema, 4)
+                            ),
+                            "batches": s.batches,
+                        }
+                        for name, s in st.stats.items()
+                    },
+                }
+                for key, st in self._strategies.items()
+            }
+        return out

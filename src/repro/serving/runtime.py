@@ -32,6 +32,17 @@ import numpy as np
 from repro.common.compat import set_mesh
 from repro.core import build_context, make_distributed_search, search_with_context
 from repro.core.constraints import WORD_BITS, LabelSetConstraint, RangeConstraint
+from repro.core.estimator import SelectivityEstimator
+from repro.core.histogram import AttributeHistograms
+from repro.core.overlay import OverlayCache, build_overlay, overlay_search
+from repro.core.posting import (
+    PostingLists,
+    RangeIndex,
+    pad_posting,
+    posting_bucket,
+    posting_search,
+)
+from repro.core.router import RouterConfig, StrategyRouter
 from repro.core.types import Corpus, GraphIndex, SearchParams, SearchResult
 from repro.serving.batcher import BATCH_LADDER, DynamicBatcher, MicroBatch
 from repro.serving.cache import CompileCache
@@ -241,6 +252,88 @@ class DistributedExecutor:
 
 
 # ---------------------------------------------------------------------------
+# hybrid routing plumbing (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+
+class EpochRangeView:
+    """Range-posting view over a streaming index that re-sorts lazily at
+    each epoch — the router's applicability gate and the posting scan both
+    read through this, so neither ever sees a stale sort order."""
+
+    def __init__(self, index):
+        self._index = index
+
+    def _fresh(self):
+        idx = self._index
+        if idx.pool.attrs is not None:
+            idx.range_index.refresh(
+                idx.pool.attrs, idx.pool.live_mask(), idx.epoch
+            )
+        return idx.range_index
+
+    def count_range(self, lo, hi, col) -> int:
+        return self._fresh().count_range(lo, hi, col)
+
+    def ids_for_range(self, lo, hi, col) -> np.ndarray:
+        return self._fresh().ids_for_range(lo, hi, col)
+
+
+def make_serving_router(
+    executor,
+    n_labels: int,
+    config: Optional[RouterConfig] = None,
+    controller: Optional[AdaptiveController] = None,
+) -> StrategyRouter:
+    """Wire a ``StrategyRouter`` to an executor's index state.
+
+    Streaming executors share the index's incrementally-maintained
+    histograms/postings (exact at every epoch); static ``LocalExecutor``s
+    get one-shot structures built from the corpus. The distributed executor
+    is graph-only for now (posting gathers against a sharded corpus need
+    per-shard postings — ROADMAP).
+    """
+    if hasattr(executor, "apply_mutations"):  # streaming
+        index = executor.index
+        estimator = SelectivityEstimator(histograms=index.histograms)
+        return StrategyRouter(
+            estimator,
+            n=index.capacity,
+            config=config,
+            postings=index.postings,
+            range_index=EpochRangeView(index),
+            controller=controller,
+        )
+    if not hasattr(executor, "corpus"):
+        raise TypeError(
+            f"hybrid routing needs a local or streaming executor; "
+            f"have {type(executor).__name__}"
+        )
+    corpus = executor.corpus
+    labels = np.asarray(corpus.labels)
+    attrs = None if corpus.attrs is None else np.asarray(corpus.attrs)
+    hist = AttributeHistograms.from_arrays(labels, attrs, n_labels=n_labels)
+    postings = PostingLists.from_arrays(labels, n_labels=n_labels)
+    range_index = RangeIndex()
+    if attrs is not None:
+        range_index.refresh(attrs, np.ones((labels.shape[0],), bool), 0)
+    graph = getattr(executor, "graph", None)
+    estimator = SelectivityEstimator(
+        histograms=hist,
+        corpus=corpus,
+        sample_ids=None if graph is None else graph.sample_ids,
+    )
+    return StrategyRouter(
+        estimator,
+        n=int(labels.shape[0]),
+        config=config,
+        postings=postings,
+        range_index=range_index,
+        controller=controller,
+    )
+
+
+# ---------------------------------------------------------------------------
 # the runtime
 # ---------------------------------------------------------------------------
 
@@ -258,6 +351,8 @@ class ServingRuntime:
         max_pending: int = 1024,
         controller: Optional[AdaptiveController] = None,
         clock: Optional[Callable[[], float]] = None,
+        router: Optional[StrategyRouter] = None,
+        max_overlays: int = 8,
     ):
         self.executor = executor
         self.n_labels = int(n_labels)
@@ -281,6 +376,15 @@ class ServingRuntime:
         self._max_unpolled = 4 * self.max_pending
         self._in_flight = 0
         self._next_id = 0
+        # Hybrid execution (opt-in; DESIGN.md §9): a router stamps each
+        # request's strategy at admission and the pump dispatches posting /
+        # overlay microbatches outside the graph compile cache (their jit
+        # keys are shape-laddered independently). router=None reproduces
+        # pre-hybrid behaviour exactly.
+        self.router = router
+        if router is not None and router.controller is None:
+            router.controller = self.controller
+        self.overlays = OverlayCache(max_overlays=max_overlays)
 
     # --- compile-cache plumbing ------------------------------------------
     def _build_for_key(self, key):
@@ -337,18 +441,25 @@ class ServingRuntime:
             raise ValueError(f"family {family!r} not served (have {self.families})")
         if k > self.controller.k_cap:
             raise ValueError(f"k={k} exceeds the ladder's k cap {self.controller.k_cap}")
-        return self._admit(
-            Request(
-                req_id=self._next_id,
-                query=np.asarray(query, dtype=np.float32),
-                k=int(k),
-                family=family,
-                operand=operand,
-                deadline=deadline,
-                arrival_t=self.clock(),
-                tier=self.controller.tier_for(family),
-            )
+        req = Request(
+            req_id=self._next_id,
+            query=np.asarray(query, dtype=np.float32),
+            k=int(k),
+            family=family,
+            operand=operand,
+            deadline=deadline,
+            arrival_t=self.clock(),
+            tier=self.controller.tier_for(family),
         )
+        if self.router is not None:
+            decision = self.router.route(family, operand)
+            req.strategy = decision.strategy
+            req.est_selectivity = decision.est_selectivity
+            req.sel_bucket = decision.bucket
+            req.sel_source = decision.source
+            req.overlay_label = decision.label
+            self.telemetry.on_route(decision.strategy)
+        return self._admit(req)
 
     def _admit(self, req: Request) -> int:
         if self._in_flight >= self.max_pending:
@@ -446,6 +557,10 @@ class ServingRuntime:
         if mutations:
             epoch = self.executor.refresh()  # the atomic epoch swap
             self.telemetry.on_epoch_swap()
+            if self.router is not None:
+                # Overlay hotness re-accumulates per epoch; the overlay
+                # cache itself invalidates on epoch mismatch at get().
+                self.router.on_epoch(epoch)
             for resp in applied:
                 # The first epoch this mutation is visible in — queries
                 # with Response.epoch >= this one see its effect.
@@ -502,6 +617,66 @@ class ServingRuntime:
             self._in_flight -= 1
         return responses
 
+    # --- hybrid strategy executors (DESIGN.md §9) -------------------------
+    def _current_corpus(self) -> Corpus:
+        if hasattr(self.executor, "apply_mutations"):
+            return self.executor.snapshot.corpus
+        return self.executor.corpus
+
+    def _host_vectors(self) -> np.ndarray:
+        if hasattr(self.executor, "apply_mutations"):
+            return self.executor.index.pool.vectors
+        return np.asarray(self.executor.corpus.vectors)
+
+    def _run_posting(self, mb: MicroBatch, queries, constraint):
+        """Brute-force scan over the batch's shared posting set. The scan
+        is exact over that set (the constraint closure re-verifies every
+        id), so its results never escalate — an under-fill means fewer
+        than k satisfying rows exist."""
+        req = mb.requests[0]
+        if req.family == "label":
+            ids = self.router.postings.ids_for_words(
+                np.asarray(req.operand, np.uint32)
+            )
+        else:
+            lo, hi, col = req.operand
+            ids = self.router.range_index.ids_for_range(
+                float(lo), float(hi), int(col)
+            )
+        padded = pad_posting(ids, posting_bucket(int(ids.shape[0])))
+        params = self.controller.params_for(mb.tier)
+        pq = (
+            getattr(self.executor, "pq_index", None)
+            if params.approx == "pq"
+            else None
+        )
+        return posting_search(
+            self._current_corpus(), queries, constraint,
+            jnp.asarray(padded), params, pq,
+        )
+
+    def _run_overlay(self, mb: MicroBatch, queries):
+        """Traversal over the hot label's cached sub-index; None when no
+        overlay can be built (caller falls back to the graph plan)."""
+        label = int(mb.group[-1])
+        epoch = getattr(self.executor, "epoch", 0)
+        overlay = self.overlays.get(label, epoch, self._overlay_build_fn)
+        if overlay is None:
+            return None
+        # The acceptance invariant: churn must never serve a stale overlay.
+        assert overlay.epoch == epoch, (
+            f"overlay epoch {overlay.epoch} != index epoch {epoch}"
+        )
+        return overlay_search(
+            overlay, queries, self.controller.params_for(mb.tier)
+        )
+
+    def _overlay_build_fn(self, label: int, epoch: int):
+        ids = self.router.postings.ids_for_label(label)
+        if ids.shape[0] < 2:  # a sub-graph needs at least one edge
+            return None
+        return build_overlay(label, ids, self._host_vectors(), epoch)
+
     def _execute(self, mb: MicroBatch) -> int:
         # The whole request-processing path is the service time: operand
         # assembly + host->device transfer + search + result readback. A
@@ -509,10 +684,22 @@ class ServingRuntime:
         # exactly the per-request overhead the batch=1 baseline cannot
         # amortize.
         t0 = time.perf_counter()
-        fn = self.cache.get((mb.bucket, mb.family, mb.tier))
         queries = assemble_queries(mb, self.executor.dim)
         constraint = assemble_constraint(mb)
-        res = fn(queries, constraint)
+        strategy = mb.strategy
+        res = None
+        if strategy == "posting":
+            res = self._run_posting(mb, queries, constraint)
+        elif strategy == "overlay":
+            res = self._run_overlay(mb, queries)
+        if res is None:
+            # graph strategy, or a routed strategy that turned out
+            # inapplicable at dispatch time (e.g. the label's posting set
+            # shrank below the overlay minimum under churn): the full
+            # traversal is the universal fallback.
+            strategy = "graph"
+            fn = self.cache.get((mb.bucket, mb.family, mb.tier))
+            res = fn(queries, constraint)
         jax.block_until_ready(res.dists)
         ids = np.asarray(res.ids)
         dists = np.asarray(res.dists)
@@ -535,7 +722,10 @@ class ServingRuntime:
             filled = int(filled_rows[i])
             req.fill_history = req.fill_history + (filled,)
             fill_fracs.append(filled / max(req.k, 1))
-            if filled < req.k:
+            # Posting-scan results are exact over the posting set: an
+            # under-fill means fewer than k rows satisfy at all, and no
+            # bigger-ef tier can conjure more — never escalate those.
+            if filled < req.k and strategy != "posting":
                 next_tier = self.controller.escalate(req)
                 if next_tier is not None:
                     # Under-fill escalation: re-run at a bigger-ef tier
@@ -562,16 +752,26 @@ class ServingRuntime:
                 complete_t=now,
                 deadline_missed=req.deadline is not None and now > req.deadline,
                 epoch=getattr(self.executor, "epoch", None),
+                strategy=strategy,
+                est_selectivity=req.est_selectivity,
             )
             self._in_flight -= 1
             self.telemetry.on_complete(self._responses[req.req_id])
             done += 1
-        self.controller.record(
-            mb.family,
-            mb.tier,
-            sum(fill_fracs) / len(fill_fracs),
-            mean_iters,
-        )
+        mean_fill = sum(fill_fracs) / len(fill_fracs)
+        if strategy == "graph":
+            # Tier retuning reads traversal fill/iteration EMAs — posting
+            # scans (iters == 0 by construction) must not train them.
+            self.controller.record(mb.family, mb.tier, mean_fill, mean_iters)
+        if self.router is not None and mb.requests[0].sel_bucket >= 0:
+            # Strategy retuning per (family, selectivity bucket): observed
+            # per-request latency + fill for whatever executor actually ran.
+            self.controller.record_strategy(
+                (mb.family, mb.requests[0].sel_bucket),
+                strategy,
+                dt / max(mb.n_real, 1),
+                mean_fill,
+            )
         return done
 
     # --- reporting --------------------------------------------------------
@@ -583,6 +783,8 @@ class ServingRuntime:
             "controller": self.controller.snapshot(),
             "pending": self.batcher.pending_count(),
         }
+        if self.router is not None:
+            out["overlays"] = self.overlays.stats()
         if hasattr(self.executor, "apply_mutations"):
             idx = self.executor.index
             out["index"] = {

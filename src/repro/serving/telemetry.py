@@ -49,6 +49,10 @@ class Telemetry:
     def on_escalate(self) -> None:
         self.counters["escalations"] += 1
 
+    def on_route(self, strategy: str) -> None:
+        """Hybrid router verdicts: per-strategy admission counts."""
+        self.counters[f"routed_{strategy}"] += 1
+
     def on_mutation(self, family: str, n: int) -> None:
         """Streaming mutations are counted, not mixed into the query
         latency/fill percentiles (they complete on the host, not through
@@ -99,5 +103,22 @@ class Telemetry:
                 ),
             }
             for tier, group in sorted(by_tier.items())
+        }
+        # Fill/latency split by executor strategy (hybrid routing): the
+        # crossover evidence the adaptive controller retunes on.
+        by_strategy: Dict[str, List[Response]] = {}
+        for r in rs:
+            by_strategy.setdefault(r.strategy, []).append(r)
+        out["strategies"] = {
+            strat: {
+                "n": len(group),
+                "latency_p50": round(
+                    percentile([g.latency for g in group], 50), 6
+                ),
+                "mean_fill_frac": round(
+                    sum(g.fill_frac for g in group) / len(group), 4
+                ),
+            }
+            for strat, group in sorted(by_strategy.items())
         }
         return out

@@ -49,15 +49,43 @@ class Request:
     tier: int = 0
     escalations: int = 0
     fill_history: Tuple[int, ...] = ()  # filled count at each completed dispatch
+    # Hybrid-routing verdict (DESIGN.md §9), stamped by the strategy router
+    # at admission; defaults reproduce pre-hybrid behaviour exactly.
+    strategy: str = "graph"  # "graph" | "posting" | "overlay"
+    est_selectivity: Optional[float] = None
+    sel_bucket: int = -1
+    sel_source: str = "default"  # "histogram" | "sampled" | "default"
+    overlay_label: Optional[int] = None  # single hot label, overlay routes
 
     def group(self) -> tuple:
         """Batcher compatibility key: requests in one microbatch must share
         it. The range column is per-batch traced data with a single value
         (RangeConstraint.col), so it joins the group; label operands are
-        fully per-query."""
+        fully per-query.
+
+        Graph-strategy keys are EXACTLY the pre-hybrid keys — the hybrid
+        router only ever appends to the tuple for its own strategies, so
+        existing traces, tests, and telemetry keyed on graph groups are
+        untouched. Posting microbatches additionally share their operand
+        (the scan gathers ONE posting set for the whole batch); overlay
+        microbatches share their hot label (one sub-index per batch).
+        """
+        base = (
+            (self.family, int(self.operand[2]))
+            if self.family == "range"
+            else (self.family,)
+        )
+        if self.strategy == "posting":
+            return base + ("posting", self._operand_key())
+        if self.strategy == "overlay":
+            return base + ("overlay", int(self.overlay_label))
+        return base
+
+    def _operand_key(self) -> tuple:
+        """Hashable identity of the operand (posting-group sharing)."""
         if self.family == "range":
-            return (self.family, int(self.operand[2]))
-        return (self.family,)
+            return (float(self.operand[0]), float(self.operand[1]))
+        return (np.asarray(self.operand, np.uint32).tobytes(),)
 
 
 @dataclasses.dataclass
@@ -102,6 +130,10 @@ class Response:
     # only; None for static indexes). Queries in one flush share an epoch —
     # the snapshot swap is atomic at flush boundaries (DESIGN.md §8).
     epoch: Optional[int] = None
+    # Hybrid-routing telemetry (DESIGN.md §9): the executor strategy that
+    # produced this answer and the router's selectivity estimate for it.
+    strategy: str = "graph"
+    est_selectivity: Optional[float] = None
 
     @property
     def latency(self) -> float:

@@ -115,6 +115,7 @@ def insert_one(index: StreamingIndex, vector, label=0, attrs=None) -> int:
         patch_neighbor_row(index, int(v), slot, float(dv))
 
     pool.commit(slot)
+    index.on_slot_committed(slot)  # histograms/postings gain the new row
     # Keep AIRSHIP-Start's sample drifting with the live set: occasionally
     # point a random sample slot at the new vertex (uniform reservoir-ish;
     # a fresh slot id cannot already be sampled, so the sample stays

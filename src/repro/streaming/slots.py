@@ -89,6 +89,13 @@ class SlotPool:
         )[: self.capacity]
         return np.nonzero(bits == 0)[0].astype(np.int32)
 
+    def live_mask(self) -> np.ndarray:
+        """(capacity,) bool — LIVE slots (tombstone bit clear)."""
+        bits = np.unpackbits(
+            self.tombstones.view(np.uint8), bitorder="little"
+        )[: self.capacity]
+        return bits == 0
+
     # --- lifecycle -------------------------------------------------------
     @property
     def n_free(self) -> int:
@@ -187,6 +194,21 @@ class StreamingIndex:
         self._dirty = True
         self._snap: Optional[IndexSnapshot] = None
         self.consolidations = 0
+        # Hybrid-routing stats (DESIGN.md §9): label/range histograms and
+        # posting lists maintained INCREMENTALLY by insert/delete (±1 per
+        # mutation; consolidation moves PENDING→FREE and never changes live
+        # membership) — exact at every snapshot publication, cross-checked
+        # there against the pool's n_live. The range index re-sorts lazily
+        # per epoch on first range-posting request.
+        from repro.core.histogram import AttributeHistograms
+        from repro.core.posting import PostingLists, RangeIndex
+
+        live = pool.live_mask()
+        self.histograms = AttributeHistograms.from_arrays(
+            pool.labels, pool.attrs, live
+        )
+        self.postings = PostingLists.from_arrays(pool.labels, live)
+        self.range_index = RangeIndex()
 
     @classmethod
     def from_static(
@@ -233,11 +255,65 @@ class StreamingIndex:
     def mark_dirty(self) -> None:
         self._dirty = True
 
+    # --- hybrid-routing stats maintenance ---------------------------------
+    def on_slot_committed(self, slot: int) -> None:
+        """FREE->LIVE bookkeeping: histograms + postings gain the slot."""
+        label = int(self.pool.labels[slot])
+        attrs_row = None if self.pool.attrs is None else self.pool.attrs[slot]
+        self.histograms.on_insert(label, attrs_row)
+        self.postings.on_insert(label, slot)
+
+    def on_slot_released(self, slot: int) -> None:
+        """LIVE->PENDING bookkeeping: histograms + postings drop the slot."""
+        label = int(self.pool.labels[slot])
+        attrs_row = None if self.pool.attrs is None else self.pool.attrs[slot]
+        self.histograms.on_delete(label, attrs_row)
+        self.postings.on_delete(label, slot)
+
+    def range_postings(self, lo: float, hi: float, col: int) -> np.ndarray:
+        """Sorted LIVE ids with attrs[:, col] in [lo, hi] — the range
+        family's posting set (lazy per-epoch re-sort, then binary search)."""
+        if self.pool.attrs is None:
+            return np.empty((0,), np.int32)
+        self.range_index.refresh(
+            self.pool.attrs, self.pool.live_mask(), self.epoch
+        )
+        return self.range_index.ids_for_range(lo, hi, col)
+
+    def check_stats_exact(self) -> None:
+        """Raise if the incremental histograms/postings drifted from the
+        pool's ground truth (tests; cheap n_live check runs every publish)."""
+        live = self.pool.live_mask()
+        self.histograms.check_exact(self.pool.labels, live)
+        truth_ids = np.nonzero(live)[0]
+        truth = {}
+        for i in truth_ids:
+            truth.setdefault(int(self.pool.labels[i]), set()).add(int(i))
+        for lab, ids in truth.items():
+            got = set(self.postings.ids_for_label(lab).tolist())
+            if got != ids:
+                raise AssertionError(f"posting list drifted for label {lab}")
+        n_posted = sum(len(s) for s in truth.values())
+        total = sum(
+            self.postings.count_label(lab)
+            for lab in range(len(self.postings._sets))
+        )
+        if total != n_posted:
+            raise AssertionError("phantom postings outside live label space")
+
     # --- epoch publication ------------------------------------------------
     def snapshot(self) -> IndexSnapshot:
         """Publish (or reuse) the current epoch's immutable device view."""
         if self._snap is None or self._dirty:
             self.epoch += 1
+            # "Exact at snapshot publication": the incremental stats must
+            # agree with the pool's live count — an O(1) tripwire for the
+            # ±1 maintenance (full cross-check: ``check_stats_exact``).
+            if self.histograms.n_live != self.pool.n_live:
+                raise AssertionError(
+                    f"histogram n_live {self.histograms.n_live} drifted from "
+                    f"pool n_live {self.pool.n_live} at epoch {self.epoch}"
+                )
             corpus = Corpus(
                 vectors=jnp.asarray(self.pool.vectors),
                 labels=jnp.asarray(self.pool.labels),
@@ -267,6 +343,7 @@ class StreamingIndex:
         """Tombstone one live slot; its edges stay until consolidation."""
         ok = self.pool.release(int(slot))
         if ok:
+            self.on_slot_released(int(slot))
             self.mark_dirty()
         return ok
 

@@ -1,0 +1,422 @@
+"""Fault-tolerant serving under SLO: the PR 7 harness (EXPERIMENTS.md §Perf PR7).
+
+One Poisson mixed workload with a 5x arrival burst in its middle third and
+a seeded fault schedule (executor errors + latency spikes) is replayed
+twice through the SAME runtime code:
+
+  * baseline — no SLO policy (``slo=None``), no shedding
+    (``shed_expired=False``), no client retries: the pre-PR7 runtime that
+    burns a full search on every request no matter how late it lands;
+  * slo      — the degradation ladder armed, expired requests shed at
+    flush time, client submissions under the jittered-backoff retry
+    policy.
+
+Both replays run in virtual time against identical fault schedules, so
+the goodput comparison isolates exactly what the overload policy buys:
+under the burst the baseline completes everything late (goodput zero for
+those), while the slo runtime sheds what cannot win and serves the rest
+in deadline. A second leg replays a churn stream (upserts/deletes mixed
+in) through a streaming index with stale-epoch injection on top.
+
+Acceptance (ISSUE 7): slo goodput strictly exceeds baseline goodput under
+the burst; ZERO responses complete past their deadline without being
+marked shed/degraded/faulted; ZERO requests lost or left hanging —
+submitted == served + rejected and nothing stays in flight; every
+injected error either retried to success or surfaced as a failed
+Response. Full mode writes BENCH_PR7.json; the committed smoke_reference
+section is what CI's regression gate diffs against.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+from benchmarks.common import write_artifact
+from repro.data.synthetic import make_labeled_corpus
+from repro.graph.index import build_index
+from repro.streaming import StreamingIndex
+from repro.serving import (
+    FaultClock,
+    FaultConfig,
+    FaultSchedule,
+    FaultyExecutor,
+    LocalExecutor,
+    RetryPolicy,
+    SLOConfig,
+    ServingRuntime,
+    StreamingLocalExecutor,
+    VirtualClock,
+    churn_workload,
+    make_tier_ladder,
+    mixed_workload,
+    replay_churn,
+    replay_poisson,
+)
+
+BURST = (1.0 / 3.0, 2.0 / 3.0, 10.0)  # 10x arrivals in the middle third
+
+
+def _smoke() -> bool:
+    return os.environ.get("REPRO_BENCH_SMOKE", "") == "1"
+
+
+def _make_runtime(executor_fn, n_labels, tiers, ladder, max_pending, *,
+                  slo, shed_expired, fault_cfg):
+    base = VirtualClock()
+    fclock = FaultClock(base)
+    schedule = FaultSchedule(fault_cfg)
+    executor = FaultyExecutor(executor_fn(), schedule, clock=fclock)
+    runtime = ServingRuntime(
+        executor,
+        n_labels=n_labels,
+        tiers=tiers,
+        ladder=ladder,
+        families=("label", "range"),
+        max_wait=0.002,
+        max_pending=max_pending,
+        clock=fclock,
+        slo=slo,
+        shed_expired=shed_expired,
+    )
+    runtime.warmup()
+    return runtime, schedule, fclock
+
+
+def _calibrate_rate(executor_fn, items, n_labels, tiers, ladder) -> float:
+    """Measured service throughput (completions/s of virtual time) on a
+    fault-free saturated probe — the burst is sized relative to THIS host,
+    so slow and fast runners both genuinely overload during the burst."""
+    runtime, _, _ = _make_runtime(
+        executor_fn, n_labels, tiers, ladder, len(items) + 1,
+        slo=None, shed_expired=False, fault_cfg=FaultConfig(),
+    )
+    replay_poisson(runtime, items, rate=1e9, seed=3)
+    summary = runtime.telemetry.summary()
+    qps = float(summary.get("qps", 0.0))
+    return max(qps, 1.0)
+
+
+def _invariants(responses, rejected, n_items, runtime):
+    served = [r for r in responses if r is not None]
+    tel = runtime.telemetry.counters
+    late_unmarked = sum(
+        1 for r in served
+        if r.deadline_missed
+        and r.shed_reason is None
+        and not r.degraded
+        and not r.faulted
+        and r.error is None
+    )
+    # Terminal-state accounting straight from telemetry: every admitted
+    # request must end completed (incl. failed), shed, or applied (a
+    # mutation) — anything else was lost inside the runtime.
+    lost = (
+        int(tel["submitted"])
+        - int(tel["completed"])
+        - int(tel["shed_total"])
+        - int(tel["upserts_applied"])
+        - int(tel["deletes_applied"])
+    )
+    return {
+        "served": len(served),
+        "rejected": rejected,
+        "late_unmarked": late_unmarked,
+        "lost_requests": lost,
+        "hung_in_flight": runtime.in_flight,
+        "goodput": int(tel["goodput"]),
+        "shed_total": int(tel["shed_total"]),
+        "failed": int(tel["failed"]),
+        "deadline_missed": int(tel["deadline_missed"]),
+    }
+
+
+def _leg_summary(runtime, schedule, fclock, inv) -> dict:
+    tel = runtime.telemetry.summary()
+    hist = tel["latency_hist"]
+    n_submitted = int(tel.get("submitted", 0))
+    return {
+        **inv,
+        "latency_p50_s": hist["p50"],
+        "latency_p99_s": hist["p99"],
+        "mean_fill_frac": tel.get("mean_fill_frac"),
+        "goodput_qps": tel.get("goodput_qps"),
+        "shed_frac": round(inv["shed_total"] / max(n_submitted, 1), 4),
+        "degraded": int(tel.get("degraded", 0)),
+        "retries": int(tel.get("retries", 0)),
+        "fault_retries": int(tel.get("fault_retries", 0)),
+        "faults_injected": int(tel.get("faults_injected", 0)),
+        "faults_by_kind": dict(schedule.by_kind),
+        "spike_injected_s": round(fclock.injected_s, 4),
+        "slo": (
+            runtime.controller.ladder.snapshot()
+            if runtime.controller.ladder is not None
+            else None
+        ),
+    }
+
+
+def main(out) -> None:
+    smoke = _smoke()
+    n = 2_000 if smoke else 20_000
+    d = 16 if smoke else 32
+    n_labels = 5 if smoke else 10
+    n_requests = 150 if smoke else 480
+    ladder = (4, 16) if smoke else (8, 32, 128)
+    k_cap = 8 if smoke else 16
+    max_pending = 64 if smoke else 192
+
+    corpus = make_labeled_corpus(
+        jax.random.PRNGKey(0), n=n, d=d, n_labels=n_labels
+    )
+    corpus = corpus.replace(
+        attrs=jax.random.uniform(jax.random.PRNGKey(50), (n, 2))
+    )
+    graph = build_index(jax.random.PRNGKey(1), corpus, degree=16, sample_size=512)
+    tiers = make_tier_ladder(
+        k_cap=k_cap,
+        base_ef=max(2 * k_cap, 32),
+        base_iters=32 if smoke else 64,
+        base_n_start=8,
+        growth=4,
+    )
+    items = mixed_workload(
+        7, corpus, n_requests, n_labels,
+        k_choices=(4, 8, k_cap),
+        range_width=(0.1, 0.3),
+    )
+    local = lambda: LocalExecutor(corpus, graph)
+
+    # Host-relative load: the pre-burst rate fills ~70% of MEASURED
+    # capacity, so the 10x burst runs far past saturation on any runner.
+    svc_qps = _calibrate_rate(local, items[: max(24, n_requests // 5)],
+                              n_labels, tiers, ladder)
+    rate = 0.7 * svc_qps
+
+    # Host-relative deadline: a probe replay at the exact rate + burst
+    # (no deadlines, no SLO policy) measures this host's steady-state vs
+    # in-burst latency distributions; the deadline sits between them
+    # (geometric mean, floored at 1.25x and capped at 2x steady p75) — so
+    # steady traffic meets it comfortably while the burst's queueing
+    # provably blows through it, on fast and slow hosts alike.
+    def probe_deadline(executor_fn, probe_items, replay_fn):
+        probe_rt, _, _ = _make_runtime(
+            executor_fn, n_labels, tiers, ladder, len(probe_items) + 1,
+            slo=None, shed_expired=False, fault_cfg=FaultConfig(),
+        )
+        probe_resps, _ = replay_fn(probe_rt, probe_items, rate=rate, seed=11,
+                                   burst=BURST)
+        lat = np.array([
+            np.nan if r is None or r.filled == 0 else r.latency
+            for r in probe_resps
+        ])
+        n3 = len(probe_items) // 3
+        p75_steady = float(np.nanpercentile(lat[:n3], 75))
+        p60_burst = float(np.nanpercentile(lat[n3: 2 * n3], 60))
+        # The deadline sits just above the steady-state distribution and
+        # strictly below the in-burst one: steady traffic meets it, the
+        # burst's queueing provably blows through it. The burst term is
+        # CLAMPED to 2x steady — probe-vs-measured-run wall-clock drift
+        # must never push the deadline up into "nothing ever misses".
+        deadline = max(
+            1.25 * p75_steady,
+            min(float(np.sqrt(p75_steady * p60_burst)), 2.0 * p75_steady),
+        )
+        return deadline, p75_steady, p60_burst
+
+    deadline_s, p75_steady, p60_burst = probe_deadline(
+        local, items, replay_poisson
+    )
+    out(json.dumps({
+        "suite": "slo", "bench": "probe",
+        "calibrated_capacity_qps": round(svc_qps, 1),
+        "rate_qps": round(rate, 1),
+        "deadline_s": round(deadline_s, 5),
+        "probe_p75_steady_s": round(p75_steady, 5),
+        "probe_p60_burst_s": round(p60_burst, 5),
+    }))
+    slo_cfg = SLOConfig(
+        target_latency=deadline_s,
+        queue_high=max_pending // 4,
+        queue_low=max(4, max_pending // 16),
+        hold_up=2,
+        hold_down=4,
+    )
+    fault_cfg = FaultConfig(
+        seed=21, error_rate=0.03, spike_rate=0.03, spike_s=deadline_s / 2
+    )
+
+    legs = {
+        "mixed_baseline": dict(slo=None, shed_expired=False, retry=None),
+        "mixed_slo": dict(
+            slo=slo_cfg, shed_expired=True,
+            retry=RetryPolicy(max_retries=3, base_backoff=0.002),
+        ),
+    }
+    summaries = {}
+    for name, cfg in legs.items():
+        runtime, schedule, fclock = _make_runtime(
+            local, n_labels, tiers, ladder, max_pending,
+            slo=cfg["slo"], shed_expired=cfg["shed_expired"],
+            fault_cfg=fault_cfg,
+        )
+        responses, rejected = replay_poisson(
+            runtime, items, rate=rate, seed=11,
+            deadline_s=deadline_s, retry=cfg["retry"], burst=BURST,
+        )
+        inv = _invariants(responses, rejected, len(items), runtime)
+        summaries[name] = _leg_summary(runtime, schedule, fclock, inv)
+        out(json.dumps({"suite": "slo", "bench": name, **{
+            k: summaries[name][k]
+            for k in ("goodput", "served", "rejected", "shed_total",
+                      "late_unmarked", "lost_requests", "failed",
+                      "latency_p50_s", "latency_p99_s", "faults_injected",
+                      "retries")
+        }}))
+
+    # --- churn leg: streaming index + stale-epoch injection ---------------
+    churn_items = churn_workload(
+        13, corpus, n_requests, n_labels,
+        mutation_frac=0.25, k_choices=(4, 8, k_cap),
+        range_width=(0.1, 0.3),
+    )
+    capacity = n + n_requests
+    streaming = lambda: StreamingLocalExecutor(
+        StreamingIndex.from_static(corpus, graph, capacity=capacity),
+        consolidate_after=64,
+    )
+    # The streaming executor has its own service profile (mutation
+    # dispatches, consolidation pauses), so the churn leg gets its own
+    # probe-derived deadline — reusing the static-executor deadline makes
+    # the predictor mass-shed queries that would in fact have made it.
+    churn_deadline_s, churn_p75, churn_p60b = probe_deadline(
+        streaming, churn_items, replay_churn
+    )
+    out(json.dumps({
+        "suite": "slo", "bench": "churn_probe",
+        "deadline_s": round(churn_deadline_s, 5),
+        "probe_p75_steady_s": round(churn_p75, 5),
+        "probe_p60_burst_s": round(churn_p60b, 5),
+    }))
+    churn_slo_cfg = SLOConfig(
+        target_latency=churn_deadline_s,
+        queue_high=max_pending // 4,
+        queue_low=max(4, max_pending // 16),
+        hold_up=2,
+        hold_down=4,
+    )
+    churn_faults = FaultConfig(
+        seed=22, error_rate=0.03, spike_rate=0.03,
+        spike_s=churn_deadline_s / 2, stale_epoch_rate=0.25,
+    )
+    runtime, schedule, fclock = _make_runtime(
+        streaming, n_labels, tiers, ladder, max_pending,
+        slo=churn_slo_cfg, shed_expired=True, fault_cfg=churn_faults,
+    )
+    responses, rejected = replay_churn(
+        runtime, churn_items, rate=rate, seed=17,
+        deadline_s=churn_deadline_s, retry=RetryPolicy(max_retries=3),
+        burst=BURST,
+    )
+    inv = _invariants(responses, rejected, len(churn_items), runtime)
+    summaries["churn_slo"] = _leg_summary(runtime, schedule, fclock, inv)
+    summaries["churn_slo"]["stale_epochs_injected"] = schedule.by_kind[
+        "stale_epoch"
+    ]
+    out(json.dumps({"suite": "slo", "bench": "churn_slo", **{
+        k: summaries["churn_slo"][k]
+        for k in ("goodput", "served", "shed_total", "late_unmarked",
+                  "lost_requests", "failed", "stale_epochs_injected")
+    }}))
+
+    base, slo = summaries["mixed_baseline"], summaries["mixed_slo"]
+    goodput_ratio = slo["goodput"] / max(base["goodput"], 1)
+    acceptance = {
+        "suite": "slo",
+        "bench": "acceptance",
+        "goodput_baseline": base["goodput"],
+        "goodput_slo": slo["goodput"],
+        "goodput_ratio": round(goodput_ratio, 3),
+        # Invariants over the SLO-armed legs (the baseline leg is SUPPOSED
+        # to complete late unmarked — that is what it is there to show).
+        "late_unmarked": slo["late_unmarked"]
+        + summaries["churn_slo"]["late_unmarked"],
+        "lost_requests": slo["lost_requests"]
+        + base["lost_requests"]
+        + summaries["churn_slo"]["lost_requests"],
+        "hung_in_flight": slo["hung_in_flight"]
+        + base["hung_in_flight"]
+        + summaries["churn_slo"]["hung_in_flight"],
+        "faults_injected": slo["faults_injected"]
+        + base["faults_injected"]
+        + summaries["churn_slo"]["faults_injected"],
+        "shed_frac_slo": slo["shed_frac"],
+        "goodput_ok": goodput_ratio > 1.0,
+        "late_ok": slo["late_unmarked"] == 0
+        and summaries["churn_slo"]["late_unmarked"] == 0,
+        "accounting_ok": True,
+    }
+    acceptance["accounting_ok"] = (
+        acceptance["lost_requests"] == 0 and acceptance["hung_in_flight"] == 0
+    )
+    out(json.dumps(acceptance))
+    checks = ("goodput_ok", "late_ok", "accounting_ok")
+    if not all(acceptance[c] for c in checks):
+        raise AssertionError(f"slo acceptance failed: {acceptance}")
+
+    if not smoke:
+        path = os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            "BENCH_PR7.json",
+        )
+        meta = {
+            "issue": "PR7 fault-tolerant serving under SLO (deadline "
+                     "enforcement, load shedding, degradation ladder, "
+                     "fault injection)",
+            "host": "single-core CPU container (wall-clock execution cost "
+                    "replayed in virtual time; rate calibrated to measured "
+                    "host throughput)",
+            "workload": {
+                "n": n, "d": d, "n_labels": n_labels,
+                "requests": n_requests,
+                "deadline_s": round(deadline_s, 5),
+                "churn_deadline_s": round(churn_deadline_s, 5),
+                "probe_p75_steady_s": round(p75_steady, 5),
+                "probe_p60_burst_s": round(p60_burst, 5),
+                "burst": list(BURST),
+                "rate_frac_of_capacity": 0.7,
+                "calibrated_capacity_qps": round(svc_qps, 1),
+                "faults": dataclass_dict(fault_cfg),
+                "churn_faults": dataclass_dict(churn_faults),
+            },
+            "results": summaries,
+            "acceptance": acceptance,
+            "notes": [
+                "mixed_baseline replays the identical stream + fault "
+                "schedule with slo=None, shed_expired=False, no client "
+                "retries — the pre-PR7 runtime that burns a search on "
+                "every already-late request",
+                "goodput counts responses served in-deadline with filled "
+                "> 0; a fast shed and a late fill both score zero",
+                "late_unmarked counts completions past deadline carrying "
+                "no shed/degraded/faulted/error mark — the acceptance "
+                "invariant holds it at zero on every SLO-armed leg",
+                "the churn leg injects stale-epoch publication on top: "
+                "mutations apply but the snapshot swap is delayed one "
+                "flush; queries honestly report the old epoch",
+            ],
+        }
+        write_artifact(path, meta, preserve=("smoke_reference",))
+        out(json.dumps({"suite": "slo", "bench": "artifact", "wrote": path}))
+
+
+def dataclass_dict(cfg) -> dict:
+    import dataclasses
+
+    return dataclasses.asdict(cfg)
+
+
+if __name__ == "__main__":
+    main(print)

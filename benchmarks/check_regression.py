@@ -166,6 +166,52 @@ GATES = (
         direction="lower",
         tolerance=0.5,  # wall-clock ratio: wide, trips on routing bloat
     ),
+    # --- slo (PR7): fault tolerance + deadline discipline ----------------
+    Gate(
+        name="slo unmarked late completions",
+        suite="slo", bench="acceptance",
+        metric="late_unmarked",
+        baseline_file="BENCH_PR7.json",
+        baseline_path=(),
+        direction="lower",
+        absolute=0.0,  # a silent deadline miss is a correctness regression
+    ),
+    Gate(
+        name="slo lost requests (accounting)",
+        suite="slo", bench="acceptance",
+        metric="lost_requests",
+        baseline_file="BENCH_PR7.json",
+        baseline_path=(),
+        direction="lower",
+        absolute=0.0,  # every submit must terminate somewhere observable
+    ),
+    Gate(
+        name="slo hung in-flight requests",
+        suite="slo", bench="acceptance",
+        metric="hung_in_flight",
+        baseline_file="BENCH_PR7.json",
+        baseline_path=(),
+        direction="lower",
+        absolute=0.0,  # injected faults may fail requests, never hang them
+    ),
+    Gate(
+        name="slo goodput: degraded runtime beats baseline under burst",
+        suite="slo", bench="acceptance",
+        metric="goodput_ratio",
+        baseline_file="BENCH_PR7.json",
+        baseline_path=(),
+        direction="higher",
+        absolute=1.0,  # the tentpole claim: shedding/degrading wins goodput
+    ),
+    Gate(
+        name="slo goodput floor vs committed reference",
+        suite="slo", bench="acceptance",
+        metric="goodput_slo",
+        baseline_file="BENCH_PR7.json",
+        baseline_path=("smoke_reference", "goodput_slo"),
+        direction="higher",
+        tolerance=0.5,  # load-dependent count: wide, trips on a collapse
+    ),
 )
 
 

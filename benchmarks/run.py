@@ -18,7 +18,7 @@ def main() -> None:
         "--only",
         default="",
         help="comma list: pipeline,constraints,alter_ratio,clusters,mnist,"
-        "kernels,beam,fused,serving,streaming,hybrid",
+        "kernels,beam,fused,serving,streaming,hybrid,slo",
     )
     ap.add_argument(
         "--smoke",
@@ -55,6 +55,7 @@ def main() -> None:
         bench_mnist_like,
         bench_pipeline,
         bench_serving,
+        bench_slo,
         bench_streaming,
     )
 
@@ -90,6 +91,12 @@ def main() -> None:
         # pure graph at <= 1% selectivity at equal recall, bit-exact ids
         # vs the dispatched strategy; full mode writes BENCH_PR6.json.
         "hybrid": bench_hybrid.main,
+        # bench_slo replays a burst + fault-schedule workload through the
+        # fault-tolerant runtime vs the pre-PR7 no-shedding baseline and
+        # asserts the acceptance row (slo goodput > baseline under the
+        # burst, zero unmarked late completions, zero lost/hung requests);
+        # full mode writes BENCH_PR7.json.
+        "slo": bench_slo.main,
     }
     print("name,us_per_call,derived")
 

@@ -188,16 +188,21 @@ class StrategyRouter:
             return False
         return self._hot.get(label, 0) >= self.config.overlay_hot_after
 
-    def route(self, family: str, operand) -> RouteDecision:
+    def route(self, family: str, operand, prefer_cheap: bool = False) -> RouteDecision:
+        """Route one request. ``prefer_cheap`` is the serving layer's
+        overload override (DESIGN.md §10): the degradation ladder asks for
+        the host-side posting/overlay executors ahead of the compiled
+        graph walk wherever their applicability gates pass — the lattice's
+        quality ordering yields to keeping the burst off the batcher."""
         label = (
             single_label_of_words(operand) if family == "label" else None
         )
         if label is not None:
             self._hot[label] = self._hot.get(label, 0) + 1
         if family == "label":
-            plan_key = (family, np.asarray(operand, np.uint32).tobytes())
+            plan_key = (family, prefer_cheap, np.asarray(operand, np.uint32).tobytes())
         elif family == "range":
-            plan_key = (family, tuple(operand))
+            plan_key = (family, prefer_cheap, tuple(operand))
         else:
             plan_key = None
         validity = self._validity()
@@ -212,7 +217,7 @@ class StrategyRouter:
                 and hit[1] == self._is_hot(label)
             ):
                 return hit[2]
-        decision = self._route_uncached(family, operand, label)
+        decision = self._route_uncached(family, operand, label, prefer_cheap)
         if plan_key is not None:
             if len(self._plans) >= 4096:  # distinct range operands can grow
                 self._plans.clear()
@@ -222,7 +227,11 @@ class StrategyRouter:
         return decision
 
     def _route_uncached(
-        self, family: str, operand, label: Optional[int]
+        self,
+        family: str,
+        operand,
+        label: Optional[int],
+        prefer_cheap: bool = False,
     ) -> RouteDecision:
         est, source = self.estimator.estimate_operand(family, operand)
 
@@ -231,6 +240,18 @@ class StrategyRouter:
 
         bucket = self.bucket_of(est)
         row = self.config.lattice[bucket]
+        if prefer_cheap:
+            # Overload override: cheapest-executor-first, applicability
+            # gates (posting-set cap, overlay hotness) still apply — a
+            # huge posting set is NOT cheap and still walks the graph.
+            # Observed-performance retuning is skipped: its EMAs rank
+            # normal-load latency, not burst survival.
+            row = (POSTING, OVERLAY, GRAPH)
+            count = self._posting_count(family, operand)
+            for cand in row:
+                if self._applicable(cand, family, operand, label, count):
+                    return RouteDecision(cand, float(est), bucket, source, label)
+            return RouteDecision(GRAPH, float(est), bucket, source, label)
         # one posting-count lookup feeds every gate check below
         count = (
             self._posting_count(family, operand)

@@ -103,6 +103,37 @@ def build_runtime(args, corpus, clock):
             dataclasses.replace(t, approx=args.approx, fuse_expand=args.fuse)
             for t in tiers
         )
+    if args.inject_faults > 0:
+        from repro.serving import (
+            FaultClock,
+            FaultConfig,
+            FaultSchedule,
+            FaultyExecutor,
+        )
+
+        fault_clock = FaultClock(clock)
+        schedule = FaultSchedule(FaultConfig(
+            seed=21,
+            error_rate=args.inject_faults,
+            spike_rate=args.inject_faults,
+            spike_s=(args.deadline_ms / 2000.0) if args.deadline_ms > 0
+            else 0.05,
+            stale_epoch_rate=args.inject_faults if args.churn > 0 else 0.0,
+        ))
+        executor = FaultyExecutor(executor, schedule, fault_clock)
+        clock = fault_clock
+
+    slo_cfg = None
+    if args.slo:
+        from repro.serving import SLOConfig
+
+        slo_cfg = SLOConfig(
+            target_latency=(args.deadline_ms / 1000.0)
+            if args.deadline_ms > 0 else 0.05,
+            queue_high=max(8, args.max_pending // 4),
+            queue_low=max(4, args.max_pending // 16),
+        )
+
     ladder = tuple(int(b) for b in args.ladder.split(","))
     runtime = ServingRuntime(
         executor,
@@ -113,6 +144,8 @@ def build_runtime(args, corpus, clock):
         max_wait=args.max_wait,
         max_pending=args.max_pending,
         clock=clock,
+        slo=slo_cfg,
+        shed_expired=args.slo,
     )
     if args.hybrid:
         if args.distributed:
@@ -168,6 +201,26 @@ def main():
         "brute-force posting-set scan, or a cached label-subgraph overlay",
     )
     ap.add_argument(
+        "--slo", action="store_true",
+        help="fault-tolerant serving under SLO (DESIGN.md §10): expired "
+        "requests are shed at flush time instead of served late, and a "
+        "hysteretic degradation ladder caps tiers / prefers cheap "
+        "strategies / predictively sheds as overload deepens",
+    )
+    ap.add_argument(
+        "--deadline-ms", type=float, default=0.0,
+        help="per-query deadline in virtual-time milliseconds (0 = no "
+        "deadline); with --slo, expired requests are shed with a pollable "
+        "shed_reason instead of completing late",
+    )
+    ap.add_argument(
+        "--inject-faults", type=float, default=0.0,
+        help="seeded fault-injection rate (per compiled dispatch: this "
+        "probability each of an executor error and a latency spike; with "
+        "--churn also a stale-epoch rate per refresh). Exercises the "
+        "retry-within-budget and failed-Response recovery paths",
+    )
+    ap.add_argument(
         "--fuse", default="auto", choices=("auto", "on", "off"),
         help="fused candidate pipeline (kernels/fused_expand; 'on' forces "
         "the one-pass gather+distance+constraint+visited kernel for either "
@@ -191,6 +244,12 @@ def main():
 
     k_choices = tuple(sorted({min(4, args.k_cap), min(8, args.k_cap),
                               args.k_cap}))
+    deadline_s = args.deadline_ms / 1000.0 if args.deadline_ms > 0 else None
+    retry = None
+    if args.slo:
+        from repro.serving import RetryPolicy
+
+        retry = RetryPolicy()  # backpressure rejections retry with backoff
     if args.churn > 0:
         from repro.serving import churn_workload, replay_churn
 
@@ -199,14 +258,16 @@ def main():
             mutation_frac=args.churn, k_choices=k_choices,
         )
         responses, rejected = replay_churn(
-            runtime, items, rate=args.rate, seed=11
+            runtime, items, rate=args.rate, seed=11,
+            deadline_s=deadline_s, retry=retry,
         )
     else:
         items = mixed_workload(
             7, corpus, args.requests, args.labels, k_choices=k_choices,
         )
         responses, rejected = replay_poisson(
-            runtime, items, rate=args.rate, seed=11
+            runtime, items, rate=args.rate, seed=11,
+            deadline_s=deadline_s, retry=retry,
         )
 
     report = runtime.report()
@@ -222,6 +283,20 @@ def main():
         f"| cache hit rate {report['cache']['hit_rate']} "
         f"(single-core host; see EXPERIMENTS.md §Roofline for TPU projection)"
     )
+    if args.slo or args.inject_faults > 0:
+        counters = report["telemetry"]  # summary() flattens the counters
+        goodput = sum(
+            1 for r in served
+            if r.ok and not r.deadline_missed and r.filled > 0
+        )
+        print(
+            f"slo: goodput {goodput} | shed {counters.get('shed_total', 0)} "
+            f"(expired {counters.get('shed_expired', 0)}, overload "
+            f"{counters.get('shed_overload', 0)}) | "
+            f"failed {counters.get('failed', 0)} | "
+            f"fault retries {counters.get('fault_retries', 0)} | "
+            f"degradation level {runtime.controller.degradation_level}"
+        )
 
 
 if __name__ == "__main__":

@@ -1,7 +1,10 @@
 # Online serving runtime over the constrained-search engine (DESIGN.md §7):
 # dynamic batcher (bucket-ladder shapes), shape-bucketed compile cache with a
 # hard trace budget, adaptive tier controller with under-fill escalation, and
-# the submit/poll runtime front with backpressure + telemetry.
+# the submit/poll runtime front with backpressure + telemetry. PR 7 layers
+# fault tolerance on top (DESIGN.md §10): deadline enforcement + load
+# shedding, the SLO degradation ladder, client retry policy, and seeded
+# fault injection.
 from repro.serving.batcher import BATCH_LADDER, DynamicBatcher, MicroBatch, bucket_for
 from repro.serving.cache import CompileCache, TraceBudgetError
 from repro.serving.controller import (
@@ -9,6 +12,16 @@ from repro.serving.controller import (
     ControllerConfig,
     make_tier_ladder,
 )
+from repro.serving.faults import (
+    ExecutorFault,
+    FaultClock,
+    FaultConfig,
+    FaultSchedule,
+    FaultyExecutor,
+    InjectedFault,
+)
+from repro.serving.retry import RetryPolicy, submit_with_retry
+from repro.serving.slo import DegradationLadder, SLOConfig
 from repro.serving.runtime import (
     DistributedExecutor,
     EpochRangeView,
@@ -19,7 +32,7 @@ from repro.serving.runtime import (
     assemble_queries,
     make_serving_router,
 )
-from repro.serving.telemetry import Telemetry, percentile
+from repro.serving.telemetry import LatencyHistogram, Telemetry, percentile
 from repro.serving.types import (
     MUTATION_FAMILIES,
     AdmissionError,
@@ -28,6 +41,8 @@ from repro.serving.types import (
     Response,
     UpsertRequest,
     VirtualClock,
+    deadline_due,
+    deadline_missed,
     wall_clock,
 )
 from repro.serving.workload import (
@@ -35,6 +50,7 @@ from repro.serving.workload import (
     churn_workload,
     label_words_row,
     mixed_workload,
+    poisson_arrivals,
     replay_churn,
     replay_poisson,
 )
@@ -45,15 +61,25 @@ __all__ = [
     "BATCH_LADDER",
     "CompileCache",
     "ControllerConfig",
+    "DegradationLadder",
     "DeleteRequest",
     "DistributedExecutor",
     "DynamicBatcher",
     "EpochRangeView",
+    "ExecutorFault",
+    "FaultClock",
+    "FaultConfig",
+    "FaultSchedule",
+    "FaultyExecutor",
+    "InjectedFault",
+    "LatencyHistogram",
     "LocalExecutor",
     "MUTATION_FAMILIES",
     "MicroBatch",
     "Request",
     "Response",
+    "RetryPolicy",
+    "SLOConfig",
     "ServingRuntime",
     "StreamingLocalExecutor",
     "Telemetry",
@@ -65,12 +91,16 @@ __all__ = [
     "assemble_queries",
     "bucket_for",
     "churn_workload",
+    "deadline_due",
+    "deadline_missed",
     "label_words_row",
     "make_serving_router",
     "make_tier_ladder",
     "mixed_workload",
     "percentile",
+    "poisson_arrivals",
     "replay_churn",
     "replay_poisson",
+    "submit_with_retry",
     "wall_clock",
 ]

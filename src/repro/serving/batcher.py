@@ -27,7 +27,7 @@ import dataclasses
 from collections import deque
 from typing import Deque, Dict, List, Tuple
 
-from repro.serving.types import Request
+from repro.serving.types import Request, deadline_due
 
 BATCH_LADDER = (8, 32, 128)
 
@@ -86,7 +86,9 @@ class DynamicBatcher:
         oldest = min(r.enqueue_t for r in reqs)
         if now - oldest >= self.max_wait:
             return True
-        return any(r.deadline is not None and r.deadline <= now for r in reqs)
+        # Shared boundary semantics (types.deadline_due): at now ==
+        # deadline the request ships — its last meetable instant.
+        return any(deadline_due(r.deadline, now) for r in reqs)
 
     def _drain_group(self, reqs: Deque[Request]) -> List[Tuple[int, List[Request]]]:
         """Greedy ladder packing: largest fully-real buckets first, pad only

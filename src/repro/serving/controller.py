@@ -16,6 +16,13 @@ the common case. The controller keeps a small declared ladder of
 
 Both knobs only ever select *within* the declared ladder, which is what
 keeps the compile-cache trace budget a static quantity (cache.py).
+
+With an ``SLOConfig`` the controller additionally runs the degradation
+ladder (slo.py, DESIGN.md §10): queue-depth + observed-latency EMAs feed
+a hysteretic overload level, and the two request-policy entry points that
+already live here — ``tier_for`` (admission tier) and ``escalate``
+(retry-tier re-runs) — consult it, so overload protection needs no new
+wiring in the runtime's hot path.
 """
 from __future__ import annotations
 
@@ -23,6 +30,7 @@ import dataclasses
 from typing import Dict, Optional, Tuple
 
 from repro.core.types import SearchParams
+from repro.serving.slo import DegradationLadder, SLOConfig
 from repro.serving.types import Request
 
 
@@ -108,6 +116,7 @@ class AdaptiveController:
         self,
         tiers: Tuple[SearchParams, ...],
         config: ControllerConfig = ControllerConfig(),
+        slo: Optional[SLOConfig] = None,
     ):
         if not tiers:
             raise ValueError("need at least one SearchParams tier")
@@ -121,6 +130,9 @@ class AdaptiveController:
         # bumped on every record_strategy; the router's plan cache keys
         # decision validity on it so retuning invalidates cached plans
         self.generation = 0
+        # Degradation ladder (DESIGN.md §10): None = no overload policy,
+        # bit-identical pre-PR7 behaviour.
+        self.ladder = DegradationLadder(slo) if slo is not None else None
 
     @property
     def max_tier(self) -> int:
@@ -133,12 +145,44 @@ class AdaptiveController:
     def params_for(self, tier: int) -> SearchParams:
         return self.tiers[tier]
 
+    # --- overload policy (DESIGN.md §10) ----------------------------------
+    @property
+    def degradation_level(self) -> int:
+        return 0 if self.ladder is None else self.ladder.level
+
+    def observe_load(self, queue_depth: int) -> int:
+        """One runtime-step load sample into the ladder (no-op without an
+        SLO config); returns the current degradation level."""
+        if self.ladder is None:
+            return 0
+        return self.ladder.observe_load(queue_depth)
+
+    def observe_latency(self, latency: float) -> None:
+        """One completed response's latency into the ladder's EMA."""
+        if self.ladder is not None:
+            self.ladder.observe_latency(latency)
+
+    def observe_service(self, duration: float) -> None:
+        """One dispatch's measured execution duration into the ladder's
+        service-time EMA (the predictive-shedding estimate)."""
+        if self.ladder is not None:
+            self.ladder.observe_service(duration)
+
     def tier_for(self, family: str) -> int:
-        """Default tier for a newly admitted request of this family."""
+        """Default tier for a newly admitted request of this family. While
+        the ladder is degraded, every admission starts at the base tier —
+        the family default is an *up*-tuning the overload cannot afford."""
+        if self.ladder is not None and self.ladder.force_base_tier:
+            return 0
         return self._families.setdefault(family, _FamilyState()).default_tier
 
     def escalate(self, req: Request) -> Optional[int]:
-        """Next tier for an under-filled request, or None when maxed out."""
+        """Next tier for an under-filled request, or None when maxed out —
+        or when the degradation ladder has capped retry-tier escalations
+        (a retry re-runs the query at a multiple of the budget; under
+        overload that multiple is exactly what must not be spent)."""
+        if self.ladder is not None and self.ladder.cap_escalations:
+            return None
         return req.tier + 1 if req.tier < self.max_tier else None
 
     def record(
@@ -242,7 +286,7 @@ class AdaptiveController:
         st.preferred = st.ranking[0]
 
     def snapshot(self) -> dict:
-        out = {
+        out: dict = {
             fam: {
                 "default_tier": st.default_tier,
                 "fill_ema": None if st.fill_ema is None else round(st.fill_ema, 4),
@@ -273,4 +317,6 @@ class AdaptiveController:
                 }
                 for key, st in self._strategies.items()
             }
+        if self.ladder is not None:
+            out["slo"] = self.ladder.snapshot()
         return out

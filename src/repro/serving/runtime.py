@@ -22,8 +22,7 @@ per (bucket, family, tier) key:
 """
 from __future__ import annotations
 
-import time
-from typing import Callable, Dict, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +46,8 @@ from repro.core.types import Corpus, GraphIndex, SearchParams, SearchResult
 from repro.serving.batcher import BATCH_LADDER, DynamicBatcher, MicroBatch
 from repro.serving.cache import CompileCache
 from repro.serving.controller import AdaptiveController, make_tier_ladder
+from repro.serving.faults import ExecutorFault
+from repro.serving.slo import SLOConfig
 from repro.serving.telemetry import Telemetry
 from repro.serving.types import (
     MUTATION_FAMILIES,
@@ -55,6 +56,7 @@ from repro.serving.types import (
     Request,
     Response,
     UpsertRequest,
+    deadline_missed,
     wall_clock,
 )
 
@@ -353,11 +355,28 @@ class ServingRuntime:
         clock: Optional[Callable[[], float]] = None,
         router: Optional[StrategyRouter] = None,
         max_overlays: int = 8,
+        slo: Optional[SLOConfig] = None,
+        shed_expired: bool = True,
+        max_fault_retries: int = 2,
     ):
         self.executor = executor
         self.n_labels = int(n_labels)
         tiers = tuple(tiers) if tiers is not None else make_tier_ladder()
-        self.controller = controller or AdaptiveController(tiers)
+        self.controller = controller or AdaptiveController(tiers, slo=slo)
+        if slo is not None and self.controller.ladder is None:
+            # A caller-supplied controller gains the ladder the runtime
+            # was asked for (the ladder lives on the controller so
+            # tier_for/escalate consult it without extra plumbing).
+            from repro.serving.slo import DegradationLadder
+
+            self.controller.ladder = DegradationLadder(slo)
+        # Fault-tolerance policy (DESIGN.md §10): shed already-expired
+        # requests at flush time instead of burning a search they cannot
+        # use (shed_expired=False reproduces the pre-PR7 burn for A/B
+        # benchmarking), and re-queue ExecutorFault-hit requests at most
+        # this many times before surfacing a failed Response.
+        self.shed_expired = bool(shed_expired)
+        self.max_fault_retries = int(max_fault_retries)
         self.families = tuple(families)
         self.ladder = tuple(ladder)
         self.max_pending = int(max_pending)
@@ -398,6 +417,11 @@ class ServingRuntime:
         number of closures compiled."""
         dim = self.executor.dim
         n_words = (self.n_labels + WORD_BITS - 1) // WORD_BITS
+        # A fault-injecting executor is disarmed for the dummy dispatches:
+        # warmup must neither fault nor consume the seeded schedule's draws.
+        was_armed = getattr(self.executor, "armed", None)
+        if was_armed is not None:
+            self.executor.armed = False
         for family in self.families:
             for tier in range(len(self.controller.tiers)):
                 for bucket in self.ladder:
@@ -414,6 +438,8 @@ class ServingRuntime:
                             col=jnp.int32(0),
                         )
                     jax.block_until_ready(fn(queries, cons).dists)
+        if was_armed is not None:
+            self.executor.armed = was_armed
         compiled = self.cache.trace_count
         self.cache.reset_counters()
         return compiled
@@ -441,6 +467,8 @@ class ServingRuntime:
             raise ValueError(f"family {family!r} not served (have {self.families})")
         if k > self.controller.k_cap:
             raise ValueError(f"k={k} exceeds the ladder's k cap {self.controller.k_cap}")
+        ladder = self.controller.ladder
+        degraded = ladder is not None and ladder.level > 0
         req = Request(
             req_id=self._next_id,
             query=np.asarray(query, dtype=np.float32),
@@ -449,10 +477,16 @@ class ServingRuntime:
             operand=operand,
             deadline=deadline,
             arrival_t=self.clock(),
+            # tier_for consults the degradation ladder: base tier under
+            # overload, the family default otherwise.
             tier=self.controller.tier_for(family),
+            degraded=degraded,
         )
         if self.router is not None:
-            decision = self.router.route(family, operand)
+            prefer_cheap = ladder is not None and ladder.prefer_cheap
+            decision = self.router.route(
+                family, operand, prefer_cheap=prefer_cheap
+            )
             req.strategy = decision.strategy
             req.est_selectivity = decision.est_selectivity
             req.sel_bucket = decision.bucket
@@ -546,7 +580,15 @@ class ServingRuntime:
         the flush runs against that one snapshot. Queries already executing
         hold the snapshot they were dispatched with; nothing observes a
         half-applied flush.
+
+        Fault-tolerance order of operations (DESIGN.md §10): the load
+        sample feeds the degradation ladder BEFORE this flush executes
+        (the level must reflect the queue the flush is about to face),
+        query microbatches run earliest-deadline-first, and each batch is
+        stripped of already-expired (and, at ladder level 3, provably
+        unmeetable) requests before any compute is spent on it.
         """
+        self.controller.observe_load(self.batcher.pending_count())
         done = 0
         batches = self.batcher.flush(self.clock(), force=force)
         mutations = [mb for mb in batches if mb.family in MUTATION_FAMILIES]
@@ -557,6 +599,7 @@ class ServingRuntime:
         if mutations:
             epoch = self.executor.refresh()  # the atomic epoch swap
             self.telemetry.on_epoch_swap()
+            self._drain_executor_faults()  # a stale-epoch injection counts
             if self.router is not None:
                 # Overlay hotness re-accumulates per epoch; the overlay
                 # cache itself invalidates on epoch mismatch at get().
@@ -566,9 +609,87 @@ class ServingRuntime:
                 # with Response.epoch >= this one see its effect.
                 resp.epoch = epoch
         done += len(applied)
+        # Earliest-deadline-first across the flush's query batches: when
+        # the flush holds more work than the deadline budget, the batches
+        # that can still win execute before the ones that already lost.
+        queries.sort(key=self._batch_deadline)
         for mb in queries:
-            done += self._execute(mb)
+            done += self._shed_due(mb)
+            if mb.requests:
+                done += self._execute(mb)
         return done
+
+    @staticmethod
+    def _batch_deadline(mb: MicroBatch) -> float:
+        return min(
+            (r.deadline for r in mb.requests if r.deadline is not None),
+            default=float("inf"),
+        )
+
+    def _shed_due(self, mb: MicroBatch) -> int:
+        """Drop this batch's hopeless requests before dispatch: expired
+        ones always (``shed_expired``), predicted-unmeetable ones at
+        ladder level 3. Returns the number shed; ``mb.requests`` keeps
+        only the live ones (the bucket stays — padding just grows)."""
+        if not self.shed_expired:
+            return 0
+        now = self.clock()
+        ladder = self.controller.ladder
+        predict = ladder is not None and ladder.shed_predicted
+        live: List[Request] = []
+        shed = 0
+        for req in mb.requests:
+            if deadline_missed(req.deadline, now):
+                self._shed(req, "expired", now)
+                shed += 1
+            elif predict and ladder.predicted_miss(req.deadline, now):
+                self._shed(req, "overload", now)
+                shed += 1
+            else:
+                live.append(req)
+        mb.requests = live
+        return shed
+
+    def _shed(self, req: Request, reason: str, now: float) -> None:
+        """Terminal shed: a pollable empty Response with ``shed_reason``
+        set — the request is accounted, never silently dropped, and never
+        burns a search."""
+        self._bound_unpolled()
+        resp = Response(
+            req_id=req.req_id,
+            ids=np.full((req.k,), -1, np.int32),
+            dists=np.full((req.k,), np.inf, np.float32),
+            k=req.k,
+            filled=0,
+            tier=req.tier,
+            escalations=req.escalations,
+            fill_history=req.fill_history + (0,),
+            arrival_t=req.arrival_t,
+            complete_t=now,
+            deadline_missed=deadline_missed(req.deadline, now),
+            epoch=getattr(self.executor, "epoch", None),
+            strategy=req.strategy,
+            est_selectivity=req.est_selectivity,
+            shed_reason=reason,
+            degraded=req.degraded,
+        )
+        self._responses[req.req_id] = resp
+        self._in_flight -= 1
+        self.telemetry.on_shed(resp)
+
+    def _drain_executor_faults(self) -> List[str]:
+        """Collect fault kinds the (possibly fault-injecting) executor
+        observed since the last drain; counts them into telemetry."""
+        pop = getattr(self.executor, "pop_faults", None)
+        kinds = pop() if pop is not None else []
+        for kind in kinds:
+            self.telemetry.on_fault(kind)
+        return kinds
+
+    def _bound_unpolled(self) -> None:
+        while len(self._responses) >= self._max_unpolled:
+            self._responses.pop(next(iter(self._responses)))
+            self.telemetry.counters["responses_evicted"] += 1
 
     def drain(self) -> int:
         """Run until nothing is in flight (escalations included)."""
@@ -587,18 +708,16 @@ class ServingRuntime:
         measured wall time still advances a virtual-time replay so churn
         costs land in the same timeline as query execution.
         """
-        t0 = time.perf_counter()
+        t0 = wall_clock()
         results = self.executor.apply_mutations(mb.requests)
-        dt = time.perf_counter() - t0
+        dt = wall_clock() - t0
         if hasattr(self.clock, "advance"):
             self.clock.advance(dt)
         now = self.clock()
         self.telemetry.on_mutation(mb.family, len(mb.requests))
         responses = []
         for req, (ok, slot) in zip(mb.requests, results):
-            while len(self._responses) >= self._max_unpolled:
-                self._responses.pop(next(iter(self._responses)))
-                self.telemetry.counters["responses_evicted"] += 1
+            self._bound_unpolled()
             resp = Response(
                 req_id=req.req_id,
                 ids=np.asarray([slot], np.int32),
@@ -610,7 +729,7 @@ class ServingRuntime:
                 fill_history=(int(ok),),
                 arrival_t=req.arrival_t,
                 complete_t=now,
-                deadline_missed=req.deadline is not None and now > req.deadline,
+                deadline_missed=deadline_missed(req.deadline, now),
             )
             self._responses[req.req_id] = resp
             responses.append(resp)
@@ -683,31 +802,49 @@ class ServingRuntime:
         # virtual-time replay charges all of it to the timeline — this is
         # exactly the per-request overhead the batch=1 baseline cannot
         # amortize.
-        t0 = time.perf_counter()
-        queries = assemble_queries(mb, self.executor.dim)
-        constraint = assemble_constraint(mb)
-        strategy = mb.strategy
-        res = None
-        if strategy == "posting":
-            res = self._run_posting(mb, queries, constraint)
-        elif strategy == "overlay":
-            res = self._run_overlay(mb, queries)
-        if res is None:
-            # graph strategy, or a routed strategy that turned out
-            # inapplicable at dispatch time (e.g. the label's posting set
-            # shrank below the overlay minimum under churn): the full
-            # traversal is the universal fallback.
-            strategy = "graph"
-            fn = self.cache.get((mb.bucket, mb.family, mb.tier))
-            res = fn(queries, constraint)
-        jax.block_until_ready(res.dists)
+        t0 = wall_clock()
+        try:
+            queries = assemble_queries(mb, self.executor.dim)
+            constraint = assemble_constraint(mb)
+            strategy = mb.strategy
+            res = None
+            if strategy == "posting":
+                res = self._run_posting(mb, queries, constraint)
+            elif strategy == "overlay":
+                res = self._run_overlay(mb, queries)
+            if res is None:
+                # graph strategy, or a routed strategy that turned out
+                # inapplicable at dispatch time (e.g. the label's posting
+                # set shrank below the overlay minimum under churn): the
+                # full traversal is the universal fallback.
+                strategy = "graph"
+                fn = self.cache.get((mb.bucket, mb.family, mb.tier))
+                res = fn(queries, constraint)
+            jax.block_until_ready(res.dists)
+        except ExecutorFault as fault:
+            # The recovery contract: a faulted dispatch costs its wall
+            # time, its requests are retried through the batcher within
+            # their budget, and budget-exhausted ones surface as FAILED
+            # responses — a fault never hangs or loses a request.
+            dt = wall_clock() - t0
+            if hasattr(self.clock, "advance"):
+                self.clock.advance(dt)
+            return self._recover_faulted(mb, fault)
         ids = np.asarray(res.ids)
         dists = np.asarray(res.dists)
-        dt = time.perf_counter() - t0
+        dt = wall_clock() - t0
         if hasattr(self.clock, "advance"):
             # Virtual-time replay: execution cost advances the timeline.
             self.clock.advance(dt)
         now = self.clock()
+        # Execution-only duration (injected spikes excluded — they advance
+        # the virtual clock, not the measured wall interval): the ladder's
+        # predictive-shedding estimate of what one more dispatch costs.
+        self.controller.observe_service(dt)
+        # An injected latency spike completed the batch but late: mark its
+        # responses faulted (+degraded) so a spike-caused deadline miss is
+        # accountable, never a silent late completion.
+        spiked = "spike" in self._drain_executor_faults()
         self.telemetry.on_dispatch(mb.bucket, mb.n_real)
 
         mean_iters = float(res.stats.iters)
@@ -736,9 +873,16 @@ class ServingRuntime:
                     self.telemetry.on_escalate()
                     self.batcher.add(req, now)
                     continue
-            while len(self._responses) >= self._max_unpolled:
-                self._responses.pop(next(iter(self._responses)))
-                self.telemetry.counters["responses_evicted"] += 1
+                elif (
+                    self.controller.ladder is not None
+                    and self.controller.ladder.cap_escalations
+                    and req.tier < self.controller.max_tier
+                ):
+                    # The ladder (not the ladder top) suppressed the
+                    # retry: this partial answer is a degraded one.
+                    req.degraded = True
+            self._bound_unpolled()
+            ladder = self.controller.ladder
             self._responses[req.req_id] = Response(
                 req_id=req.req_id,
                 ids=row_ids.copy(),
@@ -750,14 +894,31 @@ class ServingRuntime:
                 fill_history=req.fill_history,
                 arrival_t=req.arrival_t,
                 complete_t=now,
-                deadline_missed=req.deadline is not None and now > req.deadline,
+                deadline_missed=deadline_missed(req.deadline, now),
                 epoch=getattr(self.executor, "epoch", None),
                 strategy=strategy,
                 est_selectivity=req.est_selectivity,
+                # Degraded if the ladder shaped it at any point of its
+                # life — admission, dispatch, or completion — a spike hit
+                # its batch, or it crossed its deadline DURING execution
+                # (it passed the flush-time shed check, then the dispatch
+                # outlasted its budget: late = SLO-degraded): every late
+                # completion carries a mark explaining it, never a silent
+                # miss.
+                degraded=(
+                    req.degraded
+                    or spiked
+                    or (ladder is not None and ladder.level > 0)
+                    or deadline_missed(req.deadline, now)
+                ),
+                faulted=spiked or req.fault_retries > 0,
             )
             self._in_flight -= 1
             self.telemetry.on_complete(self._responses[req.req_id])
+            self.controller.observe_latency(now - req.arrival_t)
             done += 1
+        if not fill_fracs:
+            return done
         mean_fill = sum(fill_fracs) / len(fill_fracs)
         if strategy == "graph":
             # Tier retuning reads traversal fill/iteration EMAs — posting
@@ -772,6 +933,47 @@ class ServingRuntime:
                 dt / max(mb.n_real, 1),
                 mean_fill,
             )
+        return done
+
+    def _recover_faulted(self, mb: MicroBatch, fault: ExecutorFault) -> int:
+        """Fault recovery (DESIGN.md §10): every request of a faulted
+        dispatch is either re-queued through the batcher (within its
+        ``max_fault_retries`` budget) or completed as a FAILED pollable
+        Response carrying the fault message — never hung in ``in_flight``,
+        never silently lost. Returns the number completed-as-failed."""
+        self._drain_executor_faults()  # count the injection behind this raise
+        now = self.clock()
+        done = 0
+        for req in mb.requests:
+            if req.fault_retries < self.max_fault_retries:
+                req.fault_retries += 1
+                self.telemetry.on_fault_retry()
+                self.batcher.add(req, now)
+                continue
+            self._bound_unpolled()
+            resp = Response(
+                req_id=req.req_id,
+                ids=np.full((req.k,), -1, np.int32),
+                dists=np.full((req.k,), np.inf, np.float32),
+                k=req.k,
+                filled=0,
+                tier=req.tier,
+                escalations=req.escalations,
+                fill_history=req.fill_history + (0,),
+                arrival_t=req.arrival_t,
+                complete_t=now,
+                deadline_missed=deadline_missed(req.deadline, now),
+                epoch=getattr(self.executor, "epoch", None),
+                strategy=req.strategy,
+                est_selectivity=req.est_selectivity,
+                degraded=req.degraded,
+                faulted=True,
+                error=str(fault),
+            )
+            self._responses[req.req_id] = resp
+            self._in_flight -= 1
+            self.telemetry.on_complete(resp)
+            done += 1
         return done
 
     # --- reporting --------------------------------------------------------

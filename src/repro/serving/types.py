@@ -30,6 +30,30 @@ class AdmissionError(RuntimeError):
     (backpressure: the caller must retry later or shed the request)."""
 
 
+# --- deadline discipline (DESIGN.md §10) -----------------------------------
+# A deadline is the LAST instant at which completion still counts: a
+# response landing exactly at ``deadline`` is met. Everything that compares
+# a deadline goes through these two helpers, so the batcher's "time to
+# ship", the runtime's shed decision, and the completion verdict cannot
+# drift apart (they once did: batcher flushed on ``deadline <= now`` while
+# the runtime reported misses on ``now > deadline`` — consistent only by
+# accident of both being exclusive at the boundary).
+
+
+def deadline_due(deadline: Optional[float], now: float) -> bool:
+    """The batcher must ship now: the deadline instant has arrived. At
+    ``now == deadline`` the request is due AND still meetable — this is
+    its last chance, not a miss."""
+    return deadline is not None and now >= deadline
+
+
+def deadline_missed(deadline: Optional[float], now: float) -> bool:
+    """Completion (or shed-evaluation) strictly after the deadline is a
+    miss; completing exactly at the deadline is met. Also the shed test:
+    a request is expired-at-flush iff its deadline is already missed."""
+    return deadline is not None and now > deadline
+
+
 @dataclasses.dataclass
 class Request:
     """One in-flight constrained query.
@@ -56,6 +80,11 @@ class Request:
     sel_bucket: int = -1
     sel_source: str = "default"  # "histogram" | "sampled" | "default"
     overlay_label: Optional[int] = None  # single hot label, overlay routes
+    # Fault-tolerance state (DESIGN.md §10): set while the degradation
+    # ladder shapes this request (base tier forced / escalation capped /
+    # cheap strategy preferred), and the executor-fault retry budget spent.
+    degraded: bool = False
+    fault_retries: int = 0
 
     def group(self) -> tuple:
         """Batcher compatibility key: requests in one microbatch must share
@@ -134,6 +163,22 @@ class Response:
     # produced this answer and the router's selectivity estimate for it.
     strategy: str = "graph"
     est_selectivity: Optional[float] = None
+    # Fault-tolerance outcome (DESIGN.md §10). A response is exactly one
+    # of: served (shed_reason None, error None), shed (shed_reason
+    # "expired" — deadline already missed at flush — or "overload" — the
+    # level-3 ladder predicted an unmeetable deadline), or failed (error
+    # set: an executor fault exhausted its retry budget). ``degraded``
+    # marks answers shaped by the ladder or hit by an injected latency
+    # spike — the mark that makes a late completion accountable.
+    shed_reason: Optional[str] = None
+    degraded: bool = False
+    faulted: bool = False  # an injected fault touched this dispatch
+    error: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        """Served (possibly degraded/partial) — not shed, not failed."""
+        return self.shed_reason is None and self.error is None
 
     @property
     def latency(self) -> float:

@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core.constraints import WORD_BITS
 from repro.core.types import Corpus
+from repro.serving.retry import RetryPolicy, submit_with_retry
 from repro.serving.runtime import ServingRuntime
 from repro.serving.types import AdmissionError, Response, VirtualClock
 
@@ -148,12 +149,45 @@ def churn_workload(
     return items
 
 
+def _is_virtual(clock) -> bool:
+    """A ``VirtualClock`` or any wrapper exposing its advance surface
+    (``FaultClock`` wraps one to own injected spike time)."""
+    return isinstance(clock, VirtualClock) or (
+        hasattr(clock, "advance") and hasattr(clock, "advance_to")
+    )
+
+
+def poisson_arrivals(
+    rng: np.random.RandomState,
+    n: int,
+    rate: float,
+    burst: Optional[Tuple[float, float, float]] = None,
+) -> np.ndarray:
+    """Cumulative Poisson arrival times for ``n`` items at ``rate`` qps.
+
+    ``burst=(start_frac, end_frac, mult)`` multiplies the arrival rate by
+    ``mult`` for the items whose *index* falls in that fraction of the
+    stream — the overload window the SLO harness injects (a 5x burst in
+    the middle third: ``(1/3, 2/3, 5.0)``).
+    """
+    gaps = rng.exponential(1.0 / rate, size=n)
+    if burst is not None:
+        lo_f, hi_f, mult = burst
+        i0, i1 = int(lo_f * n), int(hi_f * n)
+        gaps[i0:i1] /= float(mult)
+    return np.cumsum(gaps)
+
+
 def replay_churn(
     runtime: ServingRuntime,
     items: Sequence[WorkItem],
     rate: float,
     seed: int = 0,
     initial_live: Optional[Sequence[int]] = None,
+    *,
+    deadline_s: Optional[float] = None,
+    retry: Optional[RetryPolicy] = None,
+    burst: Optional[Tuple[float, float, float]] = None,
 ) -> Tuple[List[Optional[Response]], int]:
     """Drive a churn stream (queries + upserts/deletes) with Poisson arrivals.
 
@@ -163,9 +197,15 @@ def replay_churn(
     id that was live at submit time. Returns (responses aligned with items
     — None for rejected or skipped [no live id to delete] items, rejection
     count).
+
+    ``deadline_s`` stamps each QUERY with an absolute deadline that many
+    seconds after its submission instant (mutations stay deadline-free:
+    an upsert shed for lateness would silently lose data). ``retry`` runs
+    every submission under the client retry policy (retry.py); ``burst``
+    is forwarded to ``poisson_arrivals``.
     """
     clock = runtime.clock
-    if not isinstance(clock, VirtualClock):
+    if not _is_virtual(clock):
         raise TypeError("replay_churn needs a runtime built on a VirtualClock")
     rng = np.random.RandomState(seed)
     live: List[int] = list(
@@ -173,7 +213,7 @@ def replay_churn(
         if initial_live is not None
         else range(runtime.executor.index.pool.n_live)
     )
-    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=len(items)))
+    arrivals = poisson_arrivals(rng, len(items), rate, burst)
     req_ids: List[Optional[int]] = []
     open_upserts: dict = {}
 
@@ -195,18 +235,34 @@ def replay_churn(
         runtime.step()
         harvest_upserts()
         target: Optional[int] = None
+        if item.family == "upsert":
+            submit = lambda it=item: runtime.submit_upsert(it.query, *it.operand)
+            deadline = None
+        elif item.family == "delete":
+            if not live:
+                req_ids.append(None)
+                continue
+            target = live.pop(rng.randint(len(live)))
+            submit = lambda t=target: runtime.submit_delete(t)
+            deadline = None
+        else:
+            deadline = (
+                None if deadline_s is None else runtime.clock() + deadline_s
+            )
+            submit = lambda it=item, dl=deadline: runtime.submit(
+                it.query, it.k, it.family, it.operand, deadline=dl
+            )
         try:
-            if item.family == "upsert":
-                rid = runtime.submit_upsert(item.query, *item.operand)
-                open_upserts[rid] = True
-            elif item.family == "delete":
-                if not live:
-                    req_ids.append(None)
-                    continue
-                target = live.pop(rng.randint(len(live)))
-                rid = runtime.submit_delete(target)
+            if retry is not None:
+                rid, _ = submit_with_retry(
+                    runtime, submit, retry, rng, deadline=deadline
+                )
+                if rid is None:
+                    raise AdmissionError("retry budget exhausted")
             else:
-                rid = runtime.submit(item.query, item.k, item.family, item.operand)
+                rid = submit()
+            if item.family == "upsert":
+                open_upserts[rid] = True
             req_ids.append(rid)
         except AdmissionError:
             if target is not None:
@@ -235,25 +291,47 @@ def replay_poisson(
     items: Sequence[WorkItem],
     rate: float,
     seed: int = 0,
+    *,
+    deadline_s: Optional[float] = None,
+    retry: Optional[RetryPolicy] = None,
+    burst: Optional[Tuple[float, float, float]] = None,
 ) -> Tuple[List[Optional[Response]], int]:
     """Drive ``items`` through the runtime with Poisson(rate) arrivals.
 
     Requires the runtime's clock to be a ``VirtualClock``. Returns
     (responses aligned with items — None for rejected requests, rejection
     count).
+
+    ``deadline_s`` stamps each request with an absolute deadline that many
+    seconds after its submission instant; ``retry`` runs submissions under
+    the client retry policy (retry.py — backpressure becomes jittered
+    backoff instead of an instant client-side shed); ``burst`` injects an
+    overload window (``poisson_arrivals``).
     """
     clock = runtime.clock
-    if not isinstance(clock, VirtualClock):
+    if not _is_virtual(clock):
         raise TypeError("replay_poisson needs a runtime built on a VirtualClock")
     rng = np.random.RandomState(seed)
-    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=len(items)))
+    arrivals = poisson_arrivals(rng, len(items), rate, burst)
     req_ids: List[Optional[int]] = []
     rejected = 0
     for item, t_arr in zip(items, arrivals):
         clock.advance_to(t_arr)
         runtime.step()  # flush anything that came due while idle
+        deadline = None if deadline_s is None else runtime.clock() + deadline_s
+        submit = lambda it=item, dl=deadline: runtime.submit(
+            it.query, it.k, it.family, it.operand, deadline=dl
+        )
         try:
-            req_ids.append(runtime.submit(item.query, item.k, item.family, item.operand))
+            if retry is not None:
+                rid, _ = submit_with_retry(
+                    runtime, submit, retry, rng, deadline=deadline
+                )
+                if rid is None:
+                    rejected += 1
+                req_ids.append(rid)
+            else:
+                req_ids.append(submit())
         except AdmissionError:
             req_ids.append(None)
             rejected += 1

@@ -1,0 +1,52 @@
+"""Static guard: the serving layer never reads the wall clock directly.
+
+Every timestamp in ``src/repro/serving/`` must flow through the injected
+clock (``ServingRuntime.clock``) or ``types.wall_clock()`` — that is what
+makes virtual-time replay deterministic and lets fault injection advance
+time. A direct ``time.time()`` / ``time.monotonic()`` /
+``time.perf_counter()`` call anywhere else silently couples latencies and
+deadline decisions to the host scheduler, which no test would catch until
+a flaky CI run did. ``types.py`` is the single allowed importer: it owns
+``wall_clock()``.
+"""
+import ast
+import pathlib
+
+SERVING = (
+    pathlib.Path(__file__).resolve().parents[1] / "src" / "repro" / "serving"
+)
+ALLOWED = {"types.py"}  # owns wall_clock(); the one sanctioned time import
+
+
+def test_serving_layer_has_no_direct_time_imports():
+    assert SERVING.is_dir(), SERVING
+    offenders = []
+    for path in sorted(SERVING.glob("*.py")):
+        if path.name in ALLOWED:
+            continue
+        tree = ast.parse(path.read_text(), filename=str(path))
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name == "time" or alias.name.startswith("time."):
+                        offenders.append(f"{path.name}:{node.lineno} import {alias.name}")
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "time":
+                    offenders.append(f"{path.name}:{node.lineno} from time import ...")
+    assert not offenders, (
+        "direct wall-clock access in the serving layer (route timestamps "
+        f"through the injected clock / types.wall_clock): {offenders}"
+    )
+
+
+def test_types_wall_clock_is_the_only_time_usage():
+    # The sanctioned file uses time for exactly one thing.
+    tree = ast.parse((SERVING / "types.py").read_text())
+    calls = [
+        node.attr
+        for node in ast.walk(tree)
+        if isinstance(node, ast.Attribute)
+        and isinstance(node.value, ast.Name)
+        and node.value.id == "time"
+    ]
+    assert calls == ["perf_counter"], calls

@@ -282,3 +282,62 @@ def test_search_result_filled_helper():
         ),
     )
     np.testing.assert_array_equal(np.asarray(res.filled), [2, 0, 4])
+
+
+# ---------------------------------------------------------------------------
+# replay backpressure accounting (PR 7 satellite: these paths predate the
+# client retry policy and must stay exact underneath it)
+# ---------------------------------------------------------------------------
+
+
+def test_replay_rejections_stay_aligned_and_counted(world):
+    corpus, graph = world
+    from repro.serving import mixed_workload, replay_poisson
+
+    runtime = ServingRuntime(
+        LocalExecutor(corpus, graph), n_labels=L, tiers=_tiers(4, 8, 16),
+        ladder=(4,), families=("label", "range"), max_wait=0.05,
+        max_pending=2, clock=VirtualClock(),
+    )
+    items = mixed_workload(3, corpus, 12, L, k_choices=(4,))
+    # rate >> service rate with max_pending=2: most submits must bounce
+    responses, rejected = replay_poisson(runtime, items, rate=1e9, seed=1)
+    assert rejected > 0
+    assert len(responses) == len(items)  # alignment survives rejections
+    assert sum(r is None for r in responses) == rejected
+    assert runtime.telemetry.counters["rejected"] == rejected
+    served = [r for r in responses if r is not None]
+    assert runtime.telemetry.counters["completed"] == len(served)
+    assert runtime.in_flight == 0
+
+
+def test_churn_replay_shed_delete_keeps_id_live(world):
+    corpus, graph = world
+    from repro.serving import StreamingLocalExecutor, WorkItem, replay_churn
+    from repro.streaming import StreamingIndex
+
+    index = StreamingIndex.from_static(corpus, graph, capacity=N + 8)
+    n_live_before = index.pool.n_live
+    runtime = ServingRuntime(
+        StreamingLocalExecutor(index, consolidate_after=1000), n_labels=L,
+        tiers=_tiers(4, 8, 16), ladder=(4,), families=("label",),
+        max_wait=10.0, max_pending=1, clock=VirtualClock(),
+    )
+    # One query wedges the single admission slot (max_wait holds it
+    # batched); both deletes then bounce off backpressure. If the shed
+    # delete LEAKED its popped id, the second delete would find the live
+    # set empty and be skipped (not rejected) — the counts distinguish it.
+    items = [
+        WorkItem(np.zeros((D,), np.float32), 4, "label",
+                 label_words_row([0], L), "equal"),
+        WorkItem(np.zeros((0,), np.float32), 1, "delete", None, "delete"),
+        WorkItem(np.zeros((0,), np.float32), 1, "delete", None, "delete"),
+    ]
+    responses, rejected = replay_churn(
+        runtime, items, rate=1e9, seed=1, initial_live=[5]
+    )
+    assert rejected == 2  # the restored id made the second delete A REAL TRY
+    assert responses[1] is None and responses[2] is None
+    assert responses[0] is not None  # the wedged query completed at drain
+    assert index.pool.n_live == n_live_before  # nothing was deleted
+    assert runtime.telemetry.counters["deletes_applied"] == 0

@@ -1,0 +1,457 @@
+"""Fault-tolerant serving under SLO (DESIGN.md §10): deadline boundary
+semantics, the degradation ladder's hysteresis and recovery, shed paths
+(expired + predictive), injected executor faults (errors, latency spikes,
+stale epochs) retried-or-failed but never lost, and the client retry
+policy's deadline-aware give-up.
+
+The ladder staleness test is a regression test for a real death spiral:
+at level 3 everything is shed, so no completions arrive, so the latency
+EMA freezes at its burst-era high, so the ladder never recovers — unless
+a stale EMA stops counting as an overload signal.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.data.synthetic import make_labeled_corpus
+from repro.graph.index import build_index
+from repro.serving import (
+    AdmissionError,
+    DegradationLadder,
+    FaultClock,
+    FaultConfig,
+    FaultSchedule,
+    FaultyExecutor,
+    LatencyHistogram,
+    LocalExecutor,
+    RetryPolicy,
+    ServingRuntime,
+    SLOConfig,
+    StreamingLocalExecutor,
+    VirtualClock,
+    deadline_due,
+    deadline_missed,
+    label_words_row,
+    mixed_workload,
+    poisson_arrivals,
+    replay_poisson,
+    submit_with_retry,
+)
+from repro.core.types import SearchParams
+
+N, D, L = 1500, 16, 5
+
+
+@pytest.fixture(scope="module")
+def world():
+    corpus = make_labeled_corpus(jax.random.PRNGKey(0), n=N, d=D, n_labels=L)
+    corpus = corpus.replace(
+        attrs=jax.random.uniform(jax.random.PRNGKey(50), (N, 2))
+    )
+    graph = build_index(
+        jax.random.PRNGKey(1), corpus, degree=12, sample_size=128
+    )
+    return corpus, graph
+
+
+def _tiers(k_cap=4, base_ef=8, base_iters=16, n_tiers=1):
+    out = []
+    for t in range(n_tiers):
+        g = 4**t
+        ef = max(base_ef * g, k_cap)
+        out.append(SearchParams(
+            mode="prefer", k=k_cap, ef_result=ef, ef_sat=ef, ef_other=ef,
+            n_start=4 * g, max_iters=base_iters * g,
+        ))
+    return tuple(out)
+
+
+def _runtime(world, clock=None, **kw):
+    corpus, graph = world
+    kw.setdefault("n_labels", L)
+    kw.setdefault("tiers", _tiers())
+    kw.setdefault("ladder", (4,))
+    kw.setdefault("families", ("label",))
+    kw.setdefault("max_wait", 0.0)
+    executor = kw.pop("executor", None) or LocalExecutor(corpus, graph)
+    return ServingRuntime(executor, clock=clock or VirtualClock(), **kw)
+
+
+def _submit(runtime, deadline=None, k=4):
+    q = np.zeros((D,), np.float32)
+    return runtime.submit(q, k, "label", label_words_row([0], L),
+                          deadline=deadline)
+
+
+# ---------------------------------------------------------------------------
+# deadline boundary semantics (the satellite fix: one set of helpers)
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_boundary_semantics():
+    # At now == deadline the request is DUE (last chance to ship) but not
+    # yet MISSED (completing exactly at the deadline counts).
+    assert deadline_due(1.0, 1.0)
+    assert not deadline_missed(1.0, 1.0)
+    assert deadline_missed(1.0, np.nextafter(1.0, 2.0))
+    assert not deadline_due(1.0, 0.999)
+    # deadline-free requests are never due-by-deadline and never missed
+    assert not deadline_due(None, 1e9)
+    assert not deadline_missed(None, 1e9)
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder (pure bookkeeping, no executor)
+# ---------------------------------------------------------------------------
+
+
+def test_ladder_hysteresis_up_and_down():
+    cfg = SLOConfig(queue_high=8, queue_low=2, hold_up=2, hold_down=3,
+                    max_level=3)
+    ladder = DegradationLadder(cfg)
+    ladder.observe_load(100)
+    assert ladder.level == 0  # one overloaded sample is not enough
+    ladder.observe_load(100)
+    assert ladder.level == 1  # hold_up reached
+    for _ in range(4):
+        ladder.observe_load(100)
+    assert ladder.level == 3  # climbs one level per hold_up window, capped
+    for _ in range(6):
+        ladder.observe_load(100)
+    assert ladder.level == 3  # max_level is a ceiling, not a wrap
+    down_at = []
+    for _ in range(60):
+        ladder.observe_load(0)
+        down_at.append(ladder.level)
+    assert ladder.level == 0  # queue EMA decayed below queue_low -> calm
+    assert down_at == sorted(down_at, reverse=True)  # monotone recovery
+    ups = [t for t in ladder.transitions if t[2] > t[1]]
+    downs = [t for t in ladder.transitions if t[2] < t[1]]
+    assert len(ups) == 3 and len(downs) == 3
+
+
+def test_ladder_band_holds_level_and_flapping_is_bounded():
+    cfg = SLOConfig(queue_high=8, queue_low=2, hold_up=2, hold_down=2)
+    ladder = DegradationLadder(cfg)
+    ladder.observe_load(10)
+    ladder.observe_load(10)
+    assert ladder.level == 1
+    for _ in range(20):
+        ladder.observe_load(5)  # EMA converges into the [low, high] band
+    assert ladder.level == 1 and len(ladder.transitions) == 1
+    # A load oscillating across queue_high never holds the overloaded
+    # condition for hold_up consecutive samples: the ladder must not move.
+    flappy = DegradationLadder(cfg)
+    for i in range(50):
+        flappy.observe_load(9 if i % 2 == 0 else 1)
+    assert flappy.level == 0 and flappy.transitions == []
+
+
+def test_ladder_stale_latency_cannot_latch_overload():
+    # Death-spiral regression: a hot latency EMA with no completions
+    # behind it (everything shed) must go stale and release the ladder.
+    cfg = SLOConfig(target_latency=0.01, queue_high=50, queue_low=5,
+                    hold_up=1, hold_down=2, lat_stale_after=4)
+    ladder = DegradationLadder(cfg)
+    ladder.observe_latency(1.0)  # 100x the target: overload evidence
+    for _ in range(3):
+        ladder.observe_load(0)
+    assert ladder.level == 3  # latency signal alone drove it up
+    for _ in range(20):
+        ladder.observe_load(0)  # queue empty, NO new latency samples
+    assert ladder.level == 0
+    assert ladder.lat_ema > cfg.target_latency  # stale, not decayed
+
+
+def test_predicted_miss_uses_service_time_not_queue_wait():
+    ladder = DegradationLadder(SLOConfig())
+    ladder.observe_latency(5.0)  # arrival-to-completion: burst queue wait
+    ladder.observe_service(0.001)  # what one dispatch actually costs
+    # A deadline 1s out is easily meetable by a 1ms dispatch — the stale
+    # queue-wait-contaminated EMA must not shed it.
+    assert not ladder.predicted_miss(deadline=1.0, now=0.0)
+    assert ladder.predicted_miss(deadline=0.0005, now=0.0)
+    # Fallback before any dispatch measurement exists: the latency EMA.
+    fallback = DegradationLadder(SLOConfig())
+    fallback.observe_latency(5.0)
+    assert fallback.predicted_miss(deadline=1.0, now=0.0)
+    assert not fallback.predicted_miss(deadline=None, now=0.0)
+
+
+# ---------------------------------------------------------------------------
+# shed paths through the runtime
+# ---------------------------------------------------------------------------
+
+
+def test_expired_request_shed_with_pollable_response(world):
+    clock = VirtualClock()
+    runtime = _runtime(world, clock=clock)
+    rid = _submit(runtime, deadline=clock() + 0.001)
+    clock.advance(0.01)  # the deadline passes while the request queues
+    runtime.step()
+    resp = runtime.poll(rid)
+    assert resp is not None and resp.shed_reason == "expired"
+    assert resp.filled == 0 and not resp.ok and resp.deadline_missed
+    assert runtime.in_flight == 0
+    assert runtime.telemetry.counters["shed_expired"] == 1
+    assert runtime.telemetry.counters["shed_total"] == 1
+
+
+def test_shed_disabled_serves_late_but_marked_degraded(world):
+    # Pre-PR7 behaviour (shed_expired=False) still upholds the invariant:
+    # a completion past its deadline carries the degraded mark.
+    clock = VirtualClock()
+    runtime = _runtime(world, clock=clock, shed_expired=False)
+    rid = _submit(runtime, deadline=clock() + 0.001)
+    clock.advance(0.01)
+    runtime.drain()
+    resp = runtime.poll(rid)
+    assert resp is not None and resp.shed_reason is None
+    assert resp.deadline_missed and resp.degraded
+    assert runtime.telemetry.counters["shed_total"] == 0
+
+
+def test_predictive_shed_at_level3(world):
+    clock = VirtualClock()
+    runtime = _runtime(world, clock=clock, slo=SLOConfig())
+    ladder = runtime.controller.ladder
+    ladder.level = 3
+    ladder.observe_service(10.0)  # one dispatch costs 10s in evidence
+    rid = _submit(runtime, deadline=clock() + 1.0)  # not expired, hopeless
+    runtime.step()
+    resp = runtime.poll(rid)
+    assert resp is not None and resp.shed_reason == "overload"
+    assert resp.degraded  # admitted under a degraded ladder
+    assert runtime.telemetry.counters["shed_overload"] == 1
+    # Below level 3 the same request is served, not predicted away.
+    ladder.level = 2
+    rid2 = _submit(runtime, deadline=clock() + 1.0)
+    runtime.drain()
+    assert runtime.poll(rid2).shed_reason is None
+
+
+def test_edf_orders_flush_batches_by_deadline(world):
+    clock = VirtualClock()
+    runtime = _runtime(world, clock=clock, families=("label", "range"),
+                       max_wait=10.0)
+    # Two incompatible microbatches in one flush; the later-submitted one
+    # has the earlier deadline and must execute first.
+    rid_late = _submit(runtime, deadline=clock() + 50.0)
+    rid_soon = runtime.submit(
+        np.zeros((D,), np.float32), 4, "range", (0.0, 1.0, 0),
+        deadline=clock() + 1.0,
+    )
+    runtime.step(force=True)
+    order = [r.req_id for r in runtime.telemetry.responses]
+    assert order.index(rid_soon) < order.index(rid_late)
+
+
+# ---------------------------------------------------------------------------
+# fault injection: every fault retried to success or surfaced, never lost
+# ---------------------------------------------------------------------------
+
+
+def _faulty_runtime(world, fault_cfg, **kw):
+    corpus, graph = world
+    base = VirtualClock()
+    fclock = FaultClock(base)
+    schedule = FaultSchedule(fault_cfg)
+    executor = FaultyExecutor(LocalExecutor(corpus, graph), schedule, fclock)
+    return _runtime(world, clock=fclock, executor=executor, **kw), schedule, fclock
+
+
+def test_injected_error_retried_to_success(world):
+    runtime, schedule, _ = _faulty_runtime(
+        world, FaultConfig(seed=3, error_rate=1.0, max_faults=1)
+    )
+    rid = _submit(runtime)
+    runtime.drain()
+    resp = runtime.poll(rid)
+    assert resp is not None and resp.ok and resp.filled > 0
+    assert resp.faulted  # the retry is accounted on the response
+    assert schedule.injected == 1
+    assert runtime.telemetry.counters["fault_retries"] == 1
+    assert runtime.telemetry.counters["faults_injected"] == 1
+    assert runtime.in_flight == 0
+
+
+def test_fault_budget_exhaustion_surfaces_failed_response(world):
+    runtime, schedule, _ = _faulty_runtime(
+        world, FaultConfig(seed=3, error_rate=1.0), max_fault_retries=1
+    )
+    rid = _submit(runtime)
+    runtime.drain()  # every dispatch faults; must still terminate
+    resp = runtime.poll(rid)
+    assert resp is not None and resp.error is not None
+    assert not resp.ok and resp.faulted and resp.filled == 0
+    assert runtime.in_flight == 0  # failed, never hung
+    assert runtime.telemetry.counters["failed"] == 1
+    assert runtime.telemetry.counters["fault_retries"] == 1
+    assert schedule.injected == 2  # initial dispatch + one retry
+
+
+def test_latency_spike_marks_response_and_advances_clock(world):
+    spike_s = 0.25
+    runtime, _, fclock = _faulty_runtime(
+        world, FaultConfig(seed=3, spike_rate=1.0, spike_s=spike_s,
+                           max_faults=1)
+    )
+    rid = _submit(runtime)
+    runtime.drain()
+    resp = runtime.poll(rid)
+    assert resp is not None and resp.ok  # spikes delay, they don't fail
+    assert resp.faulted and resp.degraded
+    assert fclock.injected_s == pytest.approx(spike_s)
+    assert resp.latency >= spike_s  # the spike is real in the timeline
+
+
+def test_warmup_neither_faults_nor_consumes_schedule(world):
+    runtime, schedule, _ = _faulty_runtime(
+        world, FaultConfig(seed=3, error_rate=1.0, max_faults=1)
+    )
+    runtime.warmup()  # dummy dispatches against an error_rate=1.0 schedule
+    assert schedule.injected == 0
+    assert runtime.executor.armed  # re-armed for the measured run
+    rid = _submit(runtime)
+    runtime.drain()
+    assert schedule.injected == 1  # the fault fired on the REAL dispatch
+    assert runtime.poll(rid).faulted
+
+
+def test_stale_epoch_delays_snapshot_publication(world):
+    corpus, graph = world
+    from repro.streaming import StreamingIndex
+
+    index = StreamingIndex.from_static(corpus, graph, capacity=N + 8)
+    schedule = FaultSchedule(FaultConfig(seed=3, stale_epoch_rate=1.0,
+                                         max_faults=1))
+    executor = FaultyExecutor(
+        StreamingLocalExecutor(index, consolidate_after=1000), schedule
+    )
+    runtime = _runtime(world, executor=executor)
+    e0 = executor.epoch
+    rid1 = runtime.submit_upsert(np.zeros((D,), np.float32), label=0)
+    runtime.drain()
+    resp1 = runtime.poll(rid1)
+    assert resp1.filled == 1  # the mutation itself applied
+    assert resp1.epoch == e0  # ... but publication was delayed (stale)
+    assert executor.epoch == e0  # queries keep seeing (and reporting) e0
+    rid2 = runtime.submit_upsert(np.zeros((D,), np.float32), label=0)
+    runtime.drain()
+    assert runtime.poll(rid2).epoch > e0  # next swap catches up
+    assert schedule.by_kind["stale_epoch"] == 1
+    assert runtime.telemetry.counters["fault_stale_epoch"] == 1
+
+
+# ---------------------------------------------------------------------------
+# client retry policy
+# ---------------------------------------------------------------------------
+
+
+def test_retry_backoff_growth_and_jitter_bounds():
+    policy = RetryPolicy(base_backoff=0.01, multiplier=2.0, jitter=0.5)
+    rng = np.random.RandomState(0)
+    for attempt in range(4):
+        nominal = 0.01 * 2.0**attempt
+        for _ in range(20):
+            b = policy.backoff_for(attempt, rng)
+            assert 0.5 * nominal <= b <= 1.5 * nominal
+    no_jitter = RetryPolicy(base_backoff=0.01, multiplier=2.0, jitter=0.0)
+    assert no_jitter.backoff_for(3, rng) == pytest.approx(0.08)
+
+
+def test_retry_recovers_from_backpressure(world):
+    clock = VirtualClock()
+    runtime = _runtime(world, clock=clock, max_pending=2, max_wait=0.05)
+    _submit(runtime)
+    _submit(runtime)
+    with pytest.raises(AdmissionError):
+        _submit(runtime)  # full: the no-retry client sheds instantly
+    # The retrying client backs off (advancing virtual time, pumping the
+    # runtime — which drains the queue) and lands the request.
+    rid, retries = submit_with_retry(
+        runtime, lambda: _submit(runtime),
+        RetryPolicy(max_retries=5, base_backoff=0.1), np.random.RandomState(0),
+    )
+    assert rid is not None and retries >= 1
+    assert runtime.telemetry.counters["retries"] == retries
+    runtime.drain()
+    assert runtime.poll(rid) is not None
+
+
+def test_retry_gives_up_before_hopeless_deadline(world):
+    clock = VirtualClock()
+    runtime = _runtime(world, clock=clock, max_pending=1, max_wait=10.0)
+    _submit(runtime)  # wedge the queue (max_wait keeps it batched)
+    rid, retries = submit_with_retry(
+        runtime, lambda: _submit(runtime),
+        RetryPolicy(max_retries=5, base_backoff=0.1, jitter=0.0),
+        np.random.RandomState(0),
+        deadline=clock() + 0.01,  # sooner than the first backoff lands
+    )
+    assert rid is None and retries == 0  # gave up without burning budget
+    assert runtime.telemetry.counters["retries"] == 0
+
+
+# ---------------------------------------------------------------------------
+# workload plumbing + end-to-end invariants
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_burst_window_compresses_gaps():
+    a = poisson_arrivals(np.random.RandomState(7), 300, 100.0)
+    b = poisson_arrivals(np.random.RandomState(7), 300, 100.0,
+                         burst=(1 / 3, 2 / 3, 5.0))
+    ga = np.diff(np.concatenate([[0.0], a]))
+    gb = np.diff(np.concatenate([[0.0], b]))
+    np.testing.assert_allclose(gb[:100], ga[:100])
+    np.testing.assert_allclose(gb[100:200], ga[100:200] / 5.0)
+    np.testing.assert_allclose(gb[200:], ga[200:])
+
+
+def test_latency_histogram_quantiles():
+    hist = LatencyHistogram()
+    for _ in range(99):
+        hist.record(0.001)
+    hist.record(1.0)
+    assert hist.quantile(50) < 0.002  # upper edge of the 1ms bucket
+    assert hist.quantile(99.5) >= 1.0
+    s = hist.summary()
+    assert s["count"] == 100
+
+
+def test_replay_under_faults_loses_nothing(world):
+    # End-to-end acceptance invariant at test scale: burst + deadline +
+    # error/spike faults; every item terminates as a pollable response or
+    # a counted rejection, zero late completions go unmarked.
+    corpus, graph = world
+    items = mixed_workload(5, corpus, 40, L, k_choices=(4,),
+                           mix=(0.5, 0.5, 0.0))
+    runtime, schedule, fclock = _faulty_runtime(
+        world,
+        FaultConfig(seed=9, error_rate=0.1, spike_rate=0.1, spike_s=0.02),
+        slo=SLOConfig(target_latency=0.05),
+        max_wait=0.002, max_pending=16,
+    )
+    runtime.warmup()
+    responses, rejected = replay_poisson(
+        runtime, items, rate=400.0, seed=11, deadline_s=0.05,
+        retry=RetryPolicy(max_retries=2, base_backoff=0.002),
+        burst=(1 / 3, 2 / 3, 10.0),
+    )
+    served = [r for r in responses if r is not None]
+    assert len(served) + rejected == len(items)
+    assert runtime.in_flight == 0
+    late_unmarked = [
+        r for r in served
+        if r.deadline_missed
+        and r.shed_reason is None and not r.degraded
+        and not r.faulted and r.error is None
+    ]
+    assert late_unmarked == []
+    c = runtime.telemetry.counters
+    # every submission terminated: completed or shed, nothing lost
+    assert c["submitted"] == c["completed"] + c["shed_total"]
+    if schedule.by_kind["error"]:
+        # every injected error was retried to success or surfaced failed
+        assert c["fault_retries"] + c["failed"] >= 1

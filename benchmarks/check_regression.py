@@ -212,6 +212,45 @@ GATES = (
         direction="higher",
         tolerance=0.5,  # load-dependent count: wide, trips on a collapse
     ),
+    # --- autotune (PR8): roofline-anchored kernel floors + table health --
+    # Each tuned kernel's smoke-sweep winner is gated on its achieved
+    # roofline_fraction (= model-predicted time bound / measured time): a
+    # seeded slowdown in a kernel halves its fraction and trips the floor,
+    # while pure-noise wall-clock drift stays inside the 0.5 band because
+    # the model bound in the numerator moves with neither.
+    *[
+        Gate(
+            name=f"autotune {kernel} roofline fraction floor",
+            suite="autotune", bench="sweep_smoke",
+            metric="winner_roofline_fraction",
+            baseline_file="BENCH_PR8.json",
+            baseline_path=("smoke_reference", "sweep", kernel,
+                           "winner_roofline_fraction"),
+            direction="higher",
+            tolerance=0.5,  # wall-clock class: trips on 2x, not jitter
+            filters=(("kernel", kernel),),
+        )
+        for kernel in ("fused_exact", "fused_adc", "gather_distance",
+                       "pq_adc")
+    ],
+    Gate(
+        name="autotune tuning-table consistency",
+        suite="autotune", bench="table_consistency",
+        metric="ok",
+        baseline_file="BENCH_PR8.json",
+        baseline_path=(),
+        direction="higher",
+        absolute=1.0,  # schema + lattice membership + loader round-trip
+    ),
+    Gate(
+        name="autotune tuned-beats-default points",
+        suite="autotune", bench="tuned_vs_default",
+        metric="n_points_tuned_beats_default",
+        baseline_file="BENCH_PR8.json",
+        baseline_path=(),
+        direction="higher",
+        absolute=2.0,  # acceptance: tuned wins at >= 2 swept key points
+    ),
 )
 
 

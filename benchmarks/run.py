@@ -18,7 +18,7 @@ def main() -> None:
         "--only",
         default="",
         help="comma list: pipeline,constraints,alter_ratio,clusters,mnist,"
-        "kernels,beam,fused,serving,streaming,hybrid,slo",
+        "kernels,beam,fused,serving,streaming,hybrid,slo,autotune",
     )
     ap.add_argument(
         "--smoke",
@@ -46,6 +46,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_alter_ratio,
+        bench_autotune,
         bench_beam,
         bench_clusters,
         bench_constraints,
@@ -97,6 +98,12 @@ def main() -> None:
         # burst, zero unmarked late completions, zero lost/hung requests);
         # full mode writes BENCH_PR7.json.
         "slo": bench_slo.main,
+        # bench_autotune sweeps the kernel block-shape lattice (PR8): full
+        # mode writes the committed tuning table (src/repro/tune/table.json)
+        # + BENCH_PR8.json; smoke mode re-times a tiny per-kernel sweep
+        # (achieved roofline_fraction, gated vs the committed floor) and
+        # re-validates the table's schema/lattice/loader reproducibility.
+        "autotune": bench_autotune.main,
     }
     print("name,us_per_call,derived")
 

@@ -175,7 +175,12 @@ class ConstraintTables:
     family: "label" — meta is the (n,) int32 label column, cons the
             (B, Lw) uint32 allowed-label bitmask words;
             "range" — meta is the (n,) f32 attribute column, cons the
-            (B, 2) f32 [lo, hi] bounds.
+            (B, 2) f32 [lo, hi] bounds;
+            "udf"   — meta is the (n,) int32 precompiled predicate column
+            (the UDF evaluated over every vertex's label/attribute row at
+            table-build time — UDFs are query-independent by contract, so
+            one evaluation serves the whole batch), cons a (1, 1) dummy
+            (there is no per-query operand; the kernels pin its block).
     """
 
     meta: Array
@@ -189,9 +194,35 @@ class ConstraintTables:
     tomb: Optional[Array] = None
 
 
-def constraint_tables(constraint, corpus: Corpus) -> Optional[ConstraintTables]:
-    """Raw views for the fused kernel; None when the family needs the
-    unfused path (UDF closures are arbitrary jnp code)."""
+def udf_predicate_table(
+    udf: Callable[[Array, Array], Array], corpus: Corpus
+) -> Array:
+    """Precompile a UDF into its (n,) int32 verdict column.
+
+    The UDF contract (``udf_satisfied_fn``) is a pure predicate over the
+    vertex's label and attribute row — query-independent — so evaluating
+    it once over the whole corpus yields a metadata column the fused
+    kernels consume exactly like the label/range columns (one 4-byte word
+    riding the candidate-row DMA). Unlike a VMEM-resident bitmap this
+    scales to any corpus size. O(n) work: ``constraint_tables`` only
+    builds it when the caller opts in (``include_udf``), i.e. when the
+    fused path is actually reachable.
+    """
+    labels = corpus.labels
+    attrs = (
+        corpus.attrs
+        if corpus.attrs is not None
+        else jnp.zeros((corpus.n, 0), jnp.float32)
+    )
+    return jax.vmap(udf)(labels, attrs).astype(jnp.int32)
+
+
+def constraint_tables(
+    constraint, corpus: Corpus, include_udf: bool = False
+) -> Optional[ConstraintTables]:
+    """Raw views for the fused kernel; None for UDF closures unless
+    ``include_udf`` (precompiling the predicate table is O(n), so callers
+    that never fuse — estimators, routers — keep the historical None)."""
     if isinstance(constraint, LabelSetConstraint):
         return ConstraintTables(
             meta=corpus.labels, cons=constraint.words, family="label",
@@ -207,6 +238,13 @@ def constraint_tables(constraint, corpus: Corpus) -> Optional[ConstraintTables]:
                  constraint.hi.astype(jnp.float32)], axis=-1,
             ),
             family="range",
+            tomb=corpus.tombstones,
+        )
+    if callable(constraint) and include_udf:
+        return ConstraintTables(
+            meta=udf_predicate_table(constraint, corpus),
+            cons=jnp.zeros((1, 1), jnp.int32),  # no per-query operand
+            family="udf",
             tomb=corpus.tombstones,
         )
     return None

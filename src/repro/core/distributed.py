@@ -144,7 +144,10 @@ def make_distributed_search(
         # Per-shard context: the backend holds this shard's rows (or codes
         # + the local batch's LUT); the constraint closure closes over this
         # shard's metadata columns.
-        ctx = build_context(corpus, constraint, queries, params, pq_index)
+        ctx = build_context(
+            corpus, constraint, queries, params, pq_index,
+            degree=graph.neighbors.shape[1],
+        )
         res = search_with_context(ctx, corpus, graph, queries, params)
         # Local ids -> global ids (row-sharded partition => offset).
         gids = jnp.where(res.ids >= 0, res.ids + shard * n_local, -1)

@@ -47,6 +47,8 @@ from repro.core.constraints import (
     make_satisfied_fn,
 )
 from repro.core.types import Corpus, SatisfiedFn, SearchParams
+from repro.tune.config import DEFAULT_CONFIGS, KernelConfig
+from repro.tune.table import lookup as tune_lookup
 
 Array = jax.Array
 
@@ -88,6 +90,7 @@ class _RowBackend:
     """
 
     vectors: Array  # (n, d)
+    config: KernelConfig  # static: fused-kernel block shapes (tune table)
 
     @property
     def fusable(self) -> bool:
@@ -111,6 +114,7 @@ class _RowBackend:
         return fused_expand(
             queries, self.vectors, ids, visited,
             tables.meta, tables.cons, tables.tomb, family=tables.family,
+            config=self.config,
         )
 
 
@@ -119,6 +123,9 @@ class ExactBackend(_RowBackend):
     """Exact squared-L2 over gathered corpus rows (the seed computation)."""
 
     vectors: Array  # (n, d)
+    # Static aux data: configs select compiled kernel variants, so they
+    # ride the treedef (same shapes + same table -> same trace).
+    config: KernelConfig = static_field(default=DEFAULT_CONFIGS["fused_exact"])
 
     def distances(self, queries: Array, ids: Array) -> Array:
         safe = jnp.maximum(ids, 0)
@@ -135,11 +142,17 @@ class L2KernelBackend(_RowBackend):
     """
 
     vectors: Array  # (n, d)
+    config: KernelConfig = static_field(default=DEFAULT_CONFIGS["fused_exact"])
+    # The unfused per-iteration distances go through gather_distance, a
+    # separately-tuned kernel (its own tuning-table key).
+    gd_config: KernelConfig = static_field(
+        default=DEFAULT_CONFIGS["gather_distance"]
+    )
 
     def distances(self, queries: Array, ids: Array) -> Array:
         from repro.kernels.gather_distance.ops import gather_distance
 
-        return gather_distance(queries, self.vectors, ids)
+        return gather_distance(queries, self.vectors, ids, config=self.gd_config)
 
 
 @pytree_dataclass
@@ -154,6 +167,7 @@ class PQBackend:
 
     codes: Array  # (n, m_sub) int32
     lut: Array  # (B, m_sub, n_cent) f32 — per-query ADC table
+    config: KernelConfig = static_field(default=DEFAULT_CONFIGS["fused_adc"])
 
     @property
     def fusable(self) -> bool:
@@ -199,6 +213,7 @@ class PQBackend:
         return fused_expand_adc(
             self.lut, self.codes, ids, visited,
             tables.meta, tables.cons, tables.tomb, family=tables.family,
+            config=self.config,
         )
 
 
@@ -235,39 +250,73 @@ def build_context(
     queries: Array,
     params: SearchParams,
     pq_index=None,
+    degree: int = 0,
 ) -> TraversalContext:
     """Resolve (params, constraint, corpus) into one TraversalContext.
 
     Called once per (local or per-shard) search: selects the distance
     backend from ``params.approx`` / ``params.use_kernel``, builds the
-    constraint closure and its raw table views, and fixes the fuse
-    decision. Raises for contradictory requests (fuse_expand="on" with a
-    UDF constraint, approx="pq" without a pq_index).
+    constraint closure and its raw table views (including the precompiled
+    UDF predicate column whenever the fused path is reachable — UDFs are
+    no longer ``fusable=False``), resolves the kernel block-shape configs
+    from the committed tuning table (``repro.tune``, keyed on payload
+    width x ``degree`` x beam x platform; nearest-shape fallback, pure
+    host-side python at trace time), and fixes the fuse decision. Raises
+    for approx="pq" without a pq_index. ``degree`` is the graph degree
+    when the caller has one (0 = unknown: the table lookup then matches
+    on the remaining key dims).
     """
     satisfied = make_satisfied_fn(constraint, corpus)
-    tables = constraint_tables(constraint, corpus)
+    # The UDF predicate table costs an O(n) sweep, so it is only built
+    # when the fused path could consume it; label/range views are free.
+    tables = constraint_tables(
+        constraint, corpus, include_udf=params.fuse_expand != "off"
+    )
+    platform = jax.default_backend()
+    beam = params.beam_width
     if params.approx == "pq":
         if pq_index is None:
             raise ValueError("approx='pq' requires pq_index")
         from repro.core.pq import adc_table
 
         backend: DistanceBackend = PQBackend(
-            codes=pq_index.codes, lut=adc_table(pq_index, queries)
+            codes=pq_index.codes,
+            lut=adc_table(pq_index, queries),
+            config=tune_lookup(
+                "fused_adc", d=int(pq_index.codes.shape[1]),
+                deg=degree, beam=beam, platform=platform,
+            ),
         )
     elif params.use_kernel:
-        backend = L2KernelBackend(vectors=corpus.vectors)
+        backend = L2KernelBackend(
+            vectors=corpus.vectors,
+            config=tune_lookup(
+                "fused_exact", d=corpus.dim, deg=degree, beam=beam,
+                platform=platform,
+            ),
+            gd_config=tune_lookup(
+                "gather_distance", d=corpus.dim, deg=degree, beam=beam,
+                platform=platform,
+            ),
+        )
     else:
-        backend = ExactBackend(vectors=corpus.vectors)
+        backend = ExactBackend(
+            vectors=corpus.vectors,
+            config=tune_lookup(
+                "fused_exact", d=corpus.dim, deg=degree, beam=beam,
+                platform=platform,
+            ),
+        )
 
     fusable = tables is not None and backend.fusable
     if params.fuse_expand == "on" and not fusable:
         raise ValueError(
-            "fuse_expand='on' requires a LabelSet/Range constraint "
-            "(UDF constraints evaluate as closures and stay unfused)"
+            "fuse_expand='on' requires constraint tables (got a "
+            "non-constraint object the kernels cannot evaluate)"
         )
     fuse = params.fuse_expand == "on" or (
         params.fuse_expand == "auto"
-        and resolve_auto_fuse(fusable, jax.default_backend())
+        and resolve_auto_fuse(fusable, platform)
     )
     return TraversalContext(
         backend=backend, tables=tables, satisfied=satisfied, fuse=fuse

@@ -332,7 +332,10 @@ def _constrained_search_impl(
     rng: Optional[Array] = None,
     pq_index=None,
 ) -> SearchResult:
-    ctx = build_context(corpus, constraint, queries, params, pq_index)
+    ctx = build_context(
+        corpus, constraint, queries, params, pq_index,
+        degree=graph.neighbors.shape[1],
+    )
     return search_with_context(ctx, corpus, graph, queries, params, rng)
 
 

@@ -4,6 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch_kernel
 from repro.kernels.embedding_bag.embedding_bag import embedding_bag_kernel
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 
@@ -17,13 +18,10 @@ def embedding_bag(
     mode: str = "sum",
     force_kernel: bool = False,
 ) -> Array:
-    backend = jax.default_backend()
-    if backend == "tpu":
-        out = embedding_bag_kernel(table, ids)
-    elif force_kernel:
-        out = embedding_bag_kernel(table, ids, interpret=True)
-    else:
-        out = embedding_bag_ref(table, ids)
+    fn, _ = dispatch_kernel(
+        embedding_bag_kernel, embedding_bag_ref, force_kernel=force_kernel
+    )
+    out = fn(table, ids)
     if mode == "mean":
         counts = jnp.maximum(jnp.sum((ids >= 0), axis=-1, keepdims=True), 1)
         out = out / counts

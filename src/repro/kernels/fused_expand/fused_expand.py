@@ -13,14 +13,21 @@ emitting ``(dists, satisfied, fresh)`` without ever materializing the
 (B, M, d) gathered tensor or re-gathering per-candidate metadata.
 
 TPU mapping: the id matrix is *scalar-prefetched* (SMEM) and drives manual
-double-buffered row DMAs — unlike ``gather_distance``'s one-row-per-grid-step
-layout ((B, M) steps, (1, 1) output blocks), the grid here is
-``(B, M / M_blk)`` with lane-aligned ``(1, M_blk)`` output tiles: each grid
-step streams ``M_blk`` corpus rows (plus their 4-byte metadata words) through
-a 2-deep VMEM buffer, overlapping the next row's DMA with the current row's
-VPU distance reduction. The per-query operands (query row, constraint words /
+pipelined row DMAs — unlike ``gather_distance``'s historical layout, the
+grid here is ``(B, M / M_blk)`` with lane-aligned ``(1, M_blk)`` output
+tiles: each grid step streams ``M_blk`` corpus rows (plus their 4-byte
+metadata words) through a ``dma_depth``-slot VMEM ring buffer, overlapping
+up to ``dma_depth - 1`` upcoming row copies with the current row's VPU
+distance reduction. The per-query operands (query row, constraint words /
 bounds, visited-bitset words) ride along as (1, ·) VMEM blocks revisited
 across the inner grid axis.
+
+Block shapes are no longer fixed: ``m_blk`` (an output-tile-width CAP,
+resolved as ``min(m_blk, round_up(m, 8))``), ``dma_depth`` (2..4) and the
+ADC kernel's ``lut_tile`` come from ``repro.tune.KernelConfig`` via the
+ops.py wrappers — the autotuner (DESIGN.md §11) sweeps that lattice and
+every point is bit-identical by construction: tiling/pipelining only
+reorders DMAs, never the per-candidate arithmetic.
 
 Two distance variants share the layout (PR3):
 
@@ -30,7 +37,11 @@ Two distance variants share the layout (PR3):
     m_sub=16) and the distance is a per-subspace LUT gather + sum against
     the query's (m_sub, n_cent) ADC table, VMEM-resident per query. The
     gather is a one-hot compare-select-reduce (``broadcasted_iota`` against
-    the code row) — plain VPU work, no dynamic VMEM indexing.
+    the code row) — plain VPU work, no dynamic VMEM indexing — evaluated in
+    ``lut_tile``-column slices when tiled. Each code row selects exactly one
+    column per subspace, so per-row slice sums reduce at most one non-zero
+    against exact +0.0 padding (LUT entries are squared distances, never
+    -0.0): every ``lut_tile`` produces identical bits.
 
 Constraint families (static ``family`` switch, one compiled kernel each):
 
@@ -38,11 +49,15 @@ Constraint families (static ``family`` switch, one compiled kernel each):
     column, per-query operand is the (B, Lw) uint32 allowed-label words.
   * ``"range"`` — numeric window: meta table is the (n, 1) f32 attribute
     column, per-query operand is the (B, 2) f32 [lo, hi] bounds.
+  * ``"udf"``   — precompiled predicate table: meta is the (n, 1) int32
+    verdict column (the UDF evaluated over every vertex at table-build
+    time — core/constraints.py), non-zero means satisfied. There is no
+    per-query operand; the cons block is a (1, 1) dummy pinned to block
+    (0, 0). This removed the last ``fusable=False`` constraint family.
 
-UDF constraints cannot be evaluated in-kernel and take the unfused path
-(engine/expand.py). Padding ids (< 0) are redirected to row 0 and reported
-as (+inf, 0, 0); ``satisfied``/``fresh`` are int32 masks (cast to bool by
-ops.py) since TPU output tiles are happier as 32-bit lanes.
+Padding ids (< 0) are redirected to row 0 and reported as (+inf, 0, 0);
+``satisfied``/``fresh`` are int32 masks (cast to bool by ops.py) since TPU
+output tiles are happier as 32-bit lanes.
 """
 from __future__ import annotations
 
@@ -57,9 +72,17 @@ Array = jax.Array
 
 WORD_BITS = 32
 
+FAMILIES = ("label", "range", "udf")
+
 
 def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
+
+
+def _resolve_m_blk(m_blk: int | None, m: int) -> int:
+    """m_blk is a cap on the lane-aligned output-tile width: small candidate
+    batches collapse to one tile (the pre-autotuner default behaviour)."""
+    return min(m_blk if m_blk is not None else 128, _round_up(m, 8))
 
 
 def _unvisited(vis_ref, cid):
@@ -77,6 +100,9 @@ def _constraint_ok(family, meta_val, cons_ref):
         cword = cons_ref[0, lab // WORD_BITS]
         cbit = (lab % WORD_BITS).astype(jnp.uint32)
         return ((cword >> cbit) & jnp.uint32(1)) == jnp.uint32(1)
+    if family == "udf":
+        # Precompiled predicate table: the metadata word IS the verdict.
+        return meta_val != jnp.int32(0)
     # "range"
     return (meta_val >= cons_ref[0, 0]) & (meta_val <= cons_ref[0, 1])
 
@@ -90,7 +116,15 @@ def _alive(tomb_ref, cid):
     return ((tword >> tbit) & jnp.uint32(1)) == jnp.uint32(0)
 
 
-def _make_kernel(family: str, m_blk: int, with_tomb: bool):
+def _cons_spec(family: str, cons: Array):
+    """Per-query operand block — except "udf", whose (1, 1) dummy is pinned
+    to block (0, 0) (the predicate travels in the metadata column)."""
+    if family == "udf":
+        return pl.BlockSpec((1, cons.shape[1]), lambda i, j, ids_p: (0, 0))
+    return pl.BlockSpec((1, cons.shape[1]), lambda i, j, ids_p: (i, 0))
+
+
+def _make_kernel(family: str, m_blk: int, with_tomb: bool, dma_depth: int):
     def kernel(
         ids_ref,  # (B, M) int32, scalar-prefetched (SMEM)
         q_ref,  # (1, d) query row (VMEM)
@@ -104,14 +138,14 @@ def _make_kernel(family: str, m_blk: int, with_tomb: bool):
             tomb_ref = None
         (
             corpus_hbm,  # (n, d) full corpus (ANY/HBM)
-            meta_hbm,  # (n, 1) label/attr column (ANY/HBM)
+            meta_hbm,  # (n, 1) label/attr/predicate column (ANY/HBM)
             dist_ref,  # (1, M_blk) f32 out
             sat_ref,  # (1, M_blk) int32 out
             fresh_ref,  # (1, M_blk) int32 out
-            row_buf,  # (2, 1, d) VMEM scratch — double-buffered corpus rows
-            meta_buf,  # (2, 1, 1) VMEM scratch — double-buffered metadata words
-            row_sem,  # (2,) DMA semaphores
-            meta_sem,  # (2,) DMA semaphores
+            row_buf,  # (dma_depth, 1, d) VMEM scratch — corpus-row ring
+            meta_buf,  # (dma_depth, 1, 1) VMEM scratch — metadata-word ring
+            row_sem,  # (dma_depth,) DMA semaphores
+            meta_sem,  # (dma_depth,) DMA semaphores
         ) = rest
         i = pl.program_id(0)
         jb = pl.program_id(1)
@@ -129,19 +163,23 @@ def _make_kernel(family: str, m_blk: int, with_tomb: bool):
                 meta_hbm.at[pl.ds(cid, 1), :], meta_buf.at[slot], meta_sem.at[slot]
             )
 
-        # Warm up the pipeline: candidate 0's row + metadata in flight.
-        row_dma(0, 0).start()
-        meta_dma(0, 0).start()
+        # Warm up the pipeline: the first dma_depth-1 candidates' rows +
+        # metadata in flight (the classic double buffer at depth 2).
+        for t0 in range(min(dma_depth - 1, m_blk)):
+            row_dma(t0, t0 % dma_depth).start()
+            meta_dma(t0, t0 % dma_depth).start()
         q = q_ref[...].astype(jnp.float32)  # (1, d)
 
         def body(t, carry):
-            slot = t % 2
+            slot = t % dma_depth
 
-            # Start candidate t+1's DMAs before waiting on candidate t.
-            @pl.when(t + 1 < m_blk)
+            # Keep dma_depth-1 copies in flight: start candidate
+            # t + dma_depth - 1's DMAs before waiting on candidate t.
+            @pl.when(t + dma_depth - 1 < m_blk)
             def _():
-                row_dma(t + 1, (t + 1) % 2).start()
-                meta_dma(t + 1, (t + 1) % 2).start()
+                nxt = t + dma_depth - 1
+                row_dma(nxt, nxt % dma_depth).start()
+                meta_dma(nxt, nxt % dma_depth).start()
 
             row_dma(t, slot).wait()
             meta_dma(t, slot).wait()
@@ -173,7 +211,7 @@ def _make_kernel(family: str, m_blk: int, with_tomb: bool):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("family", "m_blk", "interpret")
+    jax.jit, static_argnames=("family", "m_blk", "dma_depth", "interpret")
 )
 def fused_expand_kernel(
     queries: Array,
@@ -186,18 +224,17 @@ def fused_expand_kernel(
     *,
     family: str,
     m_blk: int | None = None,
+    dma_depth: int = 2,
     interpret: bool = False,
 ) -> tuple[Array, Array, Array]:
     """(B, d), (n, d), (B, M) i32, (B, W) u32, (n,|n,1) meta, (B, ·) cons
     [, (Wt,) u32 tombstones]
     -> ((B, M) f32 dists, (B, M) i32 satisfied, (B, M) i32 fresh)."""
-    if family not in ("label", "range"):
+    if family not in FAMILIES:
         raise ValueError(f"unsupported in-kernel constraint family: {family}")
     b, d = queries.shape
     _, m = ids.shape
-    if m_blk is None:
-        # Lane-aligned output tiles; small beams fall back to one tile.
-        m_blk = min(128, _round_up(m, 8))
+    m_blk = _resolve_m_blk(m_blk, m)
     m_pad = _round_up(m, m_blk)
     ids = ids.astype(jnp.int32)
     if m_pad != m:
@@ -221,7 +258,7 @@ def fused_expand_kernel(
         grid=(b, m_pad // m_blk),
         in_specs=[
             pl.BlockSpec((1, d), lambda i, j, ids_p: (i, 0)),
-            pl.BlockSpec((1, cons.shape[1]), lambda i, j, ids_p: (i, 0)),
+            _cons_spec(family, cons),
             pl.BlockSpec((1, visited.shape[1]), lambda i, j, ids_p: (i, 0)),
             *tomb_specs,
             pl.BlockSpec(memory_space=pltpu.ANY),  # corpus stays in HBM
@@ -233,14 +270,14 @@ def fused_expand_kernel(
             pl.BlockSpec((1, m_blk), lambda i, j, ids_p: (i, j)),
         ],
         scratch_shapes=[
-            pltpu.VMEM((2, 1, d), corpus.dtype),
-            pltpu.VMEM((2, 1, 1), meta2d.dtype),
-            pltpu.SemaphoreType.DMA((2,)),
-            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.VMEM((dma_depth, 1, d), corpus.dtype),
+            pltpu.VMEM((dma_depth, 1, 1), meta2d.dtype),
+            pltpu.SemaphoreType.DMA((dma_depth,)),
+            pltpu.SemaphoreType.DMA((dma_depth,)),
         ],
     )
     dists, sat, fresh = pl.pallas_call(
-        _make_kernel(family, m_blk, with_tomb),
+        _make_kernel(family, m_blk, with_tomb, dma_depth),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((b, m_pad), jnp.float32),
@@ -253,8 +290,19 @@ def fused_expand_kernel(
 
 
 def _make_adc_kernel(
-    family: str, m_blk: int, m_sub: int, n_cent: int, with_tomb: bool
+    family: str,
+    m_blk: int,
+    m_sub: int,
+    n_cent: int,
+    with_tomb: bool,
+    dma_depth: int,
+    lut_tile: int,
 ):
+    # lut_tile == 0 (or >= n_cent) means one whole-table slice; either way
+    # the reduction below is per-row-exact, so every tile width is
+    # bit-identical (see module docstring).
+    chunk = lut_tile if 0 < lut_tile < n_cent else n_cent
+
     def kernel(
         ids_ref,  # (B, M) int32, scalar-prefetched (SMEM)
         lut_ref,  # (1, m_sub, n_cent) f32 ADC table for this query (VMEM)
@@ -268,14 +316,14 @@ def _make_adc_kernel(
             tomb_ref = None
         (
             codes_hbm,  # (n, m_sub) int32 full code matrix (ANY/HBM)
-            meta_hbm,  # (n, 1) label/attr column (ANY/HBM)
+            meta_hbm,  # (n, 1) label/attr/predicate column (ANY/HBM)
             dist_ref,  # (1, M_blk) f32 out
             sat_ref,  # (1, M_blk) int32 out
             fresh_ref,  # (1, M_blk) int32 out
-            code_buf,  # (2, 1, m_sub) VMEM scratch — double-buffered code rows
-            meta_buf,  # (2, 1, 1) VMEM scratch — double-buffered metadata words
-            code_sem,  # (2,) DMA semaphores
-            meta_sem,  # (2,) DMA semaphores
+            code_buf,  # (dma_depth, 1, m_sub) VMEM scratch — code-row ring
+            meta_buf,  # (dma_depth, 1, 1) VMEM scratch — metadata-word ring
+            code_sem,  # (dma_depth,) DMA semaphores
+            meta_sem,  # (dma_depth,) DMA semaphores
         ) = rest
         i = pl.program_id(0)
         jb = pl.program_id(1)
@@ -293,22 +341,26 @@ def _make_adc_kernel(
                 meta_hbm.at[pl.ds(cid, 1), :], meta_buf.at[slot], meta_sem.at[slot]
             )
 
-        # Warm up the pipeline: candidate 0's code row + metadata in flight.
-        code_dma(0, 0).start()
-        meta_dma(0, 0).start()
+        # Warm up the pipeline: the first dma_depth-1 candidates' code rows
+        # + metadata in flight.
+        for t0 in range(min(dma_depth - 1, m_blk)):
+            code_dma(t0, t0 % dma_depth).start()
+            meta_dma(t0, t0 % dma_depth).start()
         lut = lut_ref[0]  # (m_sub, n_cent) — the query's ADC table, VMEM
         # One-hot centroid selector: dynamic-gather-free LUT lookup (TPU
         # needs >= 2D iota; compare-select-reduce is plain VPU work).
         cent = jax.lax.broadcasted_iota(jnp.int32, (m_sub, n_cent), 1)
 
         def body(t, carry):
-            slot = t % 2
+            slot = t % dma_depth
 
-            # Start candidate t+1's DMAs before waiting on candidate t.
-            @pl.when(t + 1 < m_blk)
+            # Keep dma_depth-1 copies in flight: start candidate
+            # t + dma_depth - 1's DMAs before waiting on candidate t.
+            @pl.when(t + dma_depth - 1 < m_blk)
             def _():
-                code_dma(t + 1, (t + 1) % 2).start()
-                meta_dma(t + 1, (t + 1) % 2).start()
+                nxt = t + dma_depth - 1
+                code_dma(nxt, nxt % dma_depth).start()
+                meta_dma(nxt, nxt % dma_depth).start()
 
             code_dma(t, slot).wait()
             meta_dma(t, slot).wait()
@@ -317,9 +369,19 @@ def _make_adc_kernel(
             valid = cid >= 0
 
             # --- ADC distance: per-subspace LUT entry sum ------------------
+            # Sliced over `chunk` centroid columns; each row slice selects
+            # at most one non-zero, so vals[s] is EXACTLY lut[s, crow[s]]
+            # (+0.0 folds are exact) and the final (m_sub,) reduction is
+            # identical for every tile width.
             crow = code_buf[slot, 0]  # (m_sub,) int32 centroid ids
-            sel = cent == crow[:, None]  # (m_sub, n_cent) one-hot rows
-            d2 = jnp.sum(jnp.where(sel, lut, 0.0))
+            vals = jnp.zeros((m_sub,), jnp.float32)
+            for c0 in range(0, n_cent, chunk):
+                c1 = min(c0 + chunk, n_cent)
+                sel = cent[:, c0:c1] == crow[:, None]
+                vals = vals + jnp.sum(
+                    jnp.where(sel, lut[:, c0:c1], 0.0), axis=1
+                )
+            d2 = jnp.sum(vals)
 
             # --- visited probe + constraint on the metadata word -----------
             unvisited = _unvisited(vis_ref, cid)
@@ -340,7 +402,8 @@ def _make_adc_kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("family", "m_blk", "interpret")
+    jax.jit,
+    static_argnames=("family", "m_blk", "dma_depth", "lut_tile", "interpret"),
 )
 def fused_expand_adc_kernel(
     lut: Array,
@@ -353,18 +416,18 @@ def fused_expand_adc_kernel(
     *,
     family: str,
     m_blk: int | None = None,
+    dma_depth: int = 2,
+    lut_tile: int = 0,
     interpret: bool = False,
 ) -> tuple[Array, Array, Array]:
     """(B, m_sub, n_cent) f32 LUT, (n, m_sub) i32 codes, (B, M) i32 ids,
     (B, W) u32 visited, (n,|n,1) meta, (B, ·) cons [, (Wt,) u32 tombstones]
     -> ((B, M) f32 ADC dists, (B, M) i32 satisfied, (B, M) i32 fresh)."""
-    if family not in ("label", "range"):
+    if family not in FAMILIES:
         raise ValueError(f"unsupported in-kernel constraint family: {family}")
     b, m_sub, n_cent = lut.shape
     _, m = ids.shape
-    if m_blk is None:
-        # Lane-aligned output tiles; small beams fall back to one tile.
-        m_blk = min(128, _round_up(m, 8))
+    m_blk = _resolve_m_blk(m_blk, m)
     m_pad = _round_up(m, m_blk)
     ids = ids.astype(jnp.int32)
     if m_pad != m:
@@ -387,7 +450,7 @@ def fused_expand_adc_kernel(
         grid=(b, m_pad // m_blk),
         in_specs=[
             pl.BlockSpec((1, m_sub, n_cent), lambda i, j, ids_p: (i, 0, 0)),
-            pl.BlockSpec((1, cons.shape[1]), lambda i, j, ids_p: (i, 0)),
+            _cons_spec(family, cons),
             pl.BlockSpec((1, visited.shape[1]), lambda i, j, ids_p: (i, 0)),
             *tomb_specs,
             pl.BlockSpec(memory_space=pltpu.ANY),  # code matrix stays in HBM
@@ -399,14 +462,16 @@ def fused_expand_adc_kernel(
             pl.BlockSpec((1, m_blk), lambda i, j, ids_p: (i, j)),
         ],
         scratch_shapes=[
-            pltpu.VMEM((2, 1, m_sub), jnp.int32),
-            pltpu.VMEM((2, 1, 1), meta2d.dtype),
-            pltpu.SemaphoreType.DMA((2,)),
-            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.VMEM((dma_depth, 1, m_sub), jnp.int32),
+            pltpu.VMEM((dma_depth, 1, 1), meta2d.dtype),
+            pltpu.SemaphoreType.DMA((dma_depth,)),
+            pltpu.SemaphoreType.DMA((dma_depth,)),
         ],
     )
     dists, sat, fresh = pl.pallas_call(
-        _make_adc_kernel(family, m_blk, m_sub, n_cent, with_tomb),
+        _make_adc_kernel(
+            family, m_blk, m_sub, n_cent, with_tomb, dma_depth, lut_tile
+        ),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((b, m_pad), jnp.float32),

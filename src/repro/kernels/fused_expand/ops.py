@@ -3,19 +3,39 @@
 ``fused_expand`` scores with exact squared L2 over corpus rows;
 ``fused_expand_adc`` scores with PQ/ADC lookups over code rows — same
 constraint + visited treatment, selected by the engine's ``DistanceBackend``
-(core/engine/context.py).
+(core/engine/context.py). Platform dispatch goes through the shared
+``repro.kernels.dispatch_kernel`` helper.
+
+Block shapes come from an optional ``repro.tune.KernelConfig`` (the
+autotuner's resolved table entry, threaded in by ``build_context``); the
+legacy ``m_blk`` keyword still wins when given explicitly (tests pin tiny
+tiles with it). All configs are bit-identical — see fused_expand.py.
 """
 from __future__ import annotations
 
+import functools
+from typing import Optional
+
 import jax
 
+from repro.kernels import dispatch_kernel
 from repro.kernels.fused_expand.fused_expand import (
     fused_expand_adc_kernel,
     fused_expand_kernel,
 )
 from repro.kernels.fused_expand.ref import fused_expand_adc_ref, fused_expand_ref
+from repro.tune.config import DEFAULT_CONFIGS, KernelConfig
 
 Array = jax.Array
+
+
+def _blocking(
+    config: Optional[KernelConfig], m_blk: Optional[int], kernel: str
+) -> tuple[Optional[int], int, int]:
+    """(m_blk cap, dma_depth, lut_tile) — explicit m_blk keyword wins."""
+    cfg = config if config is not None else DEFAULT_CONFIGS[kernel]
+    return (m_blk if m_blk is not None else cfg.m_blk,
+            cfg.dma_depth, cfg.lut_tile)
 
 
 def fused_expand(
@@ -30,32 +50,31 @@ def fused_expand(
     family: str,
     force_kernel: bool = False,
     m_blk: int | None = None,
+    config: Optional[KernelConfig] = None,
 ) -> tuple[Array, Array, Array]:
     """One pass over a (B, M) candidate batch -> (dists, satisfied, fresh).
 
     meta is the corpus-side metadata column ((n,) labels for family="label",
-    (n,) f32 attribute values for family="range"); cons the per-query operand
-    ((B, Lw) uint32 words / (B, 2) f32 bounds) — see
-    ``repro.core.constraints.constraint_tables`` for the raw-view builder.
-    ``tomb`` is the optional corpus-wide tombstone bitmap ((Wt,) uint32,
-    streaming mutable index): a set bit clears ``satisfied`` in-kernel,
-    exactly like a failed constraint.
+    (n,) f32 attribute values for family="range", (n,) int32 precompiled
+    predicate verdicts for family="udf"); cons the per-query operand
+    ((B, Lw) uint32 words / (B, 2) f32 bounds / a (1, 1) dummy for "udf") —
+    see ``repro.core.constraints.constraint_tables`` for the raw-view
+    builder. ``tomb`` is the optional corpus-wide tombstone bitmap
+    ((Wt,) uint32, streaming mutable index): a set bit clears ``satisfied``
+    in-kernel, exactly like a failed constraint.
     """
-    if jax.default_backend() == "tpu":
-        d, s, f = fused_expand_kernel(
-            queries, corpus, ids, visited, meta, cons, tomb,
-            family=family, m_blk=m_blk,
-        )
-    elif force_kernel:
-        d, s, f = fused_expand_kernel(
-            queries, corpus, ids, visited, meta, cons, tomb,
-            family=family, m_blk=m_blk, interpret=True,
-        )
-    else:
-        return fused_expand_ref(
-            queries, corpus, ids, visited, meta, cons, tomb, family=family
-        )
-    return d, s.astype(bool), f.astype(bool)
+    cap, depth, _ = _blocking(config, m_blk, "fused_exact")
+    fn, used_kernel = dispatch_kernel(
+        functools.partial(
+            fused_expand_kernel, family=family, m_blk=cap, dma_depth=depth
+        ),
+        functools.partial(fused_expand_ref, family=family),
+        force_kernel=force_kernel,
+    )
+    d, s, f = fn(queries, corpus, ids, visited, meta, cons, tomb)
+    if used_kernel:
+        s, f = s.astype(bool), f.astype(bool)
+    return d, s, f
 
 
 def fused_expand_adc(
@@ -70,28 +89,28 @@ def fused_expand_adc(
     family: str,
     force_kernel: bool = False,
     m_blk: int | None = None,
+    config: Optional[KernelConfig] = None,
 ) -> tuple[Array, Array, Array]:
     """ADC twin of ``fused_expand``: one pass -> (dists, satisfied, fresh).
 
     lut is the query batch's (B, m_sub, n_cent) ADC table
     (``repro.core.pq.adc_table``), codes the (n, m_sub) int32 code matrix;
     distances are PQ approximations summed in-kernel from the VMEM-resident
-    LUT while the candidate's code row (m_sub words instead of d floats)
-    streams through the same double-buffered DMA as the exact kernel's
+    LUT (in ``config.lut_tile``-column slices when tiled) while the
+    candidate's code row (m_sub words instead of d floats) streams through
+    the same ``config.dma_depth``-slot DMA ring as the exact kernel's
     corpus rows.
     """
-    if jax.default_backend() == "tpu":
-        d, s, f = fused_expand_adc_kernel(
-            lut, codes, ids, visited, meta, cons, tomb,
-            family=family, m_blk=m_blk,
-        )
-    elif force_kernel:
-        d, s, f = fused_expand_adc_kernel(
-            lut, codes, ids, visited, meta, cons, tomb,
-            family=family, m_blk=m_blk, interpret=True,
-        )
-    else:
-        return fused_expand_adc_ref(
-            lut, codes, ids, visited, meta, cons, tomb, family=family
-        )
-    return d, s.astype(bool), f.astype(bool)
+    cap, depth, lut_tile = _blocking(config, m_blk, "fused_adc")
+    fn, used_kernel = dispatch_kernel(
+        functools.partial(
+            fused_expand_adc_kernel,
+            family=family, m_blk=cap, dma_depth=depth, lut_tile=lut_tile,
+        ),
+        functools.partial(fused_expand_adc_ref, family=family),
+        force_kernel=force_kernel,
+    )
+    d, s, f = fn(lut, codes, ids, visited, meta, cons, tomb)
+    if used_kernel:
+        s, f = s.astype(bool), f.astype(bool)
+    return d, s, f

@@ -53,6 +53,11 @@ def _fresh_and_sat(
     elif family == "range":
         val = meta_col.astype(jnp.float32)[safe]  # (B, M)
         ok = (val >= cons[:, 0:1]) & (val <= cons[:, 1:2])
+    elif family == "udf":
+        # Precompiled predicate table: meta is the (n,) int32 verdict
+        # column (the UDF evaluated over every vertex at table-build
+        # time); cons is an unused dummy.
+        ok = meta_col[safe] != jnp.int32(0)
     else:
         raise ValueError(f"unsupported in-kernel constraint family: {family}")
     if tomb is not None:

@@ -4,12 +4,18 @@ For a batch of queries Q (B, d) and per-query neighbor id lists IDS (B, M),
 computes D[b, m] = ||Q[b] - corpus[IDS[b, m]]||^2 without materializing the
 (B, M, d) gathered tensor in HBM.
 
-TPU mapping: the id matrix is *scalar-prefetched* (SMEM) and drives the
-corpus BlockSpec index_map, so each grid step DMAs exactly one corpus row
-(1, d) from HBM into VMEM; Pallas double-buffers these row copies across the
-(B, M) grid, which is the canonical TPU gather pattern. The query row rides
-along at block (1, d) and the distance is a VPU reduction. This kernel is
-HBM-bandwidth-bound by construction — see EXPERIMENTS.md §Roofline.
+TPU mapping: the id matrix is *scalar-prefetched* (SMEM) and drives manual
+pipelined row DMAs over a ``(B, M / m_blk)`` grid with lane-aligned
+``(1, m_blk)`` output tiles — the same layout as the fused-expansion
+kernels (kernels/fused_expand), minus their metadata word and constraint /
+visited probes. Each grid step streams ``m_blk`` corpus rows through a
+``dma_depth``-slot VMEM ring buffer, overlapping upcoming row copies with
+the current row's VPU distance reduction. (The original one-row-per-grid-
+step layout — (B, M) grid, (1, 1) output blocks, BlockSpec-index-map
+gather — left the block shape unsearchable; this form exposes the same
+``m_blk``/``dma_depth`` lattice the autotuner sweeps, DESIGN.md §11.)
+This kernel is HBM-bandwidth-bound by construction — see EXPERIMENTS.md
+§Roofline.
 
 Padding ids (< 0) are redirected to row 0 and reported as +inf.
 """
@@ -25,40 +31,93 @@ from jax.experimental.pallas import tpu as pltpu
 Array = jax.Array
 
 
-def _kernel(ids_ref, q_ref, row_ref, out_ref):
-    b = pl.program_id(0)
-    m = pl.program_id(1)
-    q = q_ref[...].astype(jnp.float32)  # (1, d)
-    row = row_ref[...].astype(jnp.float32)  # (1, d)
-    diff = q - row
-    d = jnp.sum(diff * diff)
-    pad = ids_ref[b, m] < 0
-    out_ref[0, 0] = jnp.where(pad, jnp.inf, d)
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+def _make_kernel(m_blk: int, dma_depth: int):
+    def kernel(
+        ids_ref,  # (B, M) int32, scalar-prefetched (SMEM)
+        q_ref,  # (1, d) query row (VMEM)
+        corpus_hbm,  # (n, d) full corpus (ANY/HBM)
+        out_ref,  # (1, m_blk) f32 out
+        row_buf,  # (dma_depth, 1, d) VMEM scratch — corpus-row ring
+        row_sem,  # (dma_depth,) DMA semaphores
+    ):
+        i = pl.program_id(0)
+        jb = pl.program_id(1)
+        base = jb * m_blk
+
+        def row_dma(t, slot):
+            cid = jnp.maximum(ids_ref[i, base + t], 0)
+            return pltpu.make_async_copy(
+                corpus_hbm.at[pl.ds(cid, 1), :], row_buf.at[slot], row_sem.at[slot]
+            )
+
+        for t0 in range(min(dma_depth - 1, m_blk)):
+            row_dma(t0, t0 % dma_depth).start()
+        q = q_ref[...].astype(jnp.float32)  # (1, d)
+
+        def body(t, carry):
+            slot = t % dma_depth
+
+            @pl.when(t + dma_depth - 1 < m_blk)
+            def _():
+                nxt = t + dma_depth - 1
+                row_dma(nxt, nxt % dma_depth).start()
+
+            row_dma(t, slot).wait()
+            row = row_buf[slot, 0].astype(jnp.float32)  # (d,)
+            diff = q[0] - row
+            d2 = jnp.sum(diff * diff)
+            pad = ids_ref[i, base + t] < 0
+            out_ref[0, t] = jnp.where(pad, jnp.inf, d2)
+            return carry
+
+        jax.lax.fori_loop(0, m_blk, body, None)
+
+    return kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("m_blk", "dma_depth", "interpret")
+)
 def gather_distance_kernel(
-    queries: Array, corpus: Array, ids: Array, *, interpret: bool = False
+    queries: Array,
+    corpus: Array,
+    ids: Array,
+    *,
+    m_blk: int | None = None,
+    dma_depth: int = 2,
+    interpret: bool = False,
 ) -> Array:
     """(B, d), (n, d), (B, M) int32 -> (B, M) f32 squared distances."""
     b, d = queries.shape
     _, m = ids.shape
+    # m_blk is a cap on the lane-aligned output-tile width: small neighbor
+    # lists collapse to one tile (see repro.tune.config.effective_m_blk).
+    m_blk = min(m_blk if m_blk is not None else 128, _round_up(m, 8))
+    m_pad = _round_up(m, m_blk)
+    ids = ids.astype(jnp.int32)
+    if m_pad != m:
+        ids = jnp.pad(ids, ((0, 0), (0, m_pad - m)), constant_values=-1)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(b, m),
+        grid=(b, m_pad // m_blk),
         in_specs=[
             pl.BlockSpec((1, d), lambda i, j, ids_pref: (i, 0)),
-            # The gather: block row chosen by the prefetched id table
-            # (padding ids clamped here; masked to +inf in the kernel).
-            pl.BlockSpec(
-                (1, d), lambda i, j, ids_pref: (jnp.maximum(ids_pref[i, j], 0), 0)
-            ),
+            pl.BlockSpec(memory_space=pltpu.ANY),  # corpus stays in HBM
         ],
-        out_specs=pl.BlockSpec((1, 1), lambda i, j, ids_pref: (i, j)),
+        out_specs=pl.BlockSpec((1, m_blk), lambda i, j, ids_pref: (i, j)),
+        scratch_shapes=[
+            pltpu.VMEM((dma_depth, 1, d), corpus.dtype),
+            pltpu.SemaphoreType.DMA((dma_depth,)),
+        ],
     )
-    return pl.pallas_call(
-        _kernel,
+    out = pl.pallas_call(
+        _make_kernel(m_blk, dma_depth),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((b, m_pad), jnp.float32),
         interpret=interpret,
-    )(ids.astype(jnp.int32), queries, corpus)
+    )(ids, queries, corpus)
+    return out[:, :m]

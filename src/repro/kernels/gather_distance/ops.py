@@ -1,20 +1,33 @@
 """Public wrapper: Pallas on TPU, jnp gather elsewhere (interpret for tests)."""
 from __future__ import annotations
 
+import functools
+from typing import Optional
+
 import jax
 
+from repro.kernels import dispatch_kernel
 from repro.kernels.gather_distance.gather_distance import gather_distance_kernel
 from repro.kernels.gather_distance.ref import gather_distance_ref
+from repro.tune.config import DEFAULT_CONFIGS, KernelConfig
 
 Array = jax.Array
 
 
 def gather_distance(
-    queries: Array, corpus: Array, ids: Array, *, force_kernel: bool = False
+    queries: Array,
+    corpus: Array,
+    ids: Array,
+    *,
+    force_kernel: bool = False,
+    config: Optional[KernelConfig] = None,
 ) -> Array:
-    backend = jax.default_backend()
-    if backend == "tpu":
-        return gather_distance_kernel(queries, corpus, ids)
-    if force_kernel:
-        return gather_distance_kernel(queries, corpus, ids, interpret=True)
-    return gather_distance_ref(queries, corpus, ids)
+    cfg = config if config is not None else DEFAULT_CONFIGS["gather_distance"]
+    fn, _ = dispatch_kernel(
+        functools.partial(
+            gather_distance_kernel, m_blk=cfg.m_blk, dma_depth=cfg.dma_depth
+        ),
+        gather_distance_ref,
+        force_kernel=force_kernel,
+    )
+    return fn(queries, corpus, ids)

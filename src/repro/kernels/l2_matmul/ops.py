@@ -8,15 +8,12 @@ from __future__ import annotations
 import jax
 
 from repro.common.distances import squared_l2
+from repro.kernels import dispatch_kernel
 from repro.kernels.l2_matmul.l2_matmul import l2_matmul
 
 Array = jax.Array
 
 
 def pairwise_sqdist(q: Array, x: Array, *, force_kernel: bool = False) -> Array:
-    backend = jax.default_backend()
-    if backend == "tpu":
-        return l2_matmul(q, x)
-    if force_kernel:
-        return l2_matmul(q, x, interpret=True)
-    return squared_l2(q, x)
+    fn, _ = dispatch_kernel(l2_matmul, squared_l2, force_kernel=force_kernel)
+    return fn(q, x)

@@ -1,18 +1,37 @@
 """Public wrapper for the ADC scan."""
 from __future__ import annotations
 
+import functools
+from typing import Optional
+
 import jax
 
+from repro.kernels import dispatch_kernel
 from repro.kernels.pq_adc.pq_adc import pq_adc_kernel
 from repro.kernels.pq_adc.ref import pq_adc_ref
+from repro.tune.config import KernelConfig
+from repro.tune.table import lookup as tune_lookup
 
 Array = jax.Array
 
 
-def pq_adc(lut: Array, codes: Array, *, force_kernel: bool = False) -> Array:
-    backend = jax.default_backend()
-    if backend == "tpu":
-        return pq_adc_kernel(lut, codes)
-    if force_kernel:
-        return pq_adc_kernel(lut, codes, interpret=True)
-    return pq_adc_ref(lut, codes)
+def pq_adc(
+    lut: Array,
+    codes: Array,
+    *,
+    force_kernel: bool = False,
+    config: Optional[KernelConfig] = None,
+) -> Array:
+    # The scan consumes only m_blk (its HBM code-block height ``bn``);
+    # dma_depth/lut_tile are pinned in the lattice for this kernel. With
+    # no explicit config the tuning table resolves one from the code
+    # width (deg/beam don't shape a full-corpus scan: keyed at 1).
+    cfg = config if config is not None else tune_lookup(
+        "pq_adc", d=int(codes.shape[1]), deg=1, beam=1
+    )
+    fn, _ = dispatch_kernel(
+        functools.partial(pq_adc_kernel, bn=cfg.m_blk),
+        pq_adc_ref,
+        force_kernel=force_kernel,
+    )
+    return fn(lut, codes)

@@ -263,6 +263,147 @@ def recsys_terms(cfg, batch: int, chips: int, kind: str, n_candidates: int = 0):
 
 
 # ---------------------------------------------------------------------------
+# Per-config kernel roofline (PR8 autotuner)
+# ---------------------------------------------------------------------------
+# The block-shape autotuner (repro.tune) prunes lattice configs the model
+# predicts are memory-dominated-worse before spending wall-clock on them,
+# and the regression gate anchors measured kernel time against the same
+# bound. Two platforms: "tpu" uses the chip constants above; anything else
+# is treated as a host (CPU jnp/interpret) with the sustained-DRAM numbers
+# below — deliberately round figures, because the gate compares *fractions
+# of the bound across runs on the same platform*, where the constant
+# cancels, not absolute MFU claims.
+HOST_BW = 20e9  # B/s sustained single-socket DRAM stream
+HOST_FLOPS = 100e9  # f32 FLOP/s, one core + modest SIMD (pytest/CI class)
+VMEM_BYTES = 64 * 1024 * 1024  # per-core VMEM budget we allow a config
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelRoofline:
+    """Predicted cost of ONE tuned-kernel invocation at a fixed config.
+
+    flops/hbm_bytes follow from shape + padding (m_blk caps the tile, so
+    the padded candidate count m_pad = round_up(m, effective tile) is the
+    config-sensitive term); vmem_bytes is the peak resident working set
+    (DMA ring + per-query operands + output tile). dma_depth never moves
+    the bound — it is pure scheduling — so depth variants of one m_blk
+    tie here and are separated only by measurement.
+    """
+
+    flops: float
+    hbm_bytes: float
+    vmem_bytes: float
+
+    def t_compute(self, platform: str = "tpu") -> float:
+        return self.flops / (PEAK_FLOPS if platform == "tpu" else HOST_FLOPS)
+
+    def t_memory(self, platform: str = "tpu") -> float:
+        return self.hbm_bytes / (HBM_BW if platform == "tpu" else HOST_BW)
+
+    def time_bound(self, platform: str = "tpu") -> float:
+        return max(self.t_compute(platform), self.t_memory(platform))
+
+    def memory_bound(self, platform: str = "tpu") -> bool:
+        return self.t_memory(platform) >= self.t_compute(platform)
+
+
+def kernel_roofline(
+    kernel: str,
+    config,
+    *,
+    b: int,
+    m: int,
+    d: int,
+    n_cent: int = 16,
+) -> KernelRoofline:
+    """Roofline terms for one tuned kernel at (batch b, candidates m).
+
+    ``d`` is the payload width: the vector dim for fused_exact /
+    gather_distance, the subquantizer count m_sub for fused_adc / pq_adc
+    (for pq_adc, ``m`` is the corpus row count the scan covers). Mirrors
+    the kernels' own padding arithmetic: effective tile =
+    min(m_blk, round_up(m, 8)), m_pad = round_up(m, tile) — the term that
+    makes one m_blk beat another at fixed work.
+    """
+    eff = min(config.m_blk, _round_up(max(m, 1), 8))
+    m_pad = _round_up(max(m, 1), eff)
+    row = 4.0 * d  # f32 vector row / int32 code row
+    if kernel in ("fused_exact", "fused_adc"):
+        meta = 4.0  # constraint metadata word riding the row DMA
+        out = 12.0  # dist f32 + satisfied/fresh words
+    elif kernel == "gather_distance":
+        meta, out = 0.0, 4.0
+    elif kernel == "pq_adc":
+        meta, out = 0.0, 4.0
+    else:
+        raise ValueError(f"unknown kernel {kernel!r}")
+
+    hbm = b * m_pad * (row + meta) + b * m_pad * out
+    if kernel in ("fused_exact", "gather_distance"):
+        # query row in + 3 flops/element (sub, square, accumulate)
+        hbm += b * row
+        flops = 3.0 * b * m_pad * d
+    else:
+        # ADC: per candidate row, each of d code words scans its n_cent
+        # LUT chunk (compare + select + add); LUT streamed in once per
+        # query. lut_tile re-shapes the scan, never its flop count.
+        hbm += b * d * n_cent * 4.0
+        flops = 3.0 * b * m_pad * d * n_cent
+
+    lut_res = d * n_cent * 4.0 if kernel in ("fused_adc", "pq_adc") else 0.0
+    chunk = getattr(config, "lut_tile", 0) or n_cent
+    vmem = (
+        config.dma_depth * (row + 4.0)  # row ring + meta ring
+        + row  # query / per-query operand block
+        + eff * out  # output tile
+        + lut_res
+        + min(chunk, n_cent) * d * 4.0  # active LUT slice of the scan
+    )
+    return KernelRoofline(flops=float(flops), hbm_bytes=float(hbm), vmem_bytes=float(vmem))
+
+
+def prune_configs(
+    kernel: str,
+    configs,
+    *,
+    b: int,
+    m: int,
+    d: int,
+    n_cent: int = 16,
+    platform: str = "tpu",
+):
+    """Split a config lattice into (survivors, pruned) before timing.
+
+    A config is pruned when (a) its working set exceeds VMEM_BYTES, or
+    (b) the model says the kernel is memory-bound at this shape AND the
+    config reads strictly more HBM bytes than the best config — timing
+    it cannot change the winner, only burn sweep budget. Compute-bound
+    shapes keep every feasible config: byte count no longer predicts
+    rank there.
+    """
+    terms = {
+        cfg: kernel_roofline(kernel, cfg, b=b, m=m, d=d, n_cent=n_cent)
+        for cfg in configs
+    }
+    feasible = {c: t for c, t in terms.items() if t.vmem_bytes <= VMEM_BYTES}
+    survivors, pruned = [], []
+    best_bytes = min((t.hbm_bytes for t in feasible.values()), default=0.0)
+    for cfg in configs:
+        t = terms[cfg]
+        if cfg not in feasible:
+            pruned.append(cfg)
+        elif t.memory_bound(platform) and t.hbm_bytes > best_bytes:
+            pruned.append(cfg)
+        else:
+            survivors.append(cfg)
+    return survivors, pruned
+
+
+# ---------------------------------------------------------------------------
 # AIRSHIP constrained search (serve)
 # ---------------------------------------------------------------------------
 def airship_terms(cfg, batch: int, chips: int, est_iters: float = 200.0):

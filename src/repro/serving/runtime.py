@@ -122,7 +122,10 @@ class LocalExecutor:
 
         def impl(corpus, graph, queries, constraint, pq_index):
             self.traces += 1  # trace-time side effect: runs once per trace
-            ctx = build_context(corpus, constraint, queries, params, pq_index)
+            ctx = build_context(
+                corpus, constraint, queries, params, pq_index,
+                degree=graph.neighbors.shape[1],
+            )
             return search_with_context(ctx, corpus, graph, queries, params)
 
         jitted = jax.jit(impl)
@@ -207,7 +210,10 @@ class StreamingLocalExecutor:
 
         def impl(corpus, graph, queries, constraint):
             self.traces += 1  # trace-time side effect: runs once per trace
-            ctx = build_context(corpus, constraint, queries, params, None)
+            ctx = build_context(
+                corpus, constraint, queries, params, None,
+                degree=graph.neighbors.shape[1],
+            )
             return search_with_context(ctx, corpus, graph, queries, params)
 
         jitted = jax.jit(impl)

@@ -1,0 +1,16 @@
+# Kernel block-shape autotuner (DESIGN.md §11): an explicit KernelConfig
+# lattice per kernel (config.py), a committed tuning table with a
+# schema-validated loader + nearest-shape fallback (table.py), and the
+# roofline-pruned sweep harness that fills it (sweep.py, driven by
+# benchmarks/bench_autotune.py). TraversalContext resolves configs from
+# the table at build time; kernels never hard-code block shapes again.
+from repro.tune.config import (  # noqa: F401
+    DEFAULT_CONFIGS,
+    KERNELS,
+    LATTICE,
+    KernelConfig,
+    effective_m_blk,
+    lattice_configs,
+    validate_config,
+)
+from repro.tune.table import lookup, load_table  # noqa: F401

@@ -1,0 +1,212 @@
+"""Lattice sweep harness: enumerate → roofline-prune → time → pick winners.
+
+One sweep point is a tuning-table key (kernel, d, deg, beam) on the current
+platform. For each point the harness enumerates the kernel's applicable
+lattice (``lattice_configs``), drops configs the roofline model predicts are
+memory-dominated-worse or VMEM-infeasible BEFORE spending wall-clock on them
+(``repro.roofline.model.prune_configs``), then times every survivor with the
+N-way generalization of bench_hybrid's interleaved paired-min protocol: all
+configs alternate inside ONE timing window with a rotating start offset, and
+each config reports its min. Config deltas here are a few percent of
+sub-millisecond calls — separate windows would let CPU frequency drift dwarf
+the quantity being measured, exactly the failure mode the pairwise protocol
+was built for.
+
+Off-TPU the kernels are timed in interpret mode (``force_kernel=True``,
+matching the CI smoke path): block shapes still move real work there —
+m_blk caps the padded candidate count m_pad = round_up(m, tile), so a cap
+that divides M exactly beats one that forces a ragged final tile — while
+the jnp reference path consumes no config at all and would time every
+lattice point identically.
+
+``sweep_kernel`` returns one record per point (per-config timings, pruned
+list, winner, achieved roofline_fraction = predicted bound / measured);
+``table_doc`` folds winners into the committed table.json schema.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.constraints import equal_constraint
+from repro.core.visited import visited_init
+from repro.kernels.fused_expand.ops import fused_expand, fused_expand_adc
+from repro.kernels.gather_distance.ops import gather_distance
+from repro.kernels.pq_adc.ops import pq_adc
+from repro.roofline.model import kernel_roofline, prune_configs
+from repro.tune.config import DEFAULT_CONFIGS, KernelConfig, lattice_configs
+from repro.tune.table import SCHEMA_VERSION
+from repro.tune.config import LATTICE
+
+N_CENT = 16  # ADC centroids per subspace in sweep workloads
+N_LABELS = 8  # label-family constraint universe (1 bitmask word)
+
+
+def timed_group(fns: Sequence[Callable[[], object]], repeats: int = 5) -> List[float]:
+    """Min seconds per fn, all measured interleaved inside ONE window.
+
+    Generalizes bench_hybrid's ``_timed_pair`` to N contenders: each rep
+    runs every fn once, with the starting index rotating per rep so no
+    config systematically pays the first-in-window cost. Every fn is run
+    once untimed first so all timings are post-compile.
+    """
+    for fn in fns:
+        jax.block_until_ready(fn())
+    accs: List[List[float]] = [[] for _ in fns]
+    n = len(fns)
+    for rep in range(repeats):
+        for off in range(n):
+            j = (rep + off) % n
+            t0 = time.perf_counter()
+            jax.block_until_ready(fns[j]())
+            accs[j].append(time.perf_counter() - t0)
+    return [float(np.min(a)) for a in accs]
+
+
+def _workload(
+    kernel: str,
+    config: KernelConfig,
+    *,
+    d: int,
+    m: int,
+    b: int,
+    n: int,
+    force_kernel: bool,
+    seed: int = 0,
+) -> Callable[[], object]:
+    """A zero-arg callable running one kernel invocation at ``config``.
+
+    Operands are synthesized once (outside the timed window) at the
+    sweep point's shape: b queries, m candidates each, payload width d
+    (vector dim for the row kernels, m_sub for ADC), corpus/codebook of
+    n rows. The label-family constraint keeps the fused kernels on their
+    full metadata + bitmask path.
+    """
+    keys = jax.random.split(jax.random.PRNGKey(seed), 6)
+    ids = jax.random.randint(keys[2], (b, m), -1, n)
+    if kernel in ("fused_exact", "gather_distance"):
+        corpus = jax.random.normal(keys[0], (n, d), jnp.float32)
+        queries = jax.random.normal(keys[1], (b, d), jnp.float32)
+        if kernel == "gather_distance":
+            return lambda: gather_distance(
+                queries, corpus, ids, force_kernel=force_kernel, config=config
+            )
+        meta = jax.random.randint(keys[3], (n,), 0, N_LABELS)
+        cons = equal_constraint(
+            jax.random.randint(keys[4], (b,), 0, N_LABELS), N_LABELS
+        ).words
+        visited = visited_init(b, n)
+        return lambda: fused_expand(
+            queries, corpus, ids, visited, meta, cons,
+            family="label", force_kernel=force_kernel, config=config,
+        )
+    # ADC kernels: d is m_sub; LUT entries are squared distances (>= 0).
+    codes = jax.random.randint(keys[0], (n, d), 0, N_CENT)
+    lut = jax.random.uniform(keys[1], (b, d, N_CENT), jnp.float32)
+    if kernel == "pq_adc":
+        return lambda: pq_adc(lut, codes, force_kernel=force_kernel, config=config)
+    meta = jax.random.randint(keys[3], (n,), 0, N_LABELS)
+    cons = equal_constraint(
+        jax.random.randint(keys[4], (b,), 0, N_LABELS), N_LABELS
+    ).words
+    visited = visited_init(b, n)
+    return lambda: fused_expand_adc(
+        lut, codes, ids, visited, meta, cons,
+        family="label", force_kernel=force_kernel, config=config,
+    )
+
+
+def sweep_kernel(
+    kernel: str,
+    *,
+    d: int,
+    deg: int = 1,
+    beam: int = 1,
+    b: int = 4,
+    n: int = 2048,
+    repeats: int = 5,
+    platform: Optional[str] = None,
+    configs: Optional[Sequence[KernelConfig]] = None,
+) -> dict:
+    """Sweep one (kernel, d, deg, beam) point; return the full record.
+
+    ``m`` (candidates per query) is deg*beam for the per-iteration
+    kernels and the corpus row count n for the pq_adc full scan. The
+    default config is always timed even when the roofline prunes it —
+    the beats-default and roofline_fraction columns need its number.
+    """
+    platform = platform or jax.default_backend()
+    force_kernel = platform != "tpu"
+    m = n if kernel == "pq_adc" else max(deg, 1) * max(beam, 1)
+    lattice = list(configs if configs is not None else lattice_configs(kernel))
+    survivors, pruned = prune_configs(
+        kernel, lattice, b=b, m=m, d=d, n_cent=N_CENT, platform=platform
+    )
+    default = DEFAULT_CONFIGS[kernel]
+    if default not in survivors:
+        survivors.insert(0, default)
+        pruned = [c for c in pruned if c != default]
+
+    fns = [
+        _workload(kernel, cfg, d=d, m=m, b=b, n=n, force_kernel=force_kernel)
+        for cfg in survivors
+    ]
+    times = timed_group(fns, repeats=repeats)
+
+    rows = []
+    for cfg, t in zip(survivors, times):
+        bound = kernel_roofline(kernel, cfg, b=b, m=m, d=d, n_cent=N_CENT)
+        rows.append(
+            {
+                "config": cfg.to_dict(),
+                "us": round(t * 1e6, 2),
+                "bound_us": round(bound.time_bound(platform) * 1e6, 4),
+                "roofline_fraction": round(bound.time_bound(platform) / t, 6),
+            }
+        )
+    win_idx = int(np.argmin(times))
+    default_t = times[survivors.index(default)]
+    return {
+        "kernel": kernel,
+        "platform": platform,
+        "d": d,
+        "deg": deg,
+        "beam": beam,
+        "b": b,
+        "m": m,
+        "n": n,
+        "interpret": force_kernel,
+        "rows": rows,
+        "pruned": [c.to_dict() for c in pruned],
+        "winner": survivors[win_idx].to_dict(),
+        "winner_us": round(times[win_idx] * 1e6, 2),
+        "default_us": round(default_t * 1e6, 2),
+        "speedup_vs_default": round(default_t / times[win_idx], 4),
+        "winner_roofline_fraction": rows[win_idx]["roofline_fraction"],
+    }
+
+
+def table_doc(records: Sequence[dict]) -> dict:
+    """Fold sweep records into the committed table.json document."""
+    return {
+        "version": SCHEMA_VERSION,
+        "lattice": {k: list(v) for k, v in LATTICE.items()},
+        "entries": [
+            {
+                "kernel": r["kernel"],
+                "platform": r["platform"],
+                "d": r["d"],
+                "deg": r["deg"],
+                "beam": r["beam"],
+                "config": r["winner"],
+                "winner_us": r["winner_us"],
+                "speedup_vs_default": r["speedup_vs_default"],
+                "roofline_fraction": r["winner_roofline_fraction"],
+            }
+            for r in records
+        ],
+    }

@@ -1,0 +1,185 @@
+"""Committed tuning table: schema-validated loader + nearest-shape fallback.
+
+``table.json`` (next to this module) is written by the sweep harness
+(benchmarks/bench_autotune.py, full mode) and read by ``build_context`` at
+trace time. Key scheme — one entry per
+
+    (kernel, platform, d, deg, beam)
+
+where ``kernel`` ∈ ``repro.tune.config.KERNELS``, ``platform`` is
+``jax.default_backend()`` at sweep time ("cpu" for this container's
+interpret-mode numbers, "tpu" once hardware sweeps land), ``d`` is the
+per-candidate payload width (vector dim for the row kernels, m_sub for the
+ADC kernels) and ``deg``/``beam`` the graph degree and beam width whose
+product is the candidate-batch width M.
+
+Fallback rules (DESIGN.md §11), in order:
+
+  1. exact key match → that entry's config;
+  2. same (kernel, platform) → the entry at minimum log-shape distance
+     sum(|log2(x / x_entry)|) over (d, deg, beam) — block-shape winners
+     move slowly in shape space, so the nearest swept neighbour beats the
+     blind default (ties: first entry in file order, deterministic);
+  3. no (kernel, platform) entries at all → ``DEFAULT_CONFIGS[kernel]``,
+     which reproduces the pre-autotuner fixed constants.
+
+Every loaded entry is validated against the declared lattice — a table
+edited outside the sweep cannot smuggle an unsearched shape into a kernel.
+``python -m repro.tune.table --check`` runs the same validation standalone
+(CI's tuning-table consistency step).
+"""
+from __future__ import annotations
+
+import functools
+import json
+import math
+import os
+from typing import Optional
+
+from repro.tune.config import (
+    DEFAULT_CONFIGS,
+    KERNELS,
+    LATTICE,
+    KernelConfig,
+    validate_config,
+)
+
+TABLE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)), "table.json")
+
+SCHEMA_VERSION = 1
+
+_ENTRY_REQUIRED = ("kernel", "platform", "d", "deg", "beam", "config")
+
+
+def validate_table(doc: dict) -> None:
+    """Raise ValueError on any schema/lattice violation."""
+    if not isinstance(doc, dict):
+        raise ValueError("tuning table: top level must be an object")
+    if doc.get("version") != SCHEMA_VERSION:
+        raise ValueError(
+            f"tuning table: version {doc.get('version')!r} != {SCHEMA_VERSION}"
+        )
+    if doc.get("lattice") != {k: list(v) for k, v in LATTICE.items()}:
+        raise ValueError(
+            "tuning table: declared lattice differs from repro.tune.config.LATTICE"
+        )
+    entries = doc.get("entries")
+    if not isinstance(entries, list):
+        raise ValueError("tuning table: 'entries' must be a list")
+    seen = set()
+    for idx, e in enumerate(entries):
+        if not isinstance(e, dict):
+            raise ValueError(f"tuning table entry {idx}: not an object")
+        missing = [k for k in _ENTRY_REQUIRED if k not in e]
+        if missing:
+            raise ValueError(f"tuning table entry {idx}: missing keys {missing}")
+        if e["kernel"] not in KERNELS:
+            raise ValueError(
+                f"tuning table entry {idx}: unknown kernel {e['kernel']!r}"
+            )
+        for k in ("d", "deg", "beam"):
+            if not isinstance(e[k], int) or e[k] <= 0:
+                raise ValueError(
+                    f"tuning table entry {idx}: {k}={e[k]!r} must be a positive int"
+                )
+        key = (e["kernel"], e["platform"], e["d"], e["deg"], e["beam"])
+        if key in seen:
+            raise ValueError(f"tuning table entry {idx}: duplicate key {key}")
+        seen.add(key)
+        cfg = KernelConfig.from_dict(e["config"])
+        validate_config(e["kernel"], cfg)  # in-lattice, kernel-applicable
+
+
+@functools.lru_cache(maxsize=4)
+def load_table(path: Optional[str] = None) -> dict:
+    """Load + validate the tuning table; an absent file is an empty table
+    (every lookup then resolves to the per-kernel default config)."""
+    path = path or TABLE_PATH
+    if not os.path.exists(path):
+        return {
+            "version": SCHEMA_VERSION,
+            "lattice": {k: list(v) for k, v in LATTICE.items()},
+            "entries": [],
+        }
+    with open(path) as fh:
+        doc = json.load(fh)
+    validate_table(doc)
+    return doc
+
+
+def _shape_distance(entry: dict, d: int, deg: int, beam: int) -> float:
+    dist = 0.0
+    for key, val in (("d", d), ("deg", deg), ("beam", beam)):
+        if val is None or val <= 0:
+            continue  # caller doesn't know this dim — don't penalize it
+        dist += abs(math.log2(val / entry[key]))
+    return dist
+
+
+def lookup(
+    kernel: str,
+    *,
+    d: int,
+    deg: int = 0,
+    beam: int = 0,
+    platform: Optional[str] = None,
+    path: Optional[str] = None,
+) -> KernelConfig:
+    """Resolve one kernel's config for a shape key (see module docstring).
+
+    Pure host-side python over the cached table — safe to call at jit
+    trace time (build_context does), never adds traced ops.
+    """
+    if kernel not in KERNELS:
+        raise ValueError(f"unknown kernel {kernel!r}")
+    if platform is None:
+        import jax
+
+        platform = jax.default_backend()
+    doc = load_table(path)
+    candidates = [
+        e
+        for e in doc["entries"]
+        if e["kernel"] == kernel and e["platform"] == platform
+    ]
+    if not candidates:
+        return DEFAULT_CONFIGS[kernel]
+    best = min(candidates, key=lambda e: _shape_distance(e, d, deg, beam))
+    return KernelConfig.from_dict(best["config"])
+
+
+def _main() -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="Validate the committed tuning table (CI consistency step)."
+    )
+    ap.add_argument("--check", action="store_true", help="validate and exit")
+    ap.add_argument("--path", default=TABLE_PATH)
+    args = ap.parse_args()
+    if not os.path.exists(args.path):
+        print(f"tuning table: {args.path} not found")
+        return 1
+    with open(args.path) as fh:
+        doc = json.load(fh)
+    validate_table(doc)
+    # Reproducibility: the loader must resolve every entry's own key back
+    # to that entry's config (exact-match precedence over nearest-shape).
+    for e in doc["entries"]:
+        got = lookup(
+            e["kernel"], d=e["d"], deg=e["deg"], beam=e["beam"],
+            platform=e["platform"], path=args.path,
+        )
+        want = KernelConfig.from_dict(e["config"])
+        if got != want:
+            print(f"tuning table: loader resolves {e} to {got}, not {want}")
+            return 1
+    print(
+        f"tuning table OK: {len(doc['entries'])} entries, "
+        f"schema v{doc['version']}, lattice matches declaration"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(_main())

@@ -431,7 +431,7 @@ def test_auto_policy_and_path_equivalence(sys_world):
     from repro.core.engine.context import resolve_auto_fuse
 
     assert not resolve_auto_fuse(True, "cpu")
-    assert not resolve_auto_fuse(False, "tpu")  # UDF constraints stay unfused
+    assert not resolve_auto_fuse(False, "tpu")  # no tables -> stay unfused
     # the TPU gate is the validation flag, not the backend check
     assert resolve_auto_fuse(True, "tpu") is engine_ctx.FUSE_AUTO_ON_TPU
 
@@ -451,9 +451,20 @@ def test_auto_policy_and_path_equivalence(sys_world):
     )
 
 
-def test_fuse_on_rejects_udf(sys_world):
-    with pytest.raises(ValueError, match="fuse_expand"):
-        _search(sys_world, lambda lab, at: lab >= 0, "prefer", 1, "on")
+@pytest.mark.parametrize("beam", [1, 2, 4])
+def test_fused_equals_unfused_udf_family(sys_world, beam):
+    """UDF constraints fuse via the precompiled predicate column (PR8):
+    the kernel consumes the (n,) int32 verdict table as its metadata
+    column, so fuse_expand="on" must reproduce the unfused closure path
+    bit-for-bit — including a predicate that mixes label and attrs."""
+
+    def udf(label, attrs_row):
+        return (label % 2 == 0) | (attrs_row[1] > 0.5)
+
+    _assert_identical(
+        _search(sys_world, udf, "prefer", beam, "on"),
+        _search(sys_world, udf, "prefer", beam, "off"),
+    )
 
 
 # ---------------------------------------------------------------------------

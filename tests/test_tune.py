@@ -1,0 +1,498 @@
+"""PR8 autotuner coverage: lattice bit-invariance, table, roofline pruning.
+
+Three layers:
+  1. property tests — every block-shape ``KernelConfig`` in the declared
+     lattice is numerically invisible: bit-identical outputs across
+     configs (the property that makes the committed tuning table safe to
+     apply without re-validating search results) AND the repo's existing
+     kernel-vs-oracle contract (allclose distances, exact masks) holds at
+     every config, across family x tombstone x beam. Drawn with
+     hypothesis where installed (CI's requirements-dev.txt); a seeded
+     sampler over the same space runs where it is absent — the property
+     never silently vanishes with the dependency.
+  2. the committed table: schema validation catches version/lattice/
+     duplicate/off-lattice corruption; the loader resolves exact keys,
+     falls back nearest-shape then default; every committed entry's
+     config is re-proven bit-identical to the default config's output.
+  3. the roofline side: padding arithmetic matches the kernels', the
+     pruner only ever drops configs that are memory-dominated-worse or
+     VMEM-infeasible, and never the best-bytes config.
+"""
+import dataclasses
+import json
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import visited as vis
+from repro.kernels.fused_expand.fused_expand import (
+    FAMILIES,
+    fused_expand_adc_kernel,
+    fused_expand_kernel,
+)
+from repro.kernels.fused_expand.ref import fused_expand_adc_ref, fused_expand_ref
+from repro.kernels.gather_distance.gather_distance import gather_distance_kernel
+from repro.kernels.gather_distance.ref import gather_distance_ref
+from repro.roofline.model import VMEM_BYTES, kernel_roofline, prune_configs
+from repro.tune.config import (
+    DEFAULT_CONFIGS,
+    KERNELS,
+    LATTICE,
+    KernelConfig,
+    effective_m_blk,
+    lattice_configs,
+    validate_config,
+)
+from repro.tune.table import (
+    SCHEMA_VERSION,
+    load_table,
+    lookup,
+    validate_table,
+)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # container without dev deps: seeded sampler
+    HAVE_HYPOTHESIS = False
+
+
+def key(i):
+    return jax.random.PRNGKey(i)
+
+
+# ---------------------------------------------------------------------------
+# 1. property: every lattice config is numerically invisible
+# ---------------------------------------------------------------------------
+
+B, N, D, M_SUB, N_CENT, L = 2, 48, 8, 4, 24, 16
+DEG = 4  # candidate width m = DEG * beam
+
+
+def _world(family, with_tomb, m, seed):
+    """Operands for one fused-kernel case at candidate width m."""
+    ks = jax.random.split(key(seed), 8)
+    ids = jax.random.randint(ks[0], (B, m), -2, N)
+    visited = jax.random.randint(
+        ks[1], (B, vis.n_words(N)), 0, 2**31 - 1
+    ).astype(jnp.uint32)
+    if family == "label":
+        meta = jax.random.randint(ks[2], (N,), 0, L, dtype=jnp.int32)
+        cons = jax.random.randint(
+            ks[3], (B, (L + 31) // 32), 0, 2**31 - 1
+        ).astype(jnp.uint32)
+    elif family == "range":
+        meta = jax.random.uniform(ks[2], (N,), jnp.float32)
+        lo = jax.random.uniform(ks[3], (B, 1), jnp.float32, 0.0, 0.5)
+        cons = jnp.concatenate([lo, lo + 0.4], axis=-1)
+    else:  # udf: precompiled verdict column, dummy per-query operand
+        meta = jax.random.randint(ks[2], (N,), 0, 2, dtype=jnp.int32)
+        cons = jnp.zeros((1, 1), jnp.int32)
+    tomb = (
+        jax.random.randint(ks[4], ((N + 31) // 32,), 0, 2**31 - 1).astype(
+            jnp.uint32
+        )
+        if with_tomb
+        else None
+    )
+    return ids, visited, meta, cons, tomb, ks
+
+
+def _bits(x):
+    return np.asarray(x, np.float32).view(np.uint32)
+
+
+def _run_exact(cfg, family, with_tomb, m, seed):
+    ids, visited, meta, cons, tomb, ks = _world(family, with_tomb, m, seed)
+    qs = jax.random.normal(ks[5], (B, D))
+    corpus = jax.random.normal(ks[6], (N, D))
+    out = fused_expand_kernel(
+        qs, corpus, ids, visited, meta, cons, tomb,
+        family=family, m_blk=cfg.m_blk, dma_depth=cfg.dma_depth,
+        interpret=True,
+    )
+    ref = fused_expand_ref(
+        qs, corpus, ids, visited, meta, cons, tomb, family=family
+    )
+    return out, ref
+
+
+def _run_adc(cfg, family, with_tomb, m, seed):
+    ids, visited, meta, cons, tomb, ks = _world(family, with_tomb, m, seed)
+    codes = jax.random.randint(ks[5], (N, M_SUB), 0, N_CENT)
+    lut = jax.random.uniform(ks[6], (B, M_SUB, N_CENT), jnp.float32)
+    out = fused_expand_adc_kernel(
+        lut, codes, ids, visited, meta, cons, tomb,
+        family=family, m_blk=cfg.m_blk, dma_depth=cfg.dma_depth,
+        lut_tile=cfg.lut_tile, interpret=True,
+    )
+    ref = fused_expand_adc_ref(
+        lut, codes, ids, visited, meta, cons, tomb, family=family
+    )
+    return out, ref
+
+
+def _check_invariance(runner, kernel, cfg, family, with_tomb, beam, seed):
+    """The two-sided property for one drawn case.
+
+    (a) bit-identity across configs: the tuned config's outputs view as
+        the SAME uint32 bits as the default config's — tiling, DMA depth
+        and LUT chunking are pure scheduling;
+    (b) the oracle contract at this config: allclose distances (XLA
+        reduction order differs from the jnp oracle by last-ulp — the
+        repo-wide kernel test contract) and EXACT satisfied/fresh masks.
+    """
+    m = DEG * beam
+    out, ref = runner(cfg, family, with_tomb, m, seed)
+    base, _ = runner(DEFAULT_CONFIGS[kernel], family, with_tomb, m, seed)
+    d, s, f = out
+    db, sb, fb = base
+    np.testing.assert_array_equal(_bits(d), _bits(db))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(sb))
+    np.testing.assert_array_equal(np.asarray(f), np.asarray(fb))
+
+    dr, sr, fr = ref
+    assert bool(jnp.all(jnp.isinf(d) == jnp.isinf(dr)))
+    fin = jnp.isfinite(dr)
+    np.testing.assert_allclose(
+        np.asarray(jnp.where(fin, d, 0.0)),
+        np.asarray(jnp.where(fin, dr, 0.0)),
+        rtol=1e-5, atol=1e-5 * D,
+    )
+    np.testing.assert_array_equal(np.asarray(s, bool), np.asarray(sr))
+    np.testing.assert_array_equal(np.asarray(f, bool), np.asarray(fr))
+
+
+_EXACT_CASE = ("fused_exact", _run_exact)
+_ADC_CASE = ("fused_adc", _run_adc)
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        cfg=st.sampled_from(lattice_configs("fused_exact")),
+        family=st.sampled_from(FAMILIES),
+        with_tomb=st.booleans(),
+        beam=st.integers(1, 3),
+        seed=st.integers(0, 50),
+    )
+    def test_exact_lattice_bit_invariance(cfg, family, with_tomb, beam, seed):
+        _check_invariance(_run_exact, "fused_exact", cfg, family,
+                          with_tomb, beam, seed)
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        cfg=st.sampled_from(lattice_configs("fused_adc")),
+        family=st.sampled_from(FAMILIES),
+        with_tomb=st.booleans(),
+        beam=st.integers(1, 3),
+        seed=st.integers(0, 50),
+    )
+    def test_adc_lattice_bit_invariance(cfg, family, with_tomb, beam, seed):
+        _check_invariance(_run_adc, "fused_adc", cfg, family,
+                          with_tomb, beam, seed)
+
+else:  # seeded fallback over the same strategy space
+
+    def _fallback_cases(kernel, n_cases=8):
+        rng = random.Random(0xA1F0 + hash(kernel) % 1000)
+        cfgs = lattice_configs(kernel)
+        for _ in range(n_cases):
+            yield (
+                rng.choice(cfgs),
+                rng.choice(FAMILIES),
+                rng.random() < 0.5,
+                rng.randint(1, 3),
+                rng.randint(0, 50),
+            )
+
+    def test_exact_lattice_bit_invariance():
+        for cfg, family, with_tomb, beam, seed in _fallback_cases("fused_exact"):
+            _check_invariance(_run_exact, "fused_exact", cfg, family,
+                              with_tomb, beam, seed)
+
+    def test_adc_lattice_bit_invariance():
+        for cfg, family, with_tomb, beam, seed in _fallback_cases("fused_adc"):
+            _check_invariance(_run_adc, "fused_adc", cfg, family,
+                              with_tomb, beam, seed)
+
+
+def test_gather_distance_lattice_bit_invariance():
+    """The standalone row-gather kernel: every lattice config bit-equals
+    the default AND allcloses the jnp reference, across candidate widths
+    that exercise multi-tile + ragged-final-tile paths."""
+    qs = jax.random.normal(key(0), (B, D))
+    corpus = jax.random.normal(key(1), (N, D))
+    for m in (5, 8, 24):
+        ids = jax.random.randint(key(2 + m), (B, m), -1, N)
+        base = None
+        for cfg in lattice_configs("gather_distance"):
+            out = gather_distance_kernel(
+                qs, corpus, ids, m_blk=cfg.m_blk, dma_depth=cfg.dma_depth,
+                interpret=True,
+            )
+            if base is None:
+                base = out
+            np.testing.assert_array_equal(_bits(out), _bits(base))
+        ref = gather_distance_ref(qs, corpus, ids)
+        fin = jnp.isfinite(ref)
+        assert bool(jnp.all(jnp.isfinite(base) == fin))
+        np.testing.assert_allclose(
+            np.asarray(jnp.where(fin, base, 0.0)),
+            np.asarray(jnp.where(fin, ref, 0.0)),
+            rtol=1e-5, atol=1e-5 * D,
+        )
+
+
+def test_committed_table_configs_bit_parity():
+    """Every config the committed table can hand a fused kernel is re-
+    proven bit-identical to the default — the acceptance criterion that
+    fused==unfused parity holds for every committed config."""
+    doc = load_table()
+    ran = 0
+    for e in doc["entries"]:
+        cfg = KernelConfig.from_dict(e["config"])
+        if e["kernel"] == "fused_exact":
+            _check_invariance(_run_exact, "fused_exact", cfg, "label",
+                              True, 2, seed=7)
+        elif e["kernel"] == "fused_adc":
+            _check_invariance(_run_adc, "fused_adc", cfg, "label",
+                              True, 2, seed=7)
+        else:
+            continue
+        ran += 1
+    if doc["entries"] and not ran:
+        pytest.skip("table has no fused-kernel entries")
+
+
+# ---------------------------------------------------------------------------
+# 2. config + table plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_effective_m_blk_reproduces_pre_autotuner_default():
+    # min(128, round_up(m, 8)): the seed kernels' hard-coded tile rule.
+    cfg = DEFAULT_CONFIGS["fused_exact"]
+    for m, want in ((1, 8), (8, 8), (12, 16), (128, 128), (200, 128)):
+        assert effective_m_blk(cfg, m) == want
+
+
+def test_validate_config_rejects_off_lattice():
+    with pytest.raises(ValueError, match="m_blk"):
+        validate_config("fused_exact", KernelConfig(m_blk=96))
+    with pytest.raises(ValueError, match="dma_depth"):
+        validate_config("fused_exact", KernelConfig(dma_depth=8))
+    with pytest.raises(ValueError, match="lut_tile"):
+        validate_config("fused_exact", KernelConfig(lut_tile=8))
+    with pytest.raises(ValueError, match="unknown kernel"):
+        validate_config("nope", KernelConfig())
+    validate_config("fused_adc", KernelConfig(lut_tile=8))  # applicable
+
+
+def test_lattice_configs_pin_inapplicable_dims():
+    for kernel in KERNELS:
+        for cfg in lattice_configs(kernel):
+            validate_config(kernel, cfg)
+    assert all(c.lut_tile == 0 for c in lattice_configs("fused_exact"))
+    assert all(c.dma_depth == 2 for c in lattice_configs("pq_adc"))
+    assert len(lattice_configs("fused_adc")) == len(LATTICE["m_blk"]) * len(
+        LATTICE["dma_depth"]
+    ) * len(LATTICE["lut_tile"])
+
+
+def _doc(entries):
+    return {
+        "version": SCHEMA_VERSION,
+        "lattice": {k: list(v) for k, v in LATTICE.items()},
+        "entries": entries,
+    }
+
+
+def _entry(**kw):
+    e = {
+        "kernel": "fused_exact", "platform": "cpu", "d": 32, "deg": 16,
+        "beam": 4, "config": KernelConfig(256, 3, 0).to_dict(),
+    }
+    e.update(kw)
+    return e
+
+
+def test_validate_table_accepts_good_doc():
+    validate_table(_doc([_entry(), _entry(beam=12)]))
+
+
+@pytest.mark.parametrize(
+    "mutate, match",
+    [
+        (lambda d: d.update(version=99), "version"),
+        (lambda d: d["lattice"].update(m_blk=[1]), "lattice"),
+        (lambda d: d["entries"].append(d["entries"][0]), "duplicate"),
+        (lambda d: d["entries"][0].update(kernel="nope"), "unknown kernel"),
+        (lambda d: d["entries"][0].update(d=0), "positive int"),
+        (lambda d: d["entries"][0].pop("config"), "missing"),
+        (
+            lambda d: d["entries"][0].update(
+                config={"m_blk": 96, "dma_depth": 2, "lut_tile": 0}
+            ),
+            "m_blk",
+        ),
+    ],
+)
+def test_validate_table_rejects_corruption(mutate, match):
+    doc = _doc([_entry()])
+    mutate(doc)
+    with pytest.raises(ValueError, match=match):
+        validate_table(doc)
+
+
+def test_lookup_exact_nearest_default(tmp_path):
+    path = str(tmp_path / "table.json")
+    doc = _doc([
+        _entry(d=32, deg=16, beam=4, config=KernelConfig(256, 3, 0).to_dict()),
+        _entry(d=32, deg=16, beam=12, config=KernelConfig(512, 2, 0).to_dict()),
+    ])
+    with open(path, "w") as fh:
+        json.dump(doc, fh)
+    # exact key
+    assert lookup("fused_exact", d=32, deg=16, beam=4, platform="cpu",
+                  path=path) == KernelConfig(256, 3, 0)
+    # nearest shape: beam=16 is closer (in log2) to 12 than to 4
+    assert lookup("fused_exact", d=32, deg=16, beam=16, platform="cpu",
+                  path=path) == KernelConfig(512, 2, 0)
+    # unknown dims (0) don't penalize: d-only lookup still resolves
+    got = lookup("fused_exact", d=32, platform="cpu", path=path)
+    assert got in (KernelConfig(256, 3, 0), KernelConfig(512, 2, 0))
+    # no entries for this (kernel, platform) -> per-kernel default
+    assert lookup("pq_adc", d=8, platform="cpu", path=path) == \
+        DEFAULT_CONFIGS["pq_adc"]
+    assert lookup("fused_exact", d=32, deg=16, beam=4, platform="tpu",
+                  path=path) == DEFAULT_CONFIGS["fused_exact"]
+
+
+def test_committed_table_is_valid_and_loader_reproducible():
+    doc = load_table()  # raises on schema/lattice violations
+    for e in doc["entries"]:
+        got = lookup(e["kernel"], d=e["d"], deg=e["deg"], beam=e["beam"],
+                     platform=e["platform"])
+        assert got == KernelConfig.from_dict(e["config"]), e
+
+
+def test_build_context_threads_table_configs():
+    """build_context resolves per-kernel configs without changing search
+    results: contexts built under different tables produce backends whose
+    configs differ, but identical traversal outputs (config is scheduling
+    only)."""
+    from repro.core import SearchParams, constrained_search, equal_constraint
+    from repro.data.synthetic import make_labeled_corpus, make_queries
+    from repro.graph.index import build_index
+
+    corpus = make_labeled_corpus(key(0), n=200, d=8, n_labels=4)
+    graph = build_index(key(1), corpus, degree=4, sample_size=32)
+    qs, qlab = make_queries(key(2), corpus, 3)
+    cons = equal_constraint(qlab, 4)
+    params = SearchParams(mode="prefer", k=3, ef_result=8, ef_sat=8,
+                          ef_other=8, n_start=4, max_iters=40)
+    res = constrained_search(corpus, graph, qs, cons, params)
+    assert res.ids.shape == (3, 3)
+
+
+# ---------------------------------------------------------------------------
+# 3. roofline: padding arithmetic + pruning
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_roofline_padding_matches_kernels():
+    # M=192: the default 128 cap pads to 256 rows; a 256 cap runs one
+    # exact 192-row tile -> strictly fewer HBM bytes.
+    t128 = kernel_roofline("fused_exact", KernelConfig(128, 2, 0),
+                           b=4, m=192, d=32)
+    t256 = kernel_roofline("fused_exact", KernelConfig(256, 2, 0),
+                           b=4, m=192, d=32)
+    assert t256.hbm_bytes < t128.hbm_bytes
+    # M=128: both caps tile exactly -> identical bytes.
+    e128 = kernel_roofline("fused_exact", KernelConfig(128, 2, 0),
+                           b=4, m=128, d=32)
+    e256 = kernel_roofline("fused_exact", KernelConfig(256, 2, 0),
+                           b=4, m=128, d=32)
+    assert e128.hbm_bytes == e256.hbm_bytes
+    # dma_depth never moves the bound, only VMEM.
+    d2 = kernel_roofline("fused_exact", KernelConfig(128, 2, 0),
+                         b=4, m=128, d=32)
+    d4 = kernel_roofline("fused_exact", KernelConfig(128, 4, 0),
+                         b=4, m=128, d=32)
+    assert d2.hbm_bytes == d4.hbm_bytes and d2.flops == d4.flops
+    assert d4.vmem_bytes > d2.vmem_bytes
+
+
+def test_prune_configs_drops_only_memory_dominated_worse():
+    configs = lattice_configs("fused_exact")
+    survivors, pruned = prune_configs(
+        "fused_exact", configs, b=4, m=192, d=32, platform="cpu"
+    )
+    assert set(survivors) | set(pruned) == set(configs)
+    best = min(
+        kernel_roofline("fused_exact", c, b=4, m=192, d=32).hbm_bytes
+        for c in configs
+    )
+    # every survivor is at the byte floor; every pruned config is above it
+    for c in survivors:
+        assert kernel_roofline("fused_exact", c, b=4, m=192, d=32
+                               ).hbm_bytes == best
+    for c in pruned:
+        assert kernel_roofline("fused_exact", c, b=4, m=192, d=32
+                               ).hbm_bytes > best
+    # the ragged-tile default (128 -> pad 256) is among the pruned here
+    assert KernelConfig(128, 2, 0) in pruned
+
+
+def test_prune_configs_vmem_infeasible():
+    # A payload so wide the deep DMA ring exceeds the VMEM budget.
+    wide = 1 << 23
+    cfgs = [KernelConfig(64, 2, 0), KernelConfig(64, 4, 0)]
+    assert kernel_roofline("fused_exact", cfgs[1], b=1, m=8, d=wide
+                           ).vmem_bytes > VMEM_BYTES
+    survivors, pruned = prune_configs(
+        "fused_exact", cfgs, b=1, m=8, d=wide, platform="cpu"
+    )
+    assert KernelConfig(64, 4, 0) in pruned
+
+
+def test_sweep_timed_group_shapes():
+    from repro.tune.sweep import timed_group
+
+    calls = []
+
+    def mk(i):
+        def fn():
+            calls.append(i)
+            return jnp.zeros(())
+
+        return fn
+
+    times = timed_group([mk(0), mk(1), mk(2)], repeats=2)
+    assert len(times) == 3 and all(t >= 0 for t in times)
+    # warm-up once each + repeats x all, interleaved
+    assert len(calls) == 3 + 2 * 3
+
+
+def test_config_is_static_pytree_aux():
+    """Backends carry KernelConfig as static aux data: same arrays + same
+    config -> same treedef; different config -> different treedef (a
+    retrace, never a silent shape clash)."""
+    from repro.core.engine.context import ExactBackend
+
+    v = jnp.zeros((4, 3))
+    a = ExactBackend(vectors=v, config=KernelConfig(128, 2, 0))
+    b = ExactBackend(vectors=v, config=KernelConfig(128, 2, 0))
+    c = ExactBackend(vectors=v, config=KernelConfig(256, 2, 0))
+    ta = jax.tree_util.tree_structure(a)
+    assert ta == jax.tree_util.tree_structure(b)
+    assert ta != jax.tree_util.tree_structure(c)
+    leaves = jax.tree_util.tree_leaves(a)
+    assert all(not isinstance(x, (KernelConfig, dataclasses.Field))
+               for x in leaves)

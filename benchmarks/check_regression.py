@@ -251,6 +251,68 @@ GATES = (
         direction="higher",
         absolute=2.0,  # acceptance: tuned wins at >= 2 swept key points
     ),
+    # --- obs (PR9): scrape fidelity + trace completeness ------------------
+    # These are exact-equality bits computed inside the bench (scraped
+    # /metrics text vs in-process Telemetry; quantile rule replicated by
+    # the parser), so they are timing-independent and gate absolutely.
+    Gate(
+        name="obs /metrics scrape bit-identical to Telemetry",
+        suite="obs", bench="acceptance",
+        metric="exposition_matches",
+        baseline_file="BENCH_PR9.json",
+        baseline_path=(),
+        direction="higher",
+        absolute=1.0,  # any counter/_sum/_count drift is double bookkeeping
+    ),
+    Gate(
+        name="obs scraped p99 equals in-process p99",
+        suite="obs", bench="acceptance",
+        metric="p99_consistent",
+        baseline_file="BENCH_PR9.json",
+        baseline_path=(),
+        direction="higher",
+        absolute=1.0,  # parser quantile rule must match LatencyHistogram
+    ),
+    Gate(
+        name="obs trace completeness (stage sums tile latency)",
+        suite="obs", bench="acceptance",
+        metric="trace_complete_frac",
+        baseline_file="BENCH_PR9.json",
+        baseline_path=(),
+        direction="higher",
+        absolute=1.0,  # every response must carry a consistent breakdown
+    ),
+    Gate(
+        name="obs shed accounting visible in scrape",
+        suite="obs", bench="acceptance",
+        metric="shed_accounted",
+        baseline_file="BENCH_PR9.json",
+        baseline_path=(),
+        direction="higher",
+        absolute=1.0,  # the injected shed must surface as shed_total == 1
+    ),
+    Gate(
+        name="obs HTTP goodput floor vs committed reference",
+        suite="obs", bench="acceptance",
+        metric="scraped_goodput",
+        baseline_file="BENCH_PR9.json",
+        baseline_path=("smoke_reference", "scraped_goodput"),
+        direction="higher",
+        # Deterministic count at fixed seeds (all HTTP requests served),
+        # so the default tolerance applies: a trip means requests started
+        # failing or timing out on the socket path, not jitter.
+    ),
+    Gate(
+        name="obs tracing overhead ceiling",
+        suite="obs", bench="acceptance",
+        metric="overhead_frac",
+        baseline_file="BENCH_PR9.json",
+        baseline_path=("smoke_reference", "overhead_frac"),
+        direction="lower",
+        tolerance=4.0,  # host-wall-clock frac at smoke shapes is jittery;
+        # this trips on a runaway (5x the reference), the <2% claim itself
+        # is asserted at full shapes inside bench_obs
+    ),
 )
 
 

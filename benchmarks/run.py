@@ -18,7 +18,7 @@ def main() -> None:
         "--only",
         default="",
         help="comma list: pipeline,constraints,alter_ratio,clusters,mnist,"
-        "kernels,beam,fused,serving,streaming,hybrid,slo,autotune",
+        "kernels,beam,fused,serving,streaming,hybrid,slo,autotune,obs",
     )
     ap.add_argument(
         "--smoke",
@@ -54,6 +54,7 @@ def main() -> None:
         bench_hybrid,
         bench_kernels,
         bench_mnist_like,
+        bench_obs,
         bench_pipeline,
         bench_serving,
         bench_slo,
@@ -104,6 +105,13 @@ def main() -> None:
         # (achieved roofline_fraction, gated vs the committed floor) and
         # re-validates the table's schema/lattice/loader reproducibility.
         "autotune": bench_autotune.main,
+        # bench_obs measures the observability layer (PR9): tracing+logging
+        # overhead on host wall time vs the untraced runtime, trace
+        # completeness (every response's stage breakdown tiles its latency
+        # within 1%), and an HTTP replay through ServingFrontend whose
+        # scraped /metrics must parse BIT-identical to the in-process
+        # Telemetry; full mode writes BENCH_PR9.json.
+        "obs": bench_obs.main,
     }
     print("name,us_per_call,derived")
 

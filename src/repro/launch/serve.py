@@ -13,11 +13,17 @@ Reduced CPU run:
 
 Distributed path (scatter-search-merge over the mesh) and PQ/ADC traversal:
     PYTHONPATH=src python -m repro.launch.serve --distributed --approx pq
+
+HTTP front-end (DESIGN.md §12) — wall-clock runtime behind a real socket:
+    PYTHONPATH=src python -m repro.launch.serve --serve-http 8080 \
+        --log-json serve_log.jsonl
+    curl -s localhost:8080/metrics | head
 """
 from __future__ import annotations
 
 import argparse
 import json
+import threading
 
 import jax
 
@@ -226,6 +232,19 @@ def main():
         "the one-pass gather+distance+constraint+visited kernel for either "
         "backend, applied to every serving tier)",
     )
+    ap.add_argument(
+        "--serve-http", type=int, default=None, metavar="PORT",
+        help="instead of replaying a synthetic stream, serve over HTTP "
+        "(DESIGN.md §12): POST /v1/search, GET /metrics (Prometheus text), "
+        "/healthz, /varz. Runs on the wall clock; Ctrl-C drains in-flight "
+        "work and exits. Port 0 picks a free port",
+    )
+    ap.add_argument(
+        "--log-json", default=None, metavar="PATH",
+        help="structured JSON request logs (admit/dispatch/complete/shed "
+        "records with req_id/batch_id/epoch) buffered in a bounded ring "
+        "and flushed to PATH at shutdown",
+    )
     args = ap.parse_args()
 
     corpus = make_labeled_corpus(
@@ -235,10 +254,46 @@ def main():
         attrs=jax.random.uniform(jax.random.PRNGKey(5), (args.n, 2))
     )
 
-    clock = VirtualClock()
+    # HTTP mode serves real clients, so it runs on the wall clock; replay
+    # mode keeps the deterministic virtual timeline.
+    if args.serve_http is not None:
+        from repro.serving import wall_clock
+
+        clock = wall_clock
+    else:
+        clock = VirtualClock()
     runtime = build_runtime(args, corpus, clock)
+    logger = None
+    if args.log_json is not None:
+        from repro.obs import JsonLogger
+
+        logger = JsonLogger(clock=runtime.clock)
+        runtime.logger = logger
     print(f"warming compile cache ({runtime.trace_budget} bucket shapes)...")
     compiled = runtime.warmup()
+
+    if args.serve_http is not None:
+        import signal
+
+        from repro.obs.http import ServingFrontend
+
+        frontend = ServingFrontend(runtime, logger=logger, port=args.serve_http)
+        addr = frontend.start()
+        print(f"compiled {compiled} closures; serving on {addr}")
+        print("routes: POST /v1/search | GET /metrics /healthz /varz "
+              "(SIGINT/SIGTERM drains and exits)")
+        # Explicit handlers: a supervisor (or a non-interactive shell that
+        # spawned us with SIGINT ignored) sends SIGTERM — both signals must
+        # take the same graceful drain-and-flush path as a TTY Ctrl-C.
+        stop = threading.Event()
+        for sig in (signal.SIGINT, signal.SIGTERM):
+            signal.signal(sig, lambda *_: stop.set())
+        stop.wait()
+        print("draining...")
+        report = frontend.close(drain=True, log_path=args.log_json)
+        print(json.dumps({"shutdown": report}, indent=2))
+        return
+
     print(f"compiled {compiled} closures; serving {args.requests} requests "
           f"at Poisson rate {args.rate}/s...")
 
@@ -297,6 +352,9 @@ def main():
             f"fault retries {counters.get('fault_retries', 0)} | "
             f"degradation level {runtime.controller.degradation_level}"
         )
+    if logger is not None:
+        n = logger.flush_to_path(args.log_json)
+        print(f"flushed {n} structured log records to {args.log_json}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,57 @@
+# Operational observability layer (DESIGN.md §12): metrics registry with
+# Prometheus text exposition, per-request span tracing, structured JSON logs
+# behind a ring-buffer sink, and the stdlib HTTP front-end over the serving
+# runtime. Dependency direction: repro.serving imports repro.obs, never the
+# reverse — every adapter here is duck-typed over runtime objects.
+from repro.obs.adapters import instrument_runtime, latency_hist_samples
+from repro.obs.logs import JsonLogger, RingBufferSink
+from repro.obs.metrics import (
+    CallbackFamily,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    format_value,
+)
+from repro.obs.promparse import (
+    ExpositionParseError,
+    ParsedFamily,
+    parse_exposition,
+)
+from repro.obs.tracing import (
+    STAGES,
+    RequestTrace,
+    stage_sum,
+    trace_consistent,
+)
+
+__all__ = [
+    "CallbackFamily",
+    "Counter",
+    "ExpositionParseError",
+    "Gauge",
+    "Histogram",
+    "JsonLogger",
+    "MetricsRegistry",
+    "ParsedFamily",
+    "RequestTrace",
+    "RingBufferSink",
+    "STAGES",
+    "ServingFrontend",
+    "format_value",
+    "instrument_runtime",
+    "latency_hist_samples",
+    "parse_exposition",
+    "stage_sum",
+    "trace_consistent",
+]
+
+
+def __getattr__(name: str):
+    # The HTTP front-end imports threading/http.server; keep that out of
+    # the import path of code that only wants metrics/tracing primitives.
+    if name == "ServingFrontend":
+        from repro.obs.http import ServingFrontend
+
+        return ServingFrontend
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

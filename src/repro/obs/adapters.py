@@ -1,0 +1,226 @@
+"""Registry adapters over the serving runtime's existing state.
+
+``instrument_runtime`` builds ONE ``MetricsRegistry`` whose families read
+the live objects the runtime already maintains — telemetry counters, the
+log-bucketed ``LatencyHistogram`` (exposed as a *native* Prometheus
+histogram: its exact bucket edges as ``le`` labels, ``_sum``/``_count``
+from the same fields ``summary()`` reports), per-stage trace histograms,
+compile-cache hits/misses, batcher queue depth and per-group occupancy,
+the degradation-ladder level, streaming epoch/slot-pool gauges, and
+per-strategy router verdicts. Everything is pull-time (``CallbackFamily``):
+the scrape reads the same counters the benches read, so ``GET /metrics``
+is bit-identical to ``Telemetry.summary()`` by construction, not by
+double bookkeeping.
+
+Duck-typed on purpose: this module imports nothing from ``repro.serving``
+(the serving layer imports obs, never the reverse), so it works over any
+object shaped like a ``ServingRuntime``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Iterable, List, Optional, Tuple
+
+from repro.obs.metrics import MetricsRegistry, Sample, format_value
+
+
+def latency_hist_samples(
+    hist, labels: Tuple[Tuple[str, str], ...] = ()
+) -> List[Sample]:
+    """Native-histogram samples for a ``serving.telemetry.LatencyHistogram``.
+
+    The log-spaced layout maps 1:1: the underflow bucket's upper edge is
+    ``lo``, each log bucket keeps its exact ``upper_edge``, and the
+    overflow bucket is ``+Inf`` — so cumulative counts, ``_sum`` and
+    ``_count`` reproduce the in-process histogram bit-for-bit and the
+    upper-edge quantile rule gives identical p99 answers on both sides."""
+    out: List[Sample] = []
+    cum = 0
+    for b in range(hist.n_buckets + 2):
+        cum += int(hist.counts[b])
+        edge = hist.upper_edge(b) if b > 0 else hist.lo
+        out.append(
+            ("_bucket", labels + (("le", format_value(edge)),), float(cum))
+        )
+    out.append(("_sum", labels, float(hist.sum)))
+    out.append(("_count", labels, float(hist.total)))
+    return out
+
+
+def instrument_runtime(
+    runtime,
+    registry: Optional[MetricsRegistry] = None,
+    namespace: str = "repro",
+) -> MetricsRegistry:
+    """Register the full serving metric surface for one runtime."""
+    reg = registry if registry is not None else MetricsRegistry()
+    ns = namespace
+    tel = runtime.telemetry
+
+    def counter_samples() -> Iterable[Sample]:
+        return [
+            ("", (("event", key),), float(tel.counters[key]))
+            for key in sorted(tel.counters)
+        ]
+
+    reg.callback(
+        f"{ns}_serving_events_total", "counter",
+        "Lifecycle event counters (Telemetry.counters): submitted, "
+        "completed, goodput, shed_*, fault_*, routed_*, epoch_swaps, ...",
+        counter_samples,
+    )
+
+    def verdict_samples() -> Iterable[Sample]:
+        return [
+            ("", (("strategy", key[len("routed_"):]),), float(tel.counters[key]))
+            for key in sorted(tel.counters)
+            if key.startswith("routed_")
+        ]
+
+    reg.callback(
+        f"{ns}_serving_route_verdicts_total", "counter",
+        "Hybrid strategy-router admission verdicts by executor strategy",
+        verdict_samples,
+    )
+
+    reg.callback(
+        f"{ns}_serving_latency_seconds", "histogram",
+        "Arrival-to-completion latency of served responses "
+        "(log-bucketed; lifetime of the process)",
+        lambda: latency_hist_samples(tel.latency_hist),
+    )
+
+    def stage_samples() -> Iterable[Sample]:
+        out: List[Sample] = []
+        for stage in sorted(tel.stage_hists):
+            out.extend(
+                latency_hist_samples(
+                    tel.stage_hists[stage], (("stage", stage),)
+                )
+            )
+        return out
+
+    reg.callback(
+        f"{ns}_serving_stage_seconds", "histogram",
+        "Per-request lifecycle stage durations from the span recorder "
+        "(queue_wait | batch_wait | execute | overhead)",
+        stage_samples,
+    )
+
+    cache = runtime.cache
+    reg.callback(
+        f"{ns}_serving_compile_cache_hits_total", "counter",
+        "Compile-cache lookups served by an already-traced closure",
+        lambda: [("", (), float(cache.hits))],
+    )
+    reg.callback(
+        f"{ns}_serving_compile_cache_misses_total", "counter",
+        "Compile-cache lookups that traced a new closure",
+        lambda: [("", (), float(cache.misses))],
+    )
+    reg.callback(
+        f"{ns}_serving_compile_cache_traces", "gauge",
+        "Compiled closures resident (hard-bounded by the trace budget)",
+        lambda: [("", (), float(cache.trace_count))],
+    )
+    reg.callback(
+        f"{ns}_serving_trace_budget", "gauge",
+        "Declared compile budget: |ladder| x |families| x |tiers|",
+        lambda: [("", (), float(runtime.trace_budget))],
+    )
+
+    batcher = runtime.batcher
+    reg.callback(
+        f"{ns}_serving_queue_depth", "gauge",
+        "Requests waiting in the dynamic batcher (all groups)",
+        lambda: [("", (), float(batcher.pending_count()))],
+    )
+
+    def occupancy_samples() -> Iterable[Sample]:
+        out: List[Sample] = []
+        for (group, tier), n in sorted(
+            batcher.occupancy().items(), key=lambda kv: (str(kv[0][0]), kv[0][1])
+        ):
+            out.append((
+                "",
+                (
+                    ("family", str(group[0])),
+                    ("tier", str(tier)),
+                    ("group", repr(group)),
+                ),
+                float(n),
+            ))
+        return out
+
+    reg.callback(
+        f"{ns}_serving_group_pending", "gauge",
+        "Batcher bucket occupancy per (compatibility group, tier)",
+        occupancy_samples,
+    )
+
+    reg.callback(
+        f"{ns}_serving_in_flight", "gauge",
+        "Admitted requests not yet completed/shed (backpressure quantity)",
+        lambda: [("", (), float(runtime.in_flight))],
+    )
+
+    controller = runtime.controller
+    reg.callback(
+        f"{ns}_serving_degradation_level", "gauge",
+        "SLO degradation-ladder level (0 normal .. 3 shedding; 0 when "
+        "no ladder is configured)",
+        lambda: [("", (), float(controller.degradation_level))],
+    )
+
+    def ladder_ema_samples() -> Iterable[Sample]:
+        ladder = controller.ladder
+        if ladder is None:
+            return []
+        out: List[Sample] = []
+        for name, v in (
+            ("queue", ladder.queue_ema),
+            ("latency", ladder.lat_ema),
+            ("service", ladder.service_ema),
+        ):
+            if v is not None and not math.isnan(v):
+                out.append(("", (("signal", name),), float(v)))
+        return out
+
+    reg.callback(
+        f"{ns}_serving_slo_ema", "gauge",
+        "Degradation-ladder EMAs: queue depth, completion latency (s), "
+        "execution-only service time (s)",
+        ladder_ema_samples,
+    )
+
+    if hasattr(runtime.executor, "apply_mutations"):  # streaming executor
+        index = runtime.executor.index
+        reg.callback(
+            f"{ns}_streaming_epoch", "gauge",
+            "Published index epoch (queries in one flush share it)",
+            lambda: [("", (), float(runtime.executor.epoch))],
+        )
+
+        def slot_samples() -> Iterable[Sample]:
+            stats = index.pool.stats()
+            return [
+                ("", (("state", state),), float(stats[state]))
+                for state in ("live", "pending", "free")
+            ]
+
+        reg.callback(
+            f"{ns}_streaming_slots", "gauge",
+            "Slot-pool occupancy by state (live + pending + free = capacity)",
+            slot_samples,
+        )
+        reg.callback(
+            f"{ns}_streaming_capacity", "gauge",
+            "Slot-pool capacity (fixed at build time)",
+            lambda: [("", (), float(index.capacity))],
+        )
+        reg.callback(
+            f"{ns}_streaming_consolidations_total", "counter",
+            "Tombstone consolidation passes run",
+            lambda: [("", (), float(index.consolidations))],
+        )
+    return reg

@@ -1,0 +1,305 @@
+"""Async HTTP front-end over ``ServingRuntime.submit``/``poll``.
+
+A stdlib ``ThreadingHTTPServer`` (no new dependencies) exposing:
+
+    POST /v1/search   JSON {query, k, family, labels|range[, deadline_ms,
+                      timeout_s]} -> submit, wait, return the Response
+                      (ids, dists, fill, tier, trace breakdown, epoch, ...)
+    GET  /metrics     Prometheus text exposition from the registry
+    GET  /healthz     liveness + in-flight/queue snapshot
+    GET  /varz        full runtime report (telemetry summary, cache,
+                      controller, ladder level, epoch) as JSON
+
+The runtime itself stays single-threaded: every runtime call holds one
+lock, and a background *pump* thread advances the clock (virtual clocks
+advance by the batcher's ``max_wait`` per tick, so deterministic-clock
+runtimes serve over a real socket too) and runs ``step()``. Handler
+threads only submit under the lock and then poll-wait, so the batcher
+still groups concurrent requests into shared microbatches.
+
+``close()`` is the graceful shutdown: stop admitting, drain the runtime
+(every in-flight request completes or sheds — nothing is lost), flush the
+structured-log sink, then stop the socket.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional
+
+import numpy as np
+
+
+def _response_payload(resp) -> dict:
+    return {
+        "req_id": resp.req_id,
+        "ids": [int(i) for i in np.asarray(resp.ids).tolist()],
+        "dists": [float(d) for d in np.asarray(resp.dists).tolist()],
+        "k": resp.k,
+        "filled": resp.filled,
+        "fill_frac": resp.fill_frac,
+        "tier": resp.tier,
+        "escalations": resp.escalations,
+        "latency_s": resp.latency,
+        "deadline_missed": resp.deadline_missed,
+        "epoch": resp.epoch,
+        "strategy": resp.strategy,
+        "shed_reason": resp.shed_reason,
+        "degraded": resp.degraded,
+        "error": resp.error,
+        "trace": resp.trace,
+        "batch_id": resp.batch_id,
+    }
+
+
+class ServingFrontend:
+    """HTTP surface + pump thread over one ``ServingRuntime``."""
+
+    def __init__(
+        self,
+        runtime,
+        registry=None,
+        logger=None,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        pump_interval: float = 0.0005,
+        default_timeout_s: float = 10.0,
+    ):
+        if registry is None:
+            from repro.obs.adapters import instrument_runtime
+
+            registry = instrument_runtime(runtime)
+        self.runtime = runtime
+        self.registry = registry
+        self.logger = logger
+        if logger is not None:
+            # One shared logger: HTTP lifecycle records and the runtime's
+            # admit/dispatch/complete records interleave on the runtime's
+            # (possibly virtual) clock.
+            if logger.clock is None:
+                logger.clock = runtime.clock
+            if getattr(runtime, "logger", None) is None:
+                runtime.logger = logger
+        self.host = host
+        self._port = int(port)
+        self.pump_interval = float(pump_interval)
+        self.default_timeout_s = float(default_timeout_s)
+        self.lock = threading.RLock()
+        self._server: Optional[ThreadingHTTPServer] = None
+        self._threads: list = []
+        self._stop = threading.Event()
+        self._accepting = False
+        self.started_requests = 0
+
+    # --- lifecycle --------------------------------------------------------
+    @property
+    def port(self) -> int:
+        return self._server.server_address[1] if self._server else self._port
+
+    @property
+    def address(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def start(self) -> str:
+        frontend = self
+
+        class Handler(_Handler):
+            pass
+
+        Handler.frontend = frontend
+        self._server = ThreadingHTTPServer((self.host, self._port), Handler)
+        self._server.daemon_threads = True
+        self._stop.clear()
+        self._accepting = True
+        serve = threading.Thread(
+            target=self._server.serve_forever,
+            kwargs={"poll_interval": 0.05},
+            name="obs-http-serve",
+            daemon=True,
+        )
+        pump = threading.Thread(
+            target=self._pump, name="obs-http-pump", daemon=True
+        )
+        self._threads = [serve, pump]
+        serve.start()
+        pump.start()
+        if self.logger is not None:
+            self.logger.log("http_start", address=self.address)
+        return self.address
+
+    def _pump(self) -> None:
+        runtime = self.runtime
+        while not self._stop.is_set():
+            with self.lock:
+                clock = runtime.clock
+                if hasattr(clock, "advance"):
+                    # Virtual-clock runtimes never see max_wait elapse on
+                    # their own; the pump supplies the passage of time.
+                    clock.advance(runtime.batcher.max_wait)
+                runtime.step()
+            self._stop.wait(self.pump_interval)
+
+    def close(self, drain: bool = True, log_path: Optional[str] = None) -> dict:
+        """Graceful shutdown: stop admitting, drain in-flight work, flush
+        the log sink (optionally to ``log_path``), stop the socket.
+        Returns a small shutdown report."""
+        self._accepting = False
+        self._stop.set()
+        for t in self._threads:
+            if t is threading.current_thread():
+                continue
+            t.join(timeout=5.0)
+        drained = 0
+        with self.lock:
+            if drain:
+                drained = self.runtime.drain()
+            if self.logger is not None:
+                self.logger.log(
+                    "http_shutdown", drained=drained,
+                    in_flight=self.runtime.in_flight,
+                )
+        flushed = 0
+        if self.logger is not None and log_path is not None:
+            flushed = self.logger.flush_to_path(log_path)
+        if self._server is not None:
+            self._server.shutdown()
+            self._server.server_close()
+            self._server = None
+        return {
+            "drained": drained,
+            "in_flight": self.runtime.in_flight,
+            "log_records_flushed": flushed,
+        }
+
+    # --- request handling (called from handler threads) -------------------
+    def handle_search(self, payload: dict) -> tuple:
+        from repro.serving.types import AdmissionError
+
+        try:
+            query = np.asarray(payload["query"], dtype=np.float32)
+            k = int(payload.get("k", 10))
+            family = str(payload["family"])
+            operand = self._parse_operand(family, payload)
+        except (KeyError, TypeError, ValueError) as e:
+            return 400, {"error": f"bad request: {e}"}
+        timeout_s = float(payload.get("timeout_s", self.default_timeout_s))
+        if not self._accepting:
+            return 503, {"error": "shutting down"}
+        with self.lock:
+            deadline = None
+            if payload.get("deadline_ms") is not None:
+                deadline = self.runtime.clock() + float(payload["deadline_ms"]) / 1e3
+            try:
+                req_id = self.runtime.submit(
+                    query, k, family, operand, deadline=deadline
+                )
+            except AdmissionError as e:
+                return 429, {"error": str(e)}
+            except (TypeError, ValueError) as e:
+                return 400, {"error": f"bad request: {e}"}
+            self.started_requests += 1
+        give_up = time.monotonic() + timeout_s
+        while time.monotonic() < give_up:
+            with self.lock:
+                resp = self.runtime.poll(req_id)
+            if resp is not None:
+                return 200, _response_payload(resp)
+            time.sleep(self.pump_interval)
+        return 504, {"error": "timed out waiting for completion", "req_id": req_id}
+
+    def _parse_operand(self, family: str, payload: dict):
+        from repro.serving.workload import label_words_row
+
+        if family == "label":
+            labels = payload.get("labels")
+            if labels is None:
+                raise ValueError("label family needs a 'labels' list")
+            return label_words_row(
+                [int(x) for x in labels], self.runtime.n_labels
+            )
+        if family == "range":
+            rng = payload.get("range")
+            if rng is None or len(rng) != 3:
+                raise ValueError("range family needs 'range': [lo, hi, col]")
+            return (float(rng[0]), float(rng[1]), int(rng[2]))
+        raise ValueError(f"unknown family {family!r}")
+
+    def handle_metrics(self) -> tuple:
+        with self.lock:
+            body = self.registry.render_prometheus()
+        return 200, body
+
+    def handle_healthz(self) -> tuple:
+        with self.lock:
+            return 200, {
+                "status": "ok" if self._accepting else "draining",
+                "in_flight": self.runtime.in_flight,
+                "queue_depth": self.runtime.batcher.pending_count(),
+            }
+
+    def handle_varz(self) -> tuple:
+        with self.lock:
+            report = self.runtime.report()
+            report["degradation_level"] = self.runtime.controller.degradation_level
+            report["epoch"] = getattr(self.runtime.executor, "epoch", None)
+            report["started_requests"] = self.started_requests
+        return 200, report
+
+
+class _Handler(BaseHTTPRequestHandler):
+    frontend: ServingFrontend  # bound per server in ServingFrontend.start
+    protocol_version = "HTTP/1.1"
+
+    # Route stdlib request logging into the structured logger (or drop it)
+    # instead of spamming stderr.
+    def log_message(self, format: str, *args) -> None:  # noqa: A002
+        logger = self.frontend.logger
+        if logger is not None:
+            logger.log("http_access", detail=format % args)
+
+    def _send_json(self, status: int, payload: dict) -> None:
+        body = json.dumps(payload, default=str).encode()
+        self.send_response(status)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _send_text(self, status: int, text: str, ctype: str) -> None:
+        body = text.encode()
+        self.send_response(status)
+        self.send_header("Content-Type", ctype)
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def do_GET(self) -> None:  # noqa: N802 (stdlib API name)
+        path = self.path.split("?", 1)[0]
+        if path == "/metrics":
+            status, body = self.frontend.handle_metrics()
+            self._send_text(
+                status, body, "text/plain; version=0.0.4; charset=utf-8"
+            )
+        elif path == "/healthz":
+            self._send_json(*self.frontend.handle_healthz())
+        elif path == "/varz":
+            self._send_json(*self.frontend.handle_varz())
+        else:
+            self._send_json(404, {"error": f"no route {path!r}"})
+
+    def do_POST(self) -> None:  # noqa: N802 (stdlib API name)
+        path = self.path.split("?", 1)[0]
+        if path != "/v1/search":
+            self._send_json(404, {"error": f"no route {path!r}"})
+            return
+        try:
+            length = int(self.headers.get("Content-Length", 0))
+            payload = json.loads(self.rfile.read(length) or b"{}")
+            if not isinstance(payload, dict):
+                raise ValueError("body must be a JSON object")
+        except (ValueError, json.JSONDecodeError) as e:
+            self._send_json(400, {"error": f"bad JSON body: {e}"})
+            return
+        self._send_json(*self.frontend.handle_search(payload))

@@ -38,6 +38,9 @@ class MicroBatch:
     tier: int
     bucket: int  # padded batch size (a ladder entry)
     requests: List[Request]  # len <= bucket, all sharing (group, tier)
+    # Monotonic dispatch id stamped by the runtime at flush time — the
+    # correlation key between structured log records and Response.batch_id.
+    batch_id: int = -1
 
     @property
     def family(self) -> str:
@@ -81,6 +84,11 @@ class DynamicBatcher:
 
     def pending_count(self) -> int:
         return sum(len(q) for q in self._pending.values())
+
+    def occupancy(self) -> Dict[tuple, int]:
+        """Pending requests per (group, tier) key — the bucket-occupancy
+        gauge the metrics registry exposes (obs/adapters.py)."""
+        return {key: len(q) for key, q in self._pending.items() if q}
 
     def _due(self, reqs: Deque[Request], now: float) -> bool:
         oldest = min(r.enqueue_t for r in reqs)

@@ -43,6 +43,8 @@ from repro.core.posting import (
 )
 from repro.core.router import RouterConfig, StrategyRouter
 from repro.core.types import Corpus, GraphIndex, SearchParams, SearchResult
+from repro.obs.logs import JsonLogger
+from repro.obs.tracing import RequestTrace
 from repro.serving.batcher import BATCH_LADDER, DynamicBatcher, MicroBatch
 from repro.serving.cache import CompileCache
 from repro.serving.controller import AdaptiveController, make_tier_ladder
@@ -364,6 +366,8 @@ class ServingRuntime:
         slo: Optional[SLOConfig] = None,
         shed_expired: bool = True,
         max_fault_retries: int = 2,
+        tracing: bool = True,
+        logger: Optional[JsonLogger] = None,
     ):
         self.executor = executor
         self.n_labels = int(n_labels)
@@ -410,6 +414,20 @@ class ServingRuntime:
         if router is not None and router.controller is None:
             router.controller = self.controller
         self.overlays = OverlayCache(max_overlays=max_overlays)
+        # Observability (DESIGN.md §12): every admitted request carries a
+        # clock-injected span recorder (tracing=False serves without the
+        # per-request dict churn), structured events go to the optional
+        # JSON logger (req_id/batch_id/epoch correlated), and microbatches
+        # get monotonic dispatch ids for log<->Response correlation.
+        self.tracing = bool(tracing)
+        self.logger = logger
+        if logger is not None and logger.clock is None:
+            logger.clock = self.clock
+        self._next_batch_id = 0
+
+    def _log(self, event: str, **fields) -> None:
+        if self.logger is not None:
+            self.logger.log(event, **fields)
 
     # --- compile-cache plumbing ------------------------------------------
     def _build_for_key(self, key):
@@ -511,6 +529,17 @@ class ServingRuntime:
         self._next_id += 1
         self._in_flight += 1
         self.telemetry.on_submit()
+        if self.tracing:
+            req.trace = RequestTrace(req.req_id, req.arrival_t)
+            req.trace.mark(f"route:{req.strategy}", req.arrival_t)
+        self._log(
+            "admit",
+            req_id=req.req_id,
+            family=req.family,
+            strategy=req.strategy,
+            tier=req.tier,
+            k=req.k,
+        )
         self.batcher.add(req, req.arrival_t)
         return req.req_id
 
@@ -596,7 +625,16 @@ class ServingRuntime:
         """
         self.controller.observe_load(self.batcher.pending_count())
         done = 0
-        batches = self.batcher.flush(self.clock(), force=force)
+        t_flush = self.clock()
+        batches = self.batcher.flush(t_flush, force=force)
+        for mb in batches:
+            mb.batch_id = self._next_batch_id
+            self._next_batch_id += 1
+            for r in mb.requests:
+                if r.trace is not None:
+                    # Span accounting at the flush boundary: everything
+                    # since (re-)enqueue was batcher queue wait.
+                    r.trace.on_flush(r.enqueue_t, t_flush)
         mutations = [mb for mb in batches if mb.family in MUTATION_FAMILIES]
         queries = [mb for mb in batches if mb.family not in MUTATION_FAMILIES]
         applied: list = []
@@ -605,6 +643,7 @@ class ServingRuntime:
         if mutations:
             epoch = self.executor.refresh()  # the atomic epoch swap
             self.telemetry.on_epoch_swap()
+            self._log("epoch_swap", epoch=epoch)
             self._drain_executor_faults()  # a stale-epoch injection counts
             if self.router is not None:
                 # Overlay hotness re-accumulates per epoch; the overlay
@@ -646,17 +685,19 @@ class ServingRuntime:
         shed = 0
         for req in mb.requests:
             if deadline_missed(req.deadline, now):
-                self._shed(req, "expired", now)
+                self._shed(req, "expired", now, batch_id=mb.batch_id)
                 shed += 1
             elif predict and ladder.predicted_miss(req.deadline, now):
-                self._shed(req, "overload", now)
+                self._shed(req, "overload", now, batch_id=mb.batch_id)
                 shed += 1
             else:
                 live.append(req)
         mb.requests = live
         return shed
 
-    def _shed(self, req: Request, reason: str, now: float) -> None:
+    def _shed(
+        self, req: Request, reason: str, now: float, batch_id: int = -1
+    ) -> None:
         """Terminal shed: a pollable empty Response with ``shed_reason``
         set — the request is accounted, never silently dropped, and never
         burns a search."""
@@ -678,10 +719,19 @@ class ServingRuntime:
             est_selectivity=req.est_selectivity,
             shed_reason=reason,
             degraded=req.degraded,
+            trace=(
+                req.trace.breakdown(now, outcome="shed")
+                if req.trace is not None
+                else None
+            ),
+            batch_id=batch_id,
         )
         self._responses[req.req_id] = resp
         self._in_flight -= 1
         self.telemetry.on_shed(resp)
+        self._log(
+            "shed", req_id=req.req_id, reason=reason, batch_id=batch_id
+        )
 
     def _drain_executor_faults(self) -> List[str]:
         """Collect fault kinds the (possibly fault-injecting) executor
@@ -714,6 +764,7 @@ class ServingRuntime:
         measured wall time still advances a virtual-time replay so churn
         costs land in the same timeline as query execution.
         """
+        t_start = self.clock()
         t0 = wall_clock()
         results = self.executor.apply_mutations(mb.requests)
         dt = wall_clock() - t0
@@ -721,9 +772,17 @@ class ServingRuntime:
             self.clock.advance(dt)
         now = self.clock()
         self.telemetry.on_mutation(mb.family, len(mb.requests))
+        self._log(
+            "dispatch",
+            batch_id=mb.batch_id,
+            family=mb.family,
+            n_real=mb.n_real,
+        )
         responses = []
         for req, (ok, slot) in zip(mb.requests, results):
             self._bound_unpolled()
+            if req.trace is not None:
+                req.trace.on_exec(t_start, now)
             resp = Response(
                 req_id=req.req_id,
                 ids=np.asarray([slot], np.int32),
@@ -736,6 +795,10 @@ class ServingRuntime:
                 arrival_t=req.arrival_t,
                 complete_t=now,
                 deadline_missed=deadline_missed(req.deadline, now),
+                trace=(
+                    req.trace.breakdown(now) if req.trace is not None else None
+                ),
+                batch_id=mb.batch_id,
             )
             self._responses[req.req_id] = resp
             responses.append(resp)
@@ -808,6 +871,7 @@ class ServingRuntime:
         # virtual-time replay charges all of it to the timeline — this is
         # exactly the per-request overhead the batch=1 baseline cannot
         # amortize.
+        t_start = self.clock()
         t0 = wall_clock()
         try:
             queries = assemble_queries(mb, self.executor.dim)
@@ -835,7 +899,7 @@ class ServingRuntime:
             dt = wall_clock() - t0
             if hasattr(self.clock, "advance"):
                 self.clock.advance(dt)
-            return self._recover_faulted(mb, fault)
+            return self._recover_faulted(mb, fault, t_start)
         ids = np.asarray(res.ids)
         dists = np.asarray(res.dists)
         dt = wall_clock() - t0
@@ -852,6 +916,17 @@ class ServingRuntime:
         # accountable, never a silent late completion.
         spiked = "spike" in self._drain_executor_faults()
         self.telemetry.on_dispatch(mb.bucket, mb.n_real)
+        self._log(
+            "dispatch",
+            batch_id=mb.batch_id,
+            family=mb.family,
+            strategy=strategy,
+            tier=mb.tier,
+            bucket=mb.bucket,
+            n_real=mb.n_real,
+            epoch=getattr(self.executor, "epoch", None),
+            exec_s=round(dt, 9),
+        )
 
         mean_iters = float(res.stats.iters)
         # ids rows are -1-padded at the tail (ascending dists), so the fill
@@ -865,6 +940,8 @@ class ServingRuntime:
             filled = int(filled_rows[i])
             req.fill_history = req.fill_history + (filled,)
             fill_fracs.append(filled / max(req.k, 1))
+            if req.trace is not None:
+                req.trace.on_exec(t_start, now)
             # Posting-scan results are exact over the posting set: an
             # under-fill means fewer than k rows satisfy at all, and no
             # bigger-ef tier can conjure more — never escalate those.
@@ -877,6 +954,14 @@ class ServingRuntime:
                     req.tier = next_tier
                     req.escalations += 1
                     self.telemetry.on_escalate()
+                    if req.trace is not None:
+                        req.trace.mark(f"escalate:{next_tier}", now)
+                    self._log(
+                        "escalate",
+                        req_id=req.req_id,
+                        batch_id=mb.batch_id,
+                        tier=next_tier,
+                    )
                     self.batcher.add(req, now)
                     continue
                 elif (
@@ -918,10 +1003,21 @@ class ServingRuntime:
                     or deadline_missed(req.deadline, now)
                 ),
                 faulted=spiked or req.fault_retries > 0,
+                trace=(
+                    req.trace.breakdown(now) if req.trace is not None else None
+                ),
+                batch_id=mb.batch_id,
             )
             self._in_flight -= 1
             self.telemetry.on_complete(self._responses[req.req_id])
             self.controller.observe_latency(now - req.arrival_t)
+            self._log(
+                "complete",
+                req_id=req.req_id,
+                batch_id=mb.batch_id,
+                filled=filled,
+                latency_s=round(now - req.arrival_t, 9),
+            )
             done += 1
         if not fill_fracs:
             return done
@@ -941,7 +1037,9 @@ class ServingRuntime:
             )
         return done
 
-    def _recover_faulted(self, mb: MicroBatch, fault: ExecutorFault) -> int:
+    def _recover_faulted(
+        self, mb: MicroBatch, fault: ExecutorFault, t_start: float
+    ) -> int:
         """Fault recovery (DESIGN.md §10): every request of a faulted
         dispatch is either re-queued through the batcher (within its
         ``max_fault_retries`` budget) or completed as a FAILED pollable
@@ -951,9 +1049,17 @@ class ServingRuntime:
         now = self.clock()
         done = 0
         for req in mb.requests:
+            if req.trace is not None:
+                # The faulted dispatch still burned execute time.
+                req.trace.on_exec(t_start, now)
             if req.fault_retries < self.max_fault_retries:
                 req.fault_retries += 1
                 self.telemetry.on_fault_retry()
+                if req.trace is not None:
+                    req.trace.mark("fault_retry", now)
+                self._log(
+                    "fault_retry", req_id=req.req_id, batch_id=mb.batch_id
+                )
                 self.batcher.add(req, now)
                 continue
             self._bound_unpolled()
@@ -975,10 +1081,22 @@ class ServingRuntime:
                 degraded=req.degraded,
                 faulted=True,
                 error=str(fault),
+                trace=(
+                    req.trace.breakdown(now, outcome="failed")
+                    if req.trace is not None
+                    else None
+                ),
+                batch_id=mb.batch_id,
             )
             self._responses[req.req_id] = resp
             self._in_flight -= 1
             self.telemetry.on_complete(resp)
+            self._log(
+                "failed",
+                req_id=req.req_id,
+                batch_id=mb.batch_id,
+                error=str(fault),
+            )
             done += 1
         return done
 

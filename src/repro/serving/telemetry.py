@@ -62,7 +62,12 @@ class LatencyHistogram:
             return 0
         if x >= self.hi:
             return self.n_buckets + 1
-        return 1 + int((math.log(x) - self._log_lo) / self._log_ratio)
+        # Clamp against float rounding at the edges: log() of a value one
+        # ulp under ``hi`` can land exactly on n_buckets (indexing into
+        # the overflow bucket for an in-range value), and log() of ``lo``
+        # itself can come out one ulp below _log_lo (indexing bucket 0).
+        b = 1 + int((math.log(x) - self._log_lo) / self._log_ratio)
+        return min(max(b, 1), self.n_buckets)
 
     def upper_edge(self, bucket: int) -> float:
         if bucket <= 0:
@@ -110,6 +115,10 @@ class Telemetry:
         self.responses: Deque[Response] = deque(maxlen=max_history)
         self.counters: Counter = Counter()
         self.latency_hist = LatencyHistogram()
+        # Per-stage latency histograms fed from Response.trace breakdowns
+        # (queue_wait | batch_wait | execute | overhead) when the runtime
+        # runs with tracing on — where a p99 outlier spent its time.
+        self.stage_hists: Dict[str, LatencyHistogram] = {}
 
     # --- event hooks (runtime calls these) --------------------------------
     def on_submit(self) -> None:
@@ -169,7 +178,13 @@ class Telemetry:
             self.counters["failed"] += 1
         else:
             self.latency_hist.record(resp.latency)
-        if resp.ok and not resp.deadline_missed and resp.filled > 0:
+            if resp.trace is not None:
+                for stage in ("queue_wait", "batch_wait", "execute", "overhead"):
+                    hist = self.stage_hists.get(stage)
+                    if hist is None:
+                        hist = self.stage_hists[stage] = LatencyHistogram()
+                    hist.record(float(resp.trace[stage]))
+        if self._is_goodput(resp):
             # Goodput: answers that arrived in time with something in
             # them — the quantity overload policy is allowed to optimize
             # (a fast shed and a late fill both score zero).
@@ -177,8 +192,22 @@ class Telemetry:
         self.responses.append(resp)
 
     # --- aggregates -------------------------------------------------------
+    @staticmethod
+    def _is_goodput(resp: Response) -> bool:
+        return resp.ok and not resp.deadline_missed and resp.filled > 0
+
+    def goodput_in_window(self) -> int:
+        """Goodput responses still inside the bounded response window."""
+        return sum(1 for r in self.responses if self._is_goodput(r))
+
     def goodput_rate(self, window_s: Optional[float] = None) -> float:
-        """Goodput per second of served time (completion-window span)."""
+        """Goodput per second of served time (completion-window span).
+
+        Both numerator and denominator are WINDOW-scoped: the lifetime
+        ``goodput`` counter over the bounded window's span would inflate
+        the rate as soon as ``max_history`` evicts old responses (the
+        counter keeps every served request forever; the span only covers
+        the newest ``max_history``)."""
         if window_s is None:
             rs = self.responses
             if not rs:
@@ -186,12 +215,17 @@ class Telemetry:
             window_s = max(r.complete_t for r in rs) - min(
                 r.arrival_t for r in rs
             )
-        return self.counters["goodput"] / window_s if window_s > 0 else 0.0
+        return self.goodput_in_window() / window_s if window_s > 0 else 0.0
 
     def summary(self) -> dict:
         rs = self.responses
         out: Dict[str, object] = dict(self.counters)
         out["latency_hist"] = self.latency_hist.summary()
+        if self.stage_hists:
+            out["stages"] = {
+                stage: hist.summary()
+                for stage, hist in sorted(self.stage_hists.items())
+            }
         if not rs:
             return out
         lat = [r.latency for r in rs]
@@ -249,6 +283,9 @@ class Telemetry:
         return out
 
 
-# The name the ops-facing docs use for the counter surface: one registry,
-# scraped via ``summary()`` (the future HTTP front-end's /metrics source).
-TelemetryRegistry = Telemetry
+# The ops-facing registry surface is the real thing now: repro.obs
+# (``MetricsRegistry`` + ``instrument_runtime``) exposes every counter and
+# histogram here — plus cache/batcher/ladder/slot-pool gauges — in
+# Prometheus text format behind ``GET /metrics`` (DESIGN.md §12). The old
+# ``TelemetryRegistry = Telemetry`` alias is gone; adapt via
+# ``repro.obs.instrument_runtime(runtime)``.

@@ -17,6 +17,8 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from repro.obs.tracing import RequestTrace
+
 FAMILIES = ("label", "range")
 # Mutation "families" ride the SAME batcher as queries (their own groups,
 # so they never share a microbatch with a search) but execute on the host
@@ -85,6 +87,9 @@ class Request:
     # cheap strategy preferred), and the executor-fault retry budget spent.
     degraded: bool = False
     fault_retries: int = 0
+    # Observability (DESIGN.md §12): the span recorder riding this request
+    # (None when the runtime serves with tracing off).
+    trace: Optional[RequestTrace] = None
 
     def group(self) -> tuple:
         """Batcher compatibility key: requests in one microbatch must share
@@ -174,6 +179,12 @@ class Response:
     degraded: bool = False
     faulted: bool = False  # an injected fault touched this dispatch
     error: Optional[str] = None
+    # Observability (DESIGN.md §12): the span recorder's stage breakdown
+    # (queue_wait | batch_wait | execute | overhead, summing to the
+    # end-to-end latency) and the microbatch that produced the final
+    # answer — None/-1 when the runtime serves with tracing off.
+    trace: Optional[dict] = None
+    batch_id: int = -1
 
     @property
     def ok(self) -> bool:

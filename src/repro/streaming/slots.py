@@ -133,6 +133,17 @@ class SlotPool:
         self.pending.remove(slot)
         self.free.append(slot)
 
+    def stats(self) -> dict:
+        """Occupancy gauges for observability (obs/adapters.py exposes
+        these as ``repro_streaming_slots{state=...}``); states always
+        partition the capacity."""
+        return {
+            "capacity": self.capacity,
+            "live": self.n_live,
+            "pending": self.n_pending,
+            "free": self.n_free,
+        }
+
     def check_accounting(self) -> None:
         """Raise if the slot-state partition or the bitmap drifted."""
         total = self.n_live + self.n_pending + self.n_free

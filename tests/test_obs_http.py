@@ -1,0 +1,177 @@
+"""HTTP front-end over the serving runtime (DESIGN.md §12).
+
+A real ThreadingHTTPServer on a loopback socket, over a *VirtualClock*
+runtime — the pump thread supplies the passage of time, so these tests
+are deterministic about batching semantics while exercising the actual
+wire path (JSON framing, status codes, the Prometheus content type, and
+graceful shutdown with the injected clock).
+"""
+import json
+import urllib.error
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data.synthetic import make_labeled_corpus
+from repro.graph.index import build_index
+from repro.obs import JsonLogger, parse_exposition, trace_consistent
+from repro.obs.http import ServingFrontend
+from repro.serving import (
+    LocalExecutor,
+    ServingRuntime,
+    VirtualClock,
+    make_tier_ladder,
+)
+
+N, D, L = 1500, 16, 5
+
+
+@pytest.fixture(scope="module")
+def world():
+    corpus = make_labeled_corpus(jax.random.PRNGKey(0), n=N, d=D, n_labels=L)
+    corpus = corpus.replace(
+        attrs=jax.random.uniform(jax.random.PRNGKey(50), (N, 2))
+    )
+    graph = build_index(jax.random.PRNGKey(1), corpus, degree=12,
+                        sample_size=128)
+    return corpus, graph
+
+
+@pytest.fixture(scope="module")
+def frontend(world):
+    corpus, graph = world
+    rt = ServingRuntime(
+        LocalExecutor(corpus, graph),
+        n_labels=L,
+        tiers=make_tier_ladder(k_cap=8, base_ef=32, base_iters=64, n_tiers=1),
+        ladder=(4,),
+        max_wait=0.002,
+        clock=VirtualClock(),
+    )
+    rt.warmup()
+    logger = JsonLogger()
+    fe = ServingFrontend(rt, logger=logger)
+    fe.start()
+    yield fe
+    if fe._server is not None:  # shutdown test may have closed it already
+        fe.close(drain=True)
+
+
+def _post(fe, path, payload, timeout=30):
+    req = urllib.request.Request(
+        fe.address + path,
+        data=json.dumps(payload).encode(),
+        headers={"Content-Type": "application/json"},
+    )
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as r:
+            return r.status, json.loads(r.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+def _get(fe, path, timeout=30):
+    try:
+        with urllib.request.urlopen(fe.address + path, timeout=timeout) as r:
+            return r.status, r.read().decode(), dict(r.headers)
+    except urllib.error.HTTPError as e:
+        return e.code, e.read().decode(), dict(e.headers)
+
+
+def test_search_label_and_range_round_trip(frontend):
+    st, body = _post(frontend, "/v1/search", {
+        "query": [0.1] * D, "k": 4, "family": "label", "labels": [0, 1],
+    })
+    assert st == 200
+    assert body["filled"] >= 1 and len(body["ids"]) == 4
+    assert body["trace"] is not None and trace_consistent(body["trace"])
+    assert body["batch_id"] >= 0
+    st, body = _post(frontend, "/v1/search", {
+        "query": [0.1] * D, "k": 4, "family": "range",
+        "range": [0.1, 0.9, 0],
+    })
+    assert st == 200 and body["filled"] >= 1
+
+
+def test_bad_requests_are_400(frontend):
+    st, body = _post(frontend, "/v1/search", {"query": [0.1] * D, "k": 4,
+                                              "family": "nope"})
+    assert st == 400 and "family" in body["error"]
+    st, body = _post(frontend, "/v1/search", {"k": 4, "family": "label",
+                                              "labels": [0]})
+    assert st == 400  # missing query
+    st, body = _post(frontend, "/v1/search", {
+        "query": [0.1] * D, "k": 4, "family": "label",  # labels missing
+    })
+    assert st == 400
+    st, body = _post(frontend, "/v1/search", {
+        "query": [0.1] * D, "k": 999, "family": "label", "labels": [0],
+    })
+    assert st == 400  # k over the ladder cap
+    st, body = _post(frontend, "/nope", {})
+    assert st == 404
+
+
+def test_metrics_endpoint_parses_and_matches(frontend):
+    # At least the two searches from the round-trip test have completed.
+    st, text, headers = _get(frontend, "/metrics")
+    assert st == 200
+    assert headers["Content-Type"].startswith("text/plain")
+    fams = parse_exposition(text)
+    tel = frontend.runtime.telemetry
+    with frontend.lock:
+        completed = tel.counters["completed"]
+        hist_count = tel.latency_hist.total
+    assert fams["repro_serving_events_total"].value(event="completed") == completed
+    assert fams["repro_serving_latency_seconds"].hist_count() == hist_count
+
+
+def test_healthz_and_varz(frontend):
+    st, text, _ = _get(frontend, "/healthz")
+    assert st == 200
+    body = json.loads(text)
+    assert body["status"] == "ok"
+    assert body["in_flight"] == 0
+    st, text, _ = _get(frontend, "/varz")
+    assert st == 200
+    body = json.loads(text)
+    assert {"telemetry", "cache", "controller", "degradation_level",
+            "started_requests"} <= set(body)
+    assert body["started_requests"] >= 2
+
+
+def test_backpressure_maps_to_429(world):
+    corpus, graph = world
+    rt = ServingRuntime(
+        LocalExecutor(corpus, graph), n_labels=L,
+        tiers=make_tier_ladder(k_cap=8, base_ef=32, base_iters=64, n_tiers=1),
+        ladder=(4,), max_wait=0.002, max_pending=0, clock=VirtualClock(),
+    )
+    fe = ServingFrontend(rt)
+    fe.start()
+    try:
+        st, body = _post(fe, "/v1/search", {
+            "query": [0.1] * D, "k": 4, "family": "label", "labels": [0],
+        })
+        assert st == 429 and "max_pending" in body["error"]
+    finally:
+        fe.close(drain=False)
+
+
+def test_graceful_shutdown_drains_and_flushes(frontend, tmp_path):
+    log_path = tmp_path / "serve_log.jsonl"
+    addr = frontend.address  # capture before close resets the bound port
+    report = frontend.close(drain=True, log_path=str(log_path))
+    assert report["in_flight"] == 0
+    assert report["log_records_flushed"] > 0
+    records = [json.loads(x) for x in log_path.read_text().splitlines()]
+    assert len(records) == report["log_records_flushed"]
+    events = {r["event"] for r in records}
+    assert "http_shutdown" in events
+    # The injected clock stamped every record with virtual time.
+    assert all("ts" in r for r in records)
+    # Closed socket: new connections are refused.
+    with pytest.raises((urllib.error.URLError, OSError)):
+        urllib.request.urlopen(addr + "/healthz", timeout=2)

@@ -1,0 +1,248 @@
+"""Per-request span tracing + structured logs (DESIGN.md §12).
+
+Everything runs under a VirtualClock, so stage durations are exact
+arithmetic over injected timestamps: the breakdown must tile the
+end-to-end latency, survive escalations and sheds, feed the per-stage
+telemetry histograms, and correlate with the ring-buffered JSON log
+records by req_id/batch_id.
+"""
+import io
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data.synthetic import make_labeled_corpus
+from repro.graph.index import build_index
+from repro.obs import (
+    STAGES,
+    JsonLogger,
+    RequestTrace,
+    RingBufferSink,
+    stage_sum,
+    trace_consistent,
+)
+from repro.serving import (
+    LocalExecutor,
+    ServingRuntime,
+    VirtualClock,
+    label_words_row,
+    make_tier_ladder,
+)
+
+N, D, L = 1500, 16, 5
+
+
+@pytest.fixture(scope="module")
+def world():
+    corpus = make_labeled_corpus(jax.random.PRNGKey(0), n=N, d=D, n_labels=L)
+    corpus = corpus.replace(
+        attrs=jax.random.uniform(jax.random.PRNGKey(50), (N, 2))
+    )
+    graph = build_index(jax.random.PRNGKey(1), corpus, degree=12,
+                        sample_size=128)
+    return corpus, graph
+
+
+def _runtime(world, **kw):
+    corpus, graph = world
+    kw.setdefault(
+        "tiers", make_tier_ladder(k_cap=8, base_ef=32, base_iters=64,
+                                  n_tiers=2)
+    )
+    kw.setdefault("ladder", (4,))
+    kw.setdefault("families", ("label",))
+    kw.setdefault("max_wait", 0.0)
+    kw.setdefault("clock", VirtualClock())
+    return ServingRuntime(LocalExecutor(corpus, graph), n_labels=L, **kw)
+
+
+# ---------------------------------------------------------------------------
+# RequestTrace arithmetic (pure, no runtime)
+# ---------------------------------------------------------------------------
+
+
+def test_trace_stages_tile_latency_exactly():
+    tr = RequestTrace(req_id=1, arrival_t=10.0)
+    tr.on_flush(enqueue_t=10.0, flush_t=10.5)  # 0.5 queue wait
+    tr.on_exec(start_t=10.7, end_t=11.0)  # 0.2 batch wait, 0.3 execute
+    bd = tr.breakdown(11.1)
+    assert bd["queue_wait"] == pytest.approx(0.5)
+    assert bd["batch_wait"] == pytest.approx(0.2)
+    assert bd["execute"] == pytest.approx(0.3)
+    assert bd["overhead"] == pytest.approx(0.1)
+    assert bd["total"] == pytest.approx(1.1)
+    assert stage_sum(bd) == pytest.approx(bd["total"])
+    assert trace_consistent(bd)
+    assert bd["passes"] == 1 and bd["outcome"] == "served"
+    assert [e for e, _ in bd["events"]] == [
+        "admitted", "flushed", "executed", "served",
+    ]
+
+
+def test_trace_accumulates_across_passes():
+    tr = RequestTrace(0, 0.0)
+    tr.on_flush(0.0, 1.0)
+    tr.on_exec(1.0, 2.0)
+    tr.mark("escalate:1", 2.0)
+    tr.on_flush(2.0, 3.0)  # re-enqueued: second queue wait
+    tr.on_exec(3.5, 4.0)
+    bd = tr.breakdown(4.0)
+    assert bd["queue_wait"] == pytest.approx(2.0)
+    assert bd["batch_wait"] == pytest.approx(0.5)
+    assert bd["execute"] == pytest.approx(1.5)
+    assert bd["passes"] == 2
+    assert trace_consistent(bd)
+
+
+def test_trace_event_log_is_bounded():
+    tr = RequestTrace(0, 0.0)
+    for i in range(500):
+        tr.mark(f"e{i}", float(i))
+    bd = tr.breakdown(500.0)
+    assert len(bd["events"]) <= 64
+    assert bd["events_truncated"] is True
+
+
+# ---------------------------------------------------------------------------
+# runtime integration: every Response carries a consistent trace
+# ---------------------------------------------------------------------------
+
+
+def test_served_responses_carry_consistent_traces(world):
+    rt = _runtime(world)
+    rt.warmup()
+    ids = [
+        rt.submit(np.zeros((D,), np.float32), 4, "label",
+                  label_words_row([i % L], L))
+        for i in range(12)
+    ]
+    rt.drain()
+    for rid in ids:
+        resp = rt.poll(rid)
+        assert resp is not None and resp.trace is not None
+        assert resp.batch_id >= 0
+        assert set(STAGES) <= set(resp.trace)
+        # VirtualClock timestamps are exact: stage sum == latency.
+        assert stage_sum(resp.trace) == pytest.approx(resp.latency, abs=1e-9)
+        assert trace_consistent(resp.trace)
+        assert resp.trace["outcome"] == "served"
+        assert resp.trace["passes"] >= 1
+        assert resp.trace["execute"] > 0.0
+    # Stage histograms were fed once per completed response.
+    tel = rt.telemetry
+    assert set(tel.stage_hists) == set(STAGES)
+    assert all(h.total == len(ids) for h in tel.stage_hists.values())
+    assert "stages" in tel.summary()
+
+
+def test_escalated_request_accumulates_both_passes(world):
+    corpus, graph = world
+    from repro.core.types import SearchParams
+
+    starved = SearchParams(mode="prefer", k=8, ef_result=8, ef_sat=8,
+                           ef_other=8, n_start=2, max_iters=4)
+    big = SearchParams(mode="prefer", k=8, ef_result=128, ef_sat=128,
+                       ef_other=128, n_start=32, max_iters=64)
+    rt = ServingRuntime(
+        LocalExecutor(corpus, graph), n_labels=L, tiers=(starved, big),
+        ladder=(4,), families=("range",), max_wait=0.0, clock=VirtualClock(),
+    )
+    vectors = np.asarray(corpus.vectors)
+    attrs = np.asarray(corpus.attrs)
+    ids = []
+    for i in range(8):
+        center = float(attrs[i, 0])
+        ids.append(rt.submit(
+            vectors[i], 8, "range", (center - 0.04, center + 0.04, 0)
+        ))
+    rt.drain()
+    responses = [rt.poll(rid) for rid in ids]
+    escalated = [r for r in responses if r.escalations > 0]
+    assert escalated, "starved tier 0 should have under-filled something"
+    for r in escalated:
+        assert r.trace["passes"] == r.escalations + 1
+        assert trace_consistent(r.trace)
+        events = [e for e, _ in r.trace["events"]]
+        assert any(e.startswith("escalate:") for e in events)
+
+
+def test_shed_response_trace_outcome(world):
+    rt = _runtime(world, slo=None)
+    rt.warmup()
+    clock = rt.clock
+    rid = rt.submit(np.zeros((D,), np.float32), 4, "label",
+                    label_words_row([0], L), deadline=clock() + 0.001)
+    clock.advance(1.0)  # deadline long gone before the flush
+    rt.drain()
+    resp = rt.poll(rid)
+    assert resp.shed_reason == "expired"
+    assert resp.trace is not None
+    assert resp.trace["outcome"] == "shed"
+    assert resp.trace["execute"] == 0.0  # shed before any dispatch
+    assert trace_consistent(resp.trace)
+
+
+def test_tracing_off_serves_without_traces(world):
+    rt = _runtime(world, tracing=False)
+    rt.warmup()
+    rid = rt.submit(np.zeros((D,), np.float32), 4, "label",
+                    label_words_row([0], L))
+    rt.drain()
+    resp = rt.poll(rid)
+    assert resp is not None and resp.trace is None
+    assert resp.batch_id >= 0  # batch ids stamp regardless
+    assert not rt.telemetry.stage_hists
+
+
+# ---------------------------------------------------------------------------
+# structured logs
+# ---------------------------------------------------------------------------
+
+
+def test_runtime_emits_correlated_log_records(world):
+    logger = JsonLogger()
+    rt = _runtime(world, logger=logger)
+    rt.warmup()
+    rid = rt.submit(np.zeros((D,), np.float32), 4, "label",
+                    label_words_row([1], L))
+    rt.drain()
+    resp = rt.poll(rid)
+    records = logger.sink.records()
+    events = {r["event"] for r in records}
+    assert {"admit", "dispatch", "complete"} <= events
+    admit = next(r for r in records if r["event"] == "admit")
+    assert admit["req_id"] == rid and "ts" in admit
+    complete = next(r for r in records if r["event"] == "complete")
+    assert complete["req_id"] == rid
+    assert complete["batch_id"] == resp.batch_id
+    dispatch = next(r for r in records if r["event"] == "dispatch")
+    assert dispatch["batch_id"] == resp.batch_id
+    assert dispatch["epoch"] is None  # static executor
+
+
+def test_ring_buffer_sink_bounds_memory():
+    sink = RingBufferSink(capacity=4)
+    logger = JsonLogger(sink=sink, clock=lambda: 1.5)
+    for i in range(10):
+        logger.log("e", i=i)
+    assert len(sink) == 4
+    assert sink.emitted == 10 and sink.dropped == 6
+    assert [r["i"] for r in sink.records()] == [6, 7, 8, 9]
+    assert all(r["ts"] == 1.5 for r in sink.records())
+    out = io.StringIO()
+    assert sink.flush(out) == 4
+    assert len(sink) == 0
+    lines = [json.loads(x) for x in out.getvalue().splitlines()]
+    assert [r["i"] for r in lines] == [6, 7, 8, 9]
+    with pytest.raises(ValueError):
+        RingBufferSink(capacity=0)
+
+
+def test_logger_stream_tee():
+    stream = io.StringIO()
+    logger = JsonLogger(stream=stream)
+    logger.log("hello", req_id=3)
+    rec = json.loads(stream.getvalue())
+    assert rec == {"event": "hello", "req_id": 3}

@@ -1,0 +1,162 @@
+"""Telemetry hardening (PR 9 satellites): the goodput-rate window fix and
+LatencyHistogram boundary discipline.
+
+The histogram checks are property-style sweeps without a property-testing
+dependency: exact bucket edges, one-ulp neighbours of every boundary, and
+a seeded log-uniform sample — the inputs a float-rounding regression in
+``_bucket_of`` would actually surface on.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.serving import LatencyHistogram, Response, Telemetry
+
+
+def _resp(i, *, filled=1, arrival=0.0, complete=1.0, k=4):
+    return Response(
+        req_id=i,
+        ids=np.full((k,), -1 if filled == 0 else 0, np.int32),
+        dists=np.zeros((k,), np.float32),
+        k=k,
+        filled=filled,
+        tier=0,
+        escalations=0,
+        fill_history=(filled,),
+        arrival_t=arrival,
+        complete_t=complete,
+    )
+
+
+# ---------------------------------------------------------------------------
+# goodput window regression
+# ---------------------------------------------------------------------------
+
+
+def test_goodput_rate_numerator_is_window_scoped():
+    """Regression: the lifetime ``goodput`` counter over the *window's*
+    span inflated the rate once ``max_history`` evicted old responses.
+
+    12 goodput responses scroll out of an 8-deep window, leaving 8
+    zero-fill (non-goodput) ones: the lifetime counter says 12, but the
+    rate over the surviving window must be 0."""
+    tel = Telemetry(max_history=8)
+    for i in range(12):
+        tel.on_complete(_resp(i, filled=1, arrival=i, complete=i + 0.5))
+    for i in range(12, 20):
+        tel.on_complete(_resp(i, filled=0, arrival=i, complete=i + 0.5))
+    assert tel.counters["goodput"] == 12  # lifetime aggregate: unchanged
+    assert len(tel.responses) == 8  # deque overflowed as intended
+    assert tel.goodput_in_window() == 0
+    assert tel.goodput_rate() == 0.0
+    assert tel.goodput_rate(window_s=10.0) == 0.0
+
+
+def test_goodput_rate_mixed_window():
+    tel = Telemetry(max_history=4)
+    # 6 responses, alternating goodput; window keeps the last 4 (2 good).
+    for i in range(6):
+        tel.on_complete(
+            _resp(i, filled=i % 2, arrival=float(i), complete=float(i) + 0.5)
+        )
+    assert tel.goodput_in_window() == 2
+    # Window span: arrivals 2..5, completions 2.5..5.5 -> 3.5s.
+    assert tel.goodput_rate() == pytest.approx(2 / 3.5)
+    assert tel.goodput_rate(window_s=2.0) == pytest.approx(1.0)
+    assert tel.goodput_rate(window_s=0.0) == 0.0
+
+
+def test_goodput_excludes_missed_and_shed():
+    tel = Telemetry()
+    met = _resp(0, filled=2)
+    tel.on_complete(met)
+    missed = _resp(1, filled=2)
+    missed.deadline_missed = True
+    tel.on_complete(missed)
+    shed = _resp(2, filled=0)
+    shed.shed_reason = "expired"
+    tel.on_shed(shed)
+    assert tel.counters["goodput"] == 1
+    assert tel.goodput_in_window() == 1  # sheds never enter the window
+
+
+# ---------------------------------------------------------------------------
+# LatencyHistogram boundary discipline
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_of_exact_edges_stay_in_range():
+    """Every exact bucket edge, and both one-ulp neighbours of each, must
+    land in a *valid interior* bucket — never the under/overflow buckets —
+    for any in-range input."""
+    h = LatencyHistogram()
+    for b in range(1, h.n_buckets):  # edges strictly inside (lo, hi)
+        edge = h.upper_edge(b)
+        for x in (math.nextafter(edge, 0.0), edge, math.nextafter(edge, 2 * h.hi)):
+            assert h.lo <= x < h.hi  # sanity: still an in-range latency
+            got = h._bucket_of(x)
+            assert 1 <= got <= h.n_buckets, (b, x, got)
+
+
+def test_bucket_of_lo_hi_boundaries():
+    h = LatencyHistogram()
+    assert h._bucket_of(0.0) == 0
+    assert h._bucket_of(math.nextafter(h.lo, 0.0)) == 0
+    assert h._bucket_of(h.lo) == 1  # lo itself is in-range (clamped vs log dust)
+    # One ulp under hi is in-range: must NOT spill into the overflow bucket
+    # (log() of it can land exactly on n_buckets without the clamp).
+    assert h._bucket_of(math.nextafter(h.hi, 0.0)) == h.n_buckets
+    assert h._bucket_of(h.hi) == h.n_buckets + 1
+    assert h._bucket_of(float("inf")) == h.n_buckets + 1
+
+
+def test_bucket_of_monotone_and_consistent_with_edges():
+    """Log-uniform sample sweep: bucket index is monotone in the value,
+    and each value is <= the upper edge of its own bucket (the invariant
+    the quantile rule's conservatism rests on)."""
+    h = LatencyHistogram()
+    rng = np.random.default_rng(9)
+    xs = np.sort(
+        np.exp(rng.uniform(math.log(h.lo / 10), math.log(h.hi * 10), 4096))
+    )
+    buckets = [h._bucket_of(float(x)) for x in xs]
+    assert all(b0 <= b1 for b0, b1 in zip(buckets, buckets[1:]))
+    for x, b in zip(xs, buckets):
+        assert 0 <= b <= h.n_buckets + 1
+        assert float(x) <= h.upper_edge(b) or b == h.n_buckets + 1
+
+
+def test_quantile_monotone_and_conservative():
+    h = LatencyHistogram()
+    rng = np.random.default_rng(10)
+    xs = np.exp(rng.uniform(math.log(2e-6), math.log(30.0), 2000))
+    for x in xs:
+        h.record(float(x))
+    qs = [h.quantile(p) for p in (0, 1, 10, 25, 50, 75, 90, 99, 100)]
+    assert all(a <= b for a, b in zip(qs, qs[1:]))
+    # Upper-edge rule: every quantile dominates the true order statistic.
+    xs_sorted = np.sort(xs)
+    for p in (1, 50, 99):
+        rank = min(max(math.ceil(len(xs) * p / 100.0), 1), len(xs))
+        assert h.quantile(p) >= float(xs_sorted[rank - 1])
+    assert h.quantile(100) >= float(xs_sorted[-1])
+
+
+def test_quantile_empty_and_single():
+    h = LatencyHistogram()
+    assert math.isnan(h.quantile(50))
+    h.record(0.01)
+    assert h.quantile(0) == h.quantile(100)
+    assert h.quantile(50) >= 0.01  # its own bucket's upper edge
+    assert h.summary()["count"] == 1
+
+
+def test_overflow_and_underflow_recorded():
+    h = LatencyHistogram()
+    h.record(0.0)  # underflow
+    h.record(100.0)  # overflow
+    assert h.counts[0] == 1 and h.counts[-1] == 1
+    assert h.total == 2
+    assert h.quantile(100) == float("inf")
+    assert h.summary()["overflow"] == 1

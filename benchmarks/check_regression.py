@@ -313,6 +313,136 @@ GATES = (
         # this trips on a runaway (5x the reference), the <2% claim itself
         # is asserted at full shapes inside bench_obs
     ),
+    # --- replicas (PR10): tier scaling + replica-label discipline --------
+    Gate(
+        name="replicas 2-replica scaling floor",
+        suite="replicas", bench="acceptance",
+        metric="scaling_ratio_2r",
+        baseline_file="BENCH_PR10.json",
+        baseline_path=(),
+        direction="higher",
+        absolute=1.0,  # the tier must never cost throughput at 2 replicas
+    ),
+    Gate(
+        name="replicas scaling vs committed reference",
+        suite="replicas", bench="acceptance",
+        metric="scaling_ratio_2r",
+        baseline_file="BENCH_PR10.json",
+        baseline_path=("smoke_reference", "scaling_ratio_2r"),
+        direction="higher",
+        tolerance=0.5,  # CPU-clock ratio: wide, trips on a 2x collapse
+    ),
+    Gate(
+        name="replicas lost requests (scraped accounting)",
+        suite="replicas", bench="acceptance",
+        metric="lost",
+        baseline_file="BENCH_PR10.json",
+        baseline_path=(),
+        direction="lower",
+        absolute=0.0,  # every submit must terminate somewhere observable
+    ),
+    Gate(
+        name="replicas hung in-flight after quiesce",
+        suite="replicas", bench="acceptance",
+        metric="hung",
+        baseline_file="BENCH_PR10.json",
+        baseline_path=(),
+        direction="lower",
+        absolute=0.0,
+    ),
+    Gate(
+        name="replicas unaccounted shed",
+        suite="replicas", bench="acceptance",
+        metric="unaccounted_shed",
+        baseline_file="BENCH_PR10.json",
+        baseline_path=(),
+        direction="lower",
+        absolute=0.0,  # shed_total must decompose into expired + overload
+    ),
+    Gate(
+        name="replicas per-replica-to-rollup cumulativity",
+        suite="replicas", bench="acceptance",
+        metric="cumulativity",
+        baseline_file="BENCH_PR10.json",
+        baseline_path=(),
+        direction="higher",
+        absolute=1.0,  # counters AND latency buckets sum bit-exactly
+    ),
+    Gate(
+        name="replicas one streaming epoch across replicas",
+        suite="replicas", bench="acceptance",
+        metric="epochs_consistent",
+        baseline_file="BENCH_PR10.json",
+        baseline_path=(),
+        direction="higher",
+        absolute=1.0,  # broadcast divergence would split the epochs
+    ),
+    Gate(
+        name="replicas equal fill at 2 replicas",
+        suite="replicas", bench="acceptance",
+        metric="fill_gap_2r",
+        baseline_file="BENCH_PR10.json",
+        baseline_path=(),
+        direction="lower",
+        absolute=0.15,  # scaling must not be bought with emptier answers
+    ),
+    # --- http_e2e (PR10 satellite): socket-only server validation --------
+    # Computed by benchmarks/http_e2e.py against a real subprocess server;
+    # all exact bits, so they gate absolutely.
+    Gate(
+        name="http-e2e lost requests",
+        suite="http_e2e", bench="acceptance",
+        metric="lost",
+        baseline_file="BENCH_PR10.json",
+        baseline_path=(),
+        direction="lower",
+        absolute=0.0,
+    ),
+    Gate(
+        name="http-e2e hung in-flight",
+        suite="http_e2e", bench="acceptance",
+        metric="hung",
+        baseline_file="BENCH_PR10.json",
+        baseline_path=(),
+        direction="lower",
+        absolute=0.0,
+    ),
+    Gate(
+        name="http-e2e replica-label cumulativity",
+        suite="http_e2e", bench="acceptance",
+        metric="cumulativity",
+        baseline_file="BENCH_PR10.json",
+        baseline_path=(),
+        direction="higher",
+        absolute=1.0,
+    ),
+    Gate(
+        name="http-e2e one epoch across replicas",
+        suite="http_e2e", bench="acceptance",
+        metric="epochs_consistent",
+        baseline_file="BENCH_PR10.json",
+        baseline_path=(),
+        direction="higher",
+        absolute=1.0,
+    ),
+    Gate(
+        name="http-e2e every search answered",
+        suite="http_e2e", bench="acceptance",
+        metric="served_frac",
+        baseline_file="BENCH_PR10.json",
+        baseline_path=(),
+        direction="higher",
+        absolute=1.0,
+    ),
+    Gate(
+        name="http-e2e graceful SIGTERM drain",
+        suite="http_e2e", bench="acceptance",
+        metric="clean_exit",
+        baseline_file="BENCH_PR10.json",
+        baseline_path=(),
+        direction="higher",
+        absolute=1.0,  # the server must drain and exit 0, never be killed
+    ),
 )
 
 

@@ -1,0 +1,263 @@
+"""HTTP end-to-end gate: boot the real server binary, talk only over the
+socket, validate only the scrape.
+
+CI's ``http-e2e`` step (all matrix legs) runs this harness, which
+
+  * launches ``python -m repro.launch.serve --serve-http 0 --replicas 2``
+    as a SUBPROCESS — the ephemeral port comes back on stdout, so nothing
+    here shares memory with the server;
+  * replays a small mixed constrained workload (searches from concurrent
+    client threads, broadcast upserts/deletes interleaved) purely over
+    HTTP;
+  * scrapes ``/metrics`` and validates it with ``obs.promparse``: the
+    accounting identity holds with zero lost / hung requests, every
+    per-replica counter and latency bucket sums exactly to its
+    ``replica="all"`` rollup, and all replicas sit on one streaming epoch;
+  * sends SIGTERM and requires a graceful drain + exit 0.
+
+Emits ``suite="http_e2e"`` JSON rows (``--json-out`` appends them) that
+``benchmarks/check_regression.py`` gates absolutely — and ALSO exits
+non-zero itself on any failed check, so the CI step trips even if the
+gate script is never reached.
+
+Usage:
+    PYTHONPATH=src:. python benchmarks/http_e2e.py --json-out smoke.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+import urllib.request
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.obs.promparse import parse_exposition  # noqa: E402
+
+N_REPLICAS = 2
+ROUTER = "hash"
+D = 16
+N_LABELS = 5
+N_SEARCHES = 32
+N_UPSERTS = 6
+N_DELETES = 3
+BOOT_TIMEOUT_S = 600
+DRAIN_TIMEOUT_S = 120
+
+
+def _launch():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (
+        os.path.join(REPO, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    cmd = [
+        sys.executable, "-m", "repro.launch.serve",
+        "--serve-http", "0", "--replicas", str(N_REPLICAS),
+        "--router", ROUTER,
+        # churn > 0 serves through the streaming executor so the mutation
+        # routes are live; small shapes keep the boot CI-cheap.
+        "--churn", "0.3", "--n", "2000", "--d", str(D),
+        "--labels", str(N_LABELS), "--k-cap", "8", "--ladder", "4,16",
+        "--base-ef", "16", "--base-iters", "32", "--max-wait", "0.002",
+    ]
+    proc = subprocess.Popen(
+        cmd, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+        text=True, env=env, cwd=REPO,
+    )
+    addr, boot_lines = None, []
+    deadline = time.time() + BOOT_TIMEOUT_S
+    while time.time() < deadline:
+        line = proc.stdout.readline()
+        if not line:
+            if proc.poll() is not None:
+                break
+            time.sleep(0.05)
+            continue
+        boot_lines.append(line)
+        if "serving on " in line:
+            addr = line.strip().rsplit("serving on ", 1)[-1]
+            break
+    if addr is None:
+        proc.kill()
+        raise RuntimeError(
+            "server never announced an address:\n" + "".join(boot_lines)
+        )
+    return proc, addr
+
+
+def _post(addr, route, payload):
+    req = urllib.request.Request(
+        addr + route,
+        data=json.dumps(payload).encode(),
+        headers={"Content-Type": "application/json"},
+    )
+    with urllib.request.urlopen(req, timeout=120) as r:
+        return json.loads(r.read())
+
+
+def _get(addr, route):
+    with urllib.request.urlopen(addr + route, timeout=120) as r:
+        return r.read().decode()
+
+
+def _val(fam, default=0.0, **labels):
+    try:
+        return fam.value(**labels)
+    except KeyError:
+        return default
+
+
+def _replay(addr):
+    """Mixed searches from concurrent clients + broadcast churn, HTTP only."""
+    rng = np.random.default_rng(13)
+    payloads = []
+    for _ in range(N_SEARCHES):
+        q = rng.standard_normal(D).astype(np.float32)
+        r = float(rng.random())
+        if r < 0.5:
+            p = {"query": q.tolist(), "k": 4, "family": "label",
+                 "labels": [int(rng.integers(0, N_LABELS))]}
+        else:
+            lo = float(rng.uniform(0.0, 0.7))
+            p = {"query": q.tolist(), "k": 8, "family": "range",
+                 "range": [lo, lo + 0.25, 0]}
+        payloads.append(p)
+
+    mutation_problems = []
+    with ThreadPoolExecutor(max_workers=8) as pool:
+        futs = [pool.submit(_post, addr, "/v1/search", p) for p in payloads]
+        slots = []
+        for j in range(N_UPSERTS):
+            body = _post(addr, "/v1/upsert", {
+                "vector": rng.standard_normal(D).astype(np.float32).tolist(),
+                "label": int(j % N_LABELS),
+            })
+            if not (body.get("ok") and body.get("slot_consistent")
+                    and len(body.get("replicas", ())) == N_REPLICAS):
+                mutation_problems.append(("upsert", body))
+            slots.append(body.get("slot"))
+        for slot in slots[:N_DELETES]:
+            body = _post(addr, "/v1/delete", {"slot": slot})
+            if not (body.get("ok") and body.get("slot_consistent")):
+                mutation_problems.append(("delete", body))
+        bodies = [f.result() for f in futs]
+    served = [
+        b for b in bodies
+        if b.get("error") is None and b.get("replica") is not None
+    ]
+    return served, mutation_problems
+
+
+def _validate_scrape(text):
+    fams = parse_exposition(text)
+    ev = fams["repro_serving_events_total"]
+    ids = [str(i) for i in range(N_REPLICAS)]
+
+    def ev_all(key):
+        return _val(ev, event=key, replica="all")
+
+    lost = (ev_all("submitted") - ev_all("completed") - ev_all("shed_total")
+            - ev_all("upserts_applied") - ev_all("deletes_applied"))
+    hung = fams["repro_serving_in_flight"].value(replica="all")
+    unaccounted = (ev_all("shed_total") - ev_all("shed_expired")
+                   - ev_all("shed_overload"))
+
+    cumulativity = 1.0
+    for key in sorted(set(ev.label_values("event"))):
+        if _val(ev, event=key, replica="all") != sum(
+            _val(ev, event=key, replica=i) for i in ids
+        ):
+            cumulativity = 0.0
+    lat = fams["repro_serving_latency_seconds"]
+    per_replica = [dict(lat.buckets(replica=i)) for i in ids]
+    for edge, cum in lat.buckets(replica="all"):
+        if cum != sum(pr[edge] for pr in per_replica):
+            cumulativity = 0.0
+
+    epochs = {fams["repro_streaming_epoch"].value(replica=i) for i in ids}
+    return {
+        "goodput": ev_all("goodput"),
+        "lost": lost,
+        "hung": hung,
+        "unaccounted_shed": unaccounted,
+        "cumulativity": cumulativity,
+        "epochs_consistent": 1.0 if len(epochs) == 1 else 0.0,
+        "tier_replicas_gauge": fams["repro_tier_replicas"].value(),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json-out", default="",
+                    help="append the suite rows to this json-lines file")
+    args = ap.parse_args(argv)
+
+    proc, addr = _launch()
+    try:
+        served, mutation_problems = _replay(addr)
+        health = json.loads(_get(addr, "/healthz"))
+        scrape = _validate_scrape(_get(addr, "/metrics"))
+    except Exception:
+        proc.kill()
+        raise
+
+    proc.send_signal(signal.SIGTERM)
+    try:
+        proc.wait(timeout=DRAIN_TIMEOUT_S)
+    except subprocess.TimeoutExpired:
+        proc.kill()
+    tail = proc.stdout.read() or ""
+    clean_exit = 1.0 if (proc.returncode == 0 and "draining" in tail) else 0.0
+
+    row = {
+        "suite": "http_e2e",
+        "bench": "acceptance",
+        "n_replicas": N_REPLICAS,
+        "router": ROUTER,
+        "served": len(served),
+        "served_frac": round(len(served) / N_SEARCHES, 4),
+        "mutation_problems": len(mutation_problems),
+        "healthz_replicas": len(health.get("replicas", ())),
+        "clean_exit": clean_exit,
+        **scrape,
+    }
+    line = json.dumps(row)
+    print(line, flush=True)
+    if args.json_out:
+        with open(args.json_out, "a") as fh:
+            fh.write(line + "\n")
+
+    checks = {
+        "every search answered over the socket": row["served_frac"] == 1.0,
+        "mutations broadcast ok + slot-consistent":
+            row["mutation_problems"] == 0,
+        "no lost requests": row["lost"] == 0,
+        "no hung in-flight": row["hung"] == 0,
+        "shed fully attributed": row["unaccounted_shed"] == 0,
+        "replica-label cumulativity": row["cumulativity"] == 1.0,
+        "one epoch across replicas": row["epochs_consistent"] == 1.0,
+        "healthz reports every replica":
+            row["healthz_replicas"] == N_REPLICAS,
+        "tier gauge matches": row["tier_replicas_gauge"] == N_REPLICAS,
+        "SIGTERM drained and exited 0": row["clean_exit"] == 1.0,
+    }
+    failed = [name for name, ok in checks.items() if not ok]
+    if failed:
+        print(f"http_e2e FAILED {failed}: {row}", file=sys.stderr)
+        if mutation_problems:
+            print(f"mutation bodies: {mutation_problems}", file=sys.stderr)
+        return 1
+    print("http_e2e: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

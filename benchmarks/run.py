@@ -18,7 +18,8 @@ def main() -> None:
         "--only",
         default="",
         help="comma list: pipeline,constraints,alter_ratio,clusters,mnist,"
-        "kernels,beam,fused,serving,streaming,hybrid,slo,autotune,obs",
+        "kernels,beam,fused,serving,streaming,hybrid,slo,autotune,obs,"
+        "replicas",
     )
     ap.add_argument(
         "--smoke",
@@ -56,6 +57,7 @@ def main() -> None:
         bench_mnist_like,
         bench_obs,
         bench_pipeline,
+        bench_replicas,
         bench_serving,
         bench_slo,
         bench_streaming,
@@ -112,6 +114,14 @@ def main() -> None:
         # scraped /metrics must parse BIT-identical to the in-process
         # Telemetry; full mode writes BENCH_PR9.json.
         "obs": bench_obs.main,
+        # bench_replicas boots N shared-nothing streaming replicas behind
+        # one HTTP front-end (PR10) and measures goodput/p99/fill scaling
+        # vs the 1-replica baseline SOLELY from parsed /metrics scrapes
+        # (per-replica virtual execute seconds as the busy denominator);
+        # asserts zero lost/hung requests, replica-label cumulativity and
+        # one streaming epoch across replicas; full mode (sizes 1/2/4,
+        # >= 2.5x at 4 replicas) writes BENCH_PR10.json.
+        "replicas": bench_replicas.main,
     }
     print("name,us_per_call,derived")
 

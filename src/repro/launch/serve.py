@@ -18,6 +18,11 @@ HTTP front-end (DESIGN.md §12) — wall-clock runtime behind a real socket:
     PYTHONPATH=src python -m repro.launch.serve --serve-http 8080 \
         --log-json serve_log.jsonl
     curl -s localhost:8080/metrics | head
+
+Multi-replica tier (DESIGN.md §13) — N shared-nothing runtimes behind one
+front-end, hash- or load-routed, with /metrics labeled per replica:
+    PYTHONPATH=src python -m repro.launch.serve --serve-http 8080 \
+        --replicas 4 --router hash
 """
 from __future__ import annotations
 
@@ -39,8 +44,13 @@ from repro.serving import (
 )
 
 
-def build_runtime(args, corpus, clock):
-    """Executor + runtime for either the local or the distributed path."""
+def build_runtime(args, corpus, clock, prebuilt_graph=None, replica_id=None):
+    """Executor + runtime for either the local or the distributed path.
+
+    ``prebuilt_graph`` shares one (read-only) static graph build across
+    replicas; each replica still gets its OWN executor, compile cache and
+    (for churn) its own mutable ``StreamingIndex`` slot pool —
+    shared-nothing everywhere state can change."""
 
     def train_pq(vectors):
         # Codes are row-aligned with the corpus the executor serves, so the
@@ -62,7 +72,7 @@ def build_runtime(args, corpus, clock):
         from repro.streaming import StreamingIndex
 
         print("building streaming index (slot pool)...")
-        graph = build_index(
+        graph = prebuilt_graph if prebuilt_graph is not None else build_index(
             jax.random.PRNGKey(1), corpus, degree=16, sample_size=512
         )
         index = StreamingIndex.from_static(
@@ -89,10 +99,13 @@ def build_runtime(args, corpus, clock):
         pq_index = train_pq(corpus_p.vectors) if args.approx == "pq" else None
         executor = DistributedExecutor(mesh, corpus_s, graph_s, pq_index)
     else:
-        print("building index...")
-        graph = build_index(
-            jax.random.PRNGKey(1), corpus, degree=16, sample_size=512
-        )
+        if prebuilt_graph is not None:
+            graph = prebuilt_graph
+        else:
+            print("building index...")
+            graph = build_index(
+                jax.random.PRNGKey(1), corpus, degree=16, sample_size=512
+            )
         pq_index = train_pq(corpus.vectors) if args.approx == "pq" else None
         executor = LocalExecutor(corpus, graph, pq_index)
 
@@ -152,6 +165,7 @@ def build_runtime(args, corpus, clock):
         clock=clock,
         slo=slo_cfg,
         shed_expired=args.slo,
+        replica_id=replica_id,
     )
     if args.hybrid:
         if args.distributed:
@@ -235,9 +249,22 @@ def main():
     ap.add_argument(
         "--serve-http", type=int, default=None, metavar="PORT",
         help="instead of replaying a synthetic stream, serve over HTTP "
-        "(DESIGN.md §12): POST /v1/search, GET /metrics (Prometheus text), "
-        "/healthz, /varz. Runs on the wall clock; Ctrl-C drains in-flight "
-        "work and exits. Port 0 picks a free port",
+        "(DESIGN.md §12): POST /v1/search /v1/upsert /v1/delete, GET "
+        "/metrics (Prometheus text), /healthz, /varz. Runs on the wall "
+        "clock; Ctrl-C drains in-flight work and exits. Port 0 picks a "
+        "free port",
+    )
+    ap.add_argument(
+        "--replicas", type=int, default=1, metavar="N",
+        help="shared-nothing runtime replicas behind the HTTP front-end "
+        "(DESIGN.md §13): each gets its own compile cache, controller, "
+        "batcher, pump thread, and (with --churn) slot pool; mutations "
+        "broadcast to all at one enqueue boundary. Needs --serve-http",
+    )
+    ap.add_argument(
+        "--router", default="hash", choices=("hash", "least-loaded"),
+        help="replica router: consistent-hash by request key (compile-"
+        "cache affinity, deterministic) or least-loaded by pending depth",
     )
     ap.add_argument(
         "--log-json", default=None, metavar="PATH",
@@ -246,6 +273,14 @@ def main():
         "and flushed to PATH at shutdown",
     )
     args = ap.parse_args()
+    if args.replicas < 1:
+        raise SystemExit("--replicas must be >= 1")
+    if args.replicas > 1 and args.serve_http is None:
+        raise SystemExit("--replicas N needs --serve-http (the replica "
+                         "tier lives behind the HTTP front-end)")
+    if args.replicas > 1 and args.distributed:
+        raise SystemExit("--replicas replicates the local executor; the "
+                         "mesh path is single-tier (drop --distributed)")
 
     corpus = make_labeled_corpus(
         jax.random.PRNGKey(0), n=args.n, d=args.d, n_labels=args.labels
@@ -262,14 +297,44 @@ def main():
         clock = wall_clock
     else:
         clock = VirtualClock()
-    runtime = build_runtime(args, corpus, clock)
+    if args.replicas > 1:
+        from repro.serving import ReplicaSet, make_replica_router
+
+        print(f"building index (shared across {args.replicas} replicas)...")
+        shared_graph = build_index(
+            jax.random.PRNGKey(1), corpus, degree=16, sample_size=512
+        )
+        runtime = ReplicaSet(
+            [
+                build_runtime(
+                    args, corpus, clock,
+                    prebuilt_graph=shared_graph, replica_id=i,
+                )
+                for i in range(args.replicas)
+            ],
+            router=make_replica_router(args.router, args.replicas),
+        )
+        trace_budget = runtime.replicas[0].trace_budget
+    else:
+        runtime = build_runtime(args, corpus, clock)
+        trace_budget = runtime.trace_budget
     logger = None
     if args.log_json is not None:
         from repro.obs import JsonLogger
 
-        logger = JsonLogger(clock=runtime.clock)
-        runtime.logger = logger
-    print(f"warming compile cache ({runtime.trace_budget} bucket shapes)...")
+        # Single-runtime path keeps the runtime's own clock (build_runtime
+        # may have wrapped it in a FaultClock); tier children bind their
+        # replica's clock in attach_logger.
+        logger = JsonLogger(
+            clock=clock if args.replicas > 1 else runtime.clock
+        )
+        if args.replicas > 1:
+            runtime.attach_logger(logger)
+        else:
+            runtime.logger = logger
+    print(f"warming compile cache ({trace_budget} bucket shapes"
+          + (f" x {args.replicas} replicas" if args.replicas > 1 else "")
+          + ")...")
     compiled = runtime.warmup()
 
     if args.serve_http is not None:
@@ -280,7 +345,10 @@ def main():
         frontend = ServingFrontend(runtime, logger=logger, port=args.serve_http)
         addr = frontend.start()
         print(f"compiled {compiled} closures; serving on {addr}")
-        print("routes: POST /v1/search | GET /metrics /healthz /varz "
+        print(f"replicas: {frontend.n_replicas} (router "
+              f"{runtime.router.name if args.replicas > 1 else 'n/a'})")
+        print("routes: POST /v1/search /v1/upsert /v1/delete | "
+              "GET /metrics /healthz /varz "
               "(SIGINT/SIGTERM drains and exits)")
         # Explicit handlers: a supervisor (or a non-interactive shell that
         # spawned us with SIGINT ignored) sends SIGTERM — both signals must

@@ -3,7 +3,13 @@
 # behind a ring-buffer sink, and the stdlib HTTP front-end over the serving
 # runtime. Dependency direction: repro.serving imports repro.obs, never the
 # reverse — every adapter here is duck-typed over runtime objects.
-from repro.obs.adapters import instrument_runtime, latency_hist_samples
+from repro.obs.adapters import (
+    instrument_runtime,
+    instrument_tier,
+    latency_hist_samples,
+    rollup_samples,
+    runtime_families,
+)
 from repro.obs.logs import JsonLogger, RingBufferSink
 from repro.obs.metrics import (
     CallbackFamily,
@@ -40,8 +46,11 @@ __all__ = [
     "ServingFrontend",
     "format_value",
     "instrument_runtime",
+    "instrument_tier",
     "latency_hist_samples",
     "parse_exposition",
+    "rollup_samples",
+    "runtime_families",
     "stage_sum",
     "trace_consistent",
 ]

@@ -4,22 +4,36 @@ A stdlib ``ThreadingHTTPServer`` (no new dependencies) exposing:
 
     POST /v1/search   JSON {query, k, family, labels|range[, deadline_ms,
                       timeout_s]} -> submit, wait, return the Response
-                      (ids, dists, fill, tier, trace breakdown, epoch, ...)
+                      (ids, dists, fill, tier, trace breakdown, epoch,
+                      replica, ...)
+    POST /v1/upsert   JSON {vector[, label, attrs]} -> streaming insert;
+                      broadcast to every replica of a tier
+    POST /v1/delete   JSON {slot} -> streaming tombstone; broadcast
     GET  /metrics     Prometheus text exposition from the registry
-    GET  /healthz     liveness + in-flight/queue snapshot
+    GET  /healthz     liveness + in-flight/queue snapshot (never blocks
+                      behind a draining replica)
     GET  /varz        full runtime report (telemetry summary, cache,
                       controller, ladder level, epoch) as JSON
 
-The runtime itself stays single-threaded: every runtime call holds one
-lock, and a background *pump* thread advances the clock (virtual clocks
-advance by the batcher's ``max_wait`` per tick, so deterministic-clock
-runtimes serve over a real socket too) and runs ``step()``. Handler
-threads only submit under the lock and then poll-wait, so the batcher
-still groups concurrent requests into shared microbatches.
+The front-end serves either ONE runtime or a ``ReplicaSet`` (duck-typed
+on a ``.replicas`` attribute — DESIGN.md §13). Each replica stays
+single-threaded behind its own lock with its own background *pump* thread
+advancing its clock (virtual clocks advance by the batcher's ``max_wait``
+per tick, so deterministic-clock runtimes serve over a real socket too)
+and running ``step()``. Handler threads only submit under the routed
+replica's lock and then poll-wait, so each replica's batcher still groups
+concurrent requests into shared microbatches.
 
-``close()`` is the graceful shutdown: stop admitting, drain the runtime
-(every in-flight request completes or sheds — nothing is lost), flush the
-structured-log sink, then stop the socket.
+Locking is strictly per replica — there is NO front-end-global lock on
+the hot path. ``/healthz`` and ``/metrics`` acquire each replica lock
+with a short timeout (falling back to a lock-free peek), so one slow
+replica mid-drain can never stall the tier's health or scrape surface
+(the single-RLock ``close()`` stall this replaces).
+
+``close()`` is the graceful shutdown: stop admitting, stop the pumps,
+drain every replica concurrently (every in-flight request completes or
+sheds — nothing is lost), flush the structured-log sink, then stop the
+socket.
 """
 from __future__ import annotations
 
@@ -32,7 +46,7 @@ from typing import Optional
 import numpy as np
 
 
-def _response_payload(resp) -> dict:
+def _response_payload(resp, replica: Optional[int] = None) -> dict:
     return {
         "req_id": resp.req_id,
         "ids": [int(i) for i in np.asarray(resp.ids).tolist()],
@@ -51,11 +65,13 @@ def _response_payload(resp) -> dict:
         "error": resp.error,
         "trace": resp.trace,
         "batch_id": resp.batch_id,
+        "replica": replica,
     }
 
 
 class ServingFrontend:
-    """HTTP surface + pump thread over one ``ServingRuntime``."""
+    """HTTP surface + per-replica pump threads over one runtime or a
+    ``ReplicaSet``."""
 
     def __init__(
         self,
@@ -67,30 +83,51 @@ class ServingFrontend:
         pump_interval: float = 0.0005,
         default_timeout_s: float = 10.0,
     ):
-        if registry is None:
-            from repro.obs.adapters import instrument_runtime
-
-            registry = instrument_runtime(runtime)
+        # A ReplicaSet quacks via .replicas/.locks; a bare runtime gets a
+        # one-element tier-shaped view so every code path below is shared.
+        self.tier = runtime if hasattr(runtime, "replicas") else None
         self.runtime = runtime
+        if self.tier is not None:
+            self.runtimes = list(self.tier.replicas)
+            self.locks = list(self.tier.locks)
+        else:
+            self.runtimes = [runtime]
+            self.locks = [threading.RLock()]
+        # Back-compat: PR 9 callers coordinate with the (single) pump via
+        # ``frontend.lock`` — that contract survives as replica 0's lock.
+        self.lock = self.locks[0]
+        if registry is None:
+            if self.tier is not None:
+                from repro.obs.adapters import instrument_tier
+
+                registry = instrument_tier(self.tier)
+            else:
+                from repro.obs.adapters import instrument_runtime
+
+                registry = instrument_runtime(runtime)
         self.registry = registry
         self.logger = logger
         if logger is not None:
-            # One shared logger: HTTP lifecycle records and the runtime's
+            # One shared logger: HTTP lifecycle records and the runtimes'
             # admit/dispatch/complete records interleave on the runtime's
-            # (possibly virtual) clock.
+            # (possibly virtual) clock; tier replicas log through bound
+            # children stamping their replica id.
             if logger.clock is None:
-                logger.clock = runtime.clock
-            if getattr(runtime, "logger", None) is None:
+                logger.clock = self.runtimes[0].clock
+            if self.tier is not None:
+                self.tier.attach_logger(logger)
+            elif getattr(runtime, "logger", None) is None:
                 runtime.logger = logger
+        self.n_labels = self.runtimes[0].n_labels
         self.host = host
         self._port = int(port)
         self.pump_interval = float(pump_interval)
         self.default_timeout_s = float(default_timeout_s)
-        self.lock = threading.RLock()
         self._server: Optional[ThreadingHTTPServer] = None
         self._threads: list = []
         self._stop = threading.Event()
         self._accepting = False
+        self._meta_lock = threading.Lock()
         self.started_requests = 0
 
     # --- lifecycle --------------------------------------------------------
@@ -101,6 +138,10 @@ class ServingFrontend:
     @property
     def address(self) -> str:
         return f"http://{self.host}:{self.port}"
+
+    @property
+    def n_replicas(self) -> int:
+        return len(self.runtimes)
 
     def start(self) -> str:
         frontend = self
@@ -119,20 +160,25 @@ class ServingFrontend:
             name="obs-http-serve",
             daemon=True,
         )
-        pump = threading.Thread(
-            target=self._pump, name="obs-http-pump", daemon=True
-        )
-        self._threads = [serve, pump]
-        serve.start()
-        pump.start()
+        self._threads = [serve]
+        for i in range(self.n_replicas):
+            self._threads.append(threading.Thread(
+                target=self._pump, args=(i,),
+                name=f"obs-http-pump-{i}", daemon=True,
+            ))
+        for t in self._threads:
+            t.start()
         if self.logger is not None:
-            self.logger.log("http_start", address=self.address)
+            self.logger.log(
+                "http_start", address=self.address, replicas=self.n_replicas
+            )
         return self.address
 
-    def _pump(self) -> None:
-        runtime = self.runtime
+    def _pump(self, i: int) -> None:
+        runtime = self.runtimes[i]
+        lock = self.locks[i]
         while not self._stop.is_set():
-            with self.lock:
+            with lock:
                 clock = runtime.clock
                 if hasattr(clock, "advance"):
                     # Virtual-clock runtimes never see max_wait elapse on
@@ -142,7 +188,9 @@ class ServingFrontend:
             self._stop.wait(self.pump_interval)
 
     def close(self, drain: bool = True, log_path: Optional[str] = None) -> dict:
-        """Graceful shutdown: stop admitting, drain in-flight work, flush
+        """Graceful shutdown: stop admitting, stop the pumps, drain every
+        replica concurrently (each under its own lock — ``/healthz`` and
+        ``/metrics`` keep answering while a slow replica drains), flush
         the log sink (optionally to ``log_path``), stop the socket.
         Returns a small shutdown report."""
         self._accepting = False
@@ -152,14 +200,21 @@ class ServingFrontend:
                 continue
             t.join(timeout=5.0)
         drained = 0
-        with self.lock:
-            if drain:
-                drained = self.runtime.drain()
-            if self.logger is not None:
-                self.logger.log(
-                    "http_shutdown", drained=drained,
-                    in_flight=self.runtime.in_flight,
-                )
+        per_replica = [0] * self.n_replicas
+        if drain:
+            if self.tier is not None:
+                drained = self.tier.drain()
+                per_replica = [rt.telemetry.counters["completed"]
+                               for rt in self.runtimes]
+            else:
+                with self.locks[0]:
+                    drained = self.runtime.drain()
+                per_replica = [drained]
+        in_flight = sum(rt.in_flight for rt in self.runtimes)
+        if self.logger is not None:
+            self.logger.log(
+                "http_shutdown", drained=drained, in_flight=in_flight,
+            )
         flushed = 0
         if self.logger is not None and log_path is not None:
             flushed = self.logger.flush_to_path(log_path)
@@ -169,8 +224,10 @@ class ServingFrontend:
             self._server = None
         return {
             "drained": drained,
-            "in_flight": self.runtime.in_flight,
+            "in_flight": in_flight,
             "log_records_flushed": flushed,
+            "replicas": self.n_replicas,
+            "completed_per_replica": per_replica,
         }
 
     # --- request handling (called from handler threads) -------------------
@@ -187,27 +244,129 @@ class ServingFrontend:
         timeout_s = float(payload.get("timeout_s", self.default_timeout_s))
         if not self._accepting:
             return 503, {"error": "shutting down"}
-        with self.lock:
-            deadline = None
-            if payload.get("deadline_ms") is not None:
-                deadline = self.runtime.clock() + float(payload["deadline_ms"]) / 1e3
-            try:
-                req_id = self.runtime.submit(
-                    query, k, family, operand, deadline=deadline
+        deadline_s = None
+        if payload.get("deadline_ms") is not None:
+            deadline_s = float(payload["deadline_ms"]) / 1e3
+        try:
+            if self.tier is not None:
+                replica, req_id = self.tier.submit(
+                    query, k, family, operand, deadline_s=deadline_s
                 )
-            except AdmissionError as e:
-                return 429, {"error": str(e)}
-            except (TypeError, ValueError) as e:
-                return 400, {"error": f"bad request: {e}"}
+            else:
+                replica = 0
+                with self.locks[0]:
+                    deadline = (
+                        self.runtime.clock() + deadline_s
+                        if deadline_s is not None else None
+                    )
+                    req_id = self.runtime.submit(
+                        query, k, family, operand, deadline=deadline
+                    )
+        except AdmissionError as e:
+            return 429, {"error": str(e)}
+        except (TypeError, ValueError) as e:
+            return 400, {"error": f"bad request: {e}"}
+        with self._meta_lock:
             self.started_requests += 1
         give_up = time.monotonic() + timeout_s
         while time.monotonic() < give_up:
-            with self.lock:
-                resp = self.runtime.poll(req_id)
+            with self.locks[replica]:
+                resp = self.runtimes[replica].poll(req_id)
             if resp is not None:
-                return 200, _response_payload(resp)
+                return 200, _response_payload(
+                    resp,
+                    replica=(
+                        replica if self.tier is not None
+                        else self.runtime.replica_id
+                    ),
+                )
             time.sleep(self.pump_interval)
-        return 504, {"error": "timed out waiting for completion", "req_id": req_id}
+        return 504, {
+            "error": "timed out waiting for completion",
+            "req_id": req_id,
+            "replica": replica if self.tier is not None else None,
+        }
+
+    def handle_mutation(self, kind: str, payload: dict) -> tuple:
+        """Streaming upsert/delete over the wire. On a tier the mutation
+        is broadcast to every replica at one enqueue boundary and the
+        reply aggregates all replicas' outcomes (slot agreement included);
+        a single runtime answers with the plain response payload."""
+        from repro.serving.types import AdmissionError
+
+        timeout_s = float(payload.get("timeout_s", self.default_timeout_s))
+        if not self._accepting:
+            return 503, {"error": "shutting down"}
+        try:
+            if kind == "upsert":
+                vector = np.asarray(payload["vector"], dtype=np.float32)
+                label = int(payload.get("label", 0))
+                attrs = payload.get("attrs")
+                if attrs is not None:
+                    attrs = np.asarray(attrs, dtype=np.float32)
+                if self.tier is not None:
+                    handles = self.tier.submit_upsert(
+                        vector, label=label, attrs=attrs
+                    )
+                else:
+                    with self.locks[0]:
+                        handles = ((0, self.runtime.submit_upsert(
+                            vector, label=label, attrs=attrs
+                        )),)
+            else:  # delete
+                slot = int(payload["slot"])
+                if self.tier is not None:
+                    handles = self.tier.submit_delete(slot)
+                else:
+                    with self.locks[0]:
+                        handles = ((0, self.runtime.submit_delete(slot)),)
+        except AdmissionError as e:
+            return 429, {"error": str(e)}
+        except (KeyError, TypeError, ValueError) as e:
+            # TypeError covers "mutations need a streaming executor".
+            return 400, {"error": f"bad request: {e}"}
+        with self._meta_lock:
+            self.started_requests += 1
+        results: dict = {}
+        give_up = time.monotonic() + timeout_s
+        while time.monotonic() < give_up and len(results) < len(handles):
+            for i, rid in handles:
+                if (i, rid) in results:
+                    continue
+                with self.locks[i]:
+                    resp = self.runtimes[i].poll(rid)
+                if resp is not None:
+                    results[(i, rid)] = resp
+            if len(results) < len(handles):
+                time.sleep(self.pump_interval)
+        if len(results) < len(handles):
+            return 504, {
+                "error": f"timed out waiting for {kind} broadcast",
+                "completed": len(results),
+                "expected": len(handles),
+            }
+        per_replica = [
+            {
+                "replica": i,
+                "req_id": rid,
+                "slot": int(np.asarray(results[(i, rid)].ids)[0]),
+                "ok": bool(results[(i, rid)].filled),
+                "epoch": results[(i, rid)].epoch,
+                "error": results[(i, rid)].error,
+            }
+            for i, rid in handles
+        ]
+        slots = {r["slot"] for r in per_replica}
+        body = {
+            "family": kind,
+            "ok": all(r["ok"] for r in per_replica),
+            "slot": per_replica[0]["slot"] if len(slots) == 1 else None,
+            "slot_consistent": len(slots) == 1,
+            "replicas": per_replica,
+        }
+        if self.tier is None:
+            body["epoch"] = per_replica[0]["epoch"]
+        return 200, body
 
     def _parse_operand(self, family: str, payload: dict):
         from repro.serving.workload import label_words_row
@@ -216,9 +375,7 @@ class ServingFrontend:
             labels = payload.get("labels")
             if labels is None:
                 raise ValueError("label family needs a 'labels' list")
-            return label_words_row(
-                [int(x) for x in labels], self.runtime.n_labels
-            )
+            return label_words_row([int(x) for x in labels], self.n_labels)
         if family == "range":
             rng = payload.get("range")
             if rng is None or len(rng) != 3:
@@ -227,20 +384,55 @@ class ServingFrontend:
         raise ValueError(f"unknown family {family!r}")
 
     def handle_metrics(self) -> tuple:
-        with self.lock:
-            body = self.registry.render_prometheus()
-        return 200, body
+        if self.tier is not None:
+            # Tier registries lock per replica inside each family callback
+            # (with timeouts) — no front-end lock to hold here.
+            return 200, self.registry.render_prometheus()
+        got = self.locks[0].acquire(timeout=1.0)
+        try:
+            return 200, self.registry.render_prometheus()
+        finally:
+            if got:
+                self.locks[0].release()
 
     def handle_healthz(self) -> tuple:
-        with self.lock:
-            return 200, {
-                "status": "ok" if self._accepting else "draining",
-                "in_flight": self.runtime.in_flight,
-                "queue_depth": self.runtime.batcher.pending_count(),
-            }
+        """Liveness must answer even while a replica drains: every replica
+        lock is tried with a short timeout, and a busy replica is reported
+        from a lock-free peek instead of awaited."""
+        replicas = []
+        for i, rt in enumerate(self.runtimes):
+            got = self.locks[i].acquire(timeout=0.05)
+            try:
+                try:
+                    depth = rt.batcher.pending_count()
+                except RuntimeError:
+                    # Lock-free peek raced the pump mutating the batcher's
+                    # group dict; depth is unknowable this instant.
+                    depth = -1
+                replicas.append({
+                    "replica": i,
+                    "locked": not got,
+                    "in_flight": rt.in_flight,
+                    "queue_depth": depth,
+                })
+            finally:
+                if got:
+                    self.locks[i].release()
+        body = {
+            "status": "ok" if self._accepting else "draining",
+            "in_flight": sum(r["in_flight"] for r in replicas),
+            "queue_depth": sum(max(r["queue_depth"], 0) for r in replicas),
+        }
+        if self.tier is not None:
+            body["replicas"] = replicas
+        return 200, body
 
     def handle_varz(self) -> tuple:
-        with self.lock:
+        if self.tier is not None:
+            report = self.tier.report()
+            report["started_requests"] = self.started_requests
+            return 200, report
+        with self.locks[0]:
             report = self.runtime.report()
             report["degradation_level"] = self.runtime.controller.degradation_level
             report["epoch"] = getattr(self.runtime.executor, "epoch", None)
@@ -291,7 +483,13 @@ class _Handler(BaseHTTPRequestHandler):
 
     def do_POST(self) -> None:  # noqa: N802 (stdlib API name)
         path = self.path.split("?", 1)[0]
-        if path != "/v1/search":
+        routes = {
+            "/v1/search": lambda p: self.frontend.handle_search(p),
+            "/v1/upsert": lambda p: self.frontend.handle_mutation("upsert", p),
+            "/v1/delete": lambda p: self.frontend.handle_mutation("delete", p),
+        }
+        handler = routes.get(path)
+        if handler is None:
             self._send_json(404, {"error": f"no route {path!r}"})
             return
         try:
@@ -302,4 +500,4 @@ class _Handler(BaseHTTPRequestHandler):
         except (ValueError, json.JSONDecodeError) as e:
             self._send_json(400, {"error": f"bad JSON body: {e}"})
             return
-        self._send_json(*self.frontend.handle_search(payload))
+        self._send_json(*handler(payload))

@@ -67,15 +67,29 @@ class JsonLogger:
         sink: Optional[RingBufferSink] = None,
         clock: Optional[Callable[[], float]] = None,
         stream: Optional[TextIO] = None,
+        fields: Optional[dict] = None,
     ):
         self.sink = sink if sink is not None else RingBufferSink()
         self.clock = clock
         self.stream = stream
+        self.fields = dict(fields) if fields else {}
+
+    def bind(self, **fields) -> "JsonLogger":
+        """A child logger sharing this sink/stream with extra fields
+        stamped on every record (e.g. ``logger.bind(replica=2)``) — how
+        the replica tier tags one shared ring by replica id."""
+        merged = {**self.fields, **fields}
+        return JsonLogger(
+            sink=self.sink, clock=self.clock, stream=self.stream,
+            fields=merged,
+        )
 
     def log(self, event: str, **fields) -> dict:
         record = {"event": str(event)}
         if self.clock is not None:
             record["ts"] = round(float(self.clock()), 9)
+        if self.fields:
+            record.update(self.fields)
         record.update(fields)
         self.sink.emit(record)
         if self.stream is not None:

@@ -40,12 +40,15 @@ class RequestTrace:
 
     __slots__ = (
         "req_id", "arrival_t", "queue_wait", "batch_wait", "execute",
-        "passes", "events", "_flush_t", "_truncated",
+        "passes", "events", "_flush_t", "_truncated", "replica",
     )
 
-    def __init__(self, req_id: int, arrival_t: float):
+    def __init__(
+        self, req_id: int, arrival_t: float, replica: Optional[int] = None
+    ):
         self.req_id = int(req_id)
         self.arrival_t = float(arrival_t)
+        self.replica = replica  # which tier replica served this request
         self.queue_wait = 0.0
         self.batch_wait = 0.0
         self.execute = 0.0
@@ -97,6 +100,8 @@ class RequestTrace:
             "outcome": outcome,
             "events": list(self.events),
         }
+        if self.replica is not None:
+            out["replica"] = self.replica
         if self._truncated:
             out["events_truncated"] = True
         return out

@@ -20,6 +20,13 @@ from repro.serving.faults import (
     FaultyExecutor,
     InjectedFault,
 )
+from repro.serving.replicas import (
+    ROUTER_KINDS,
+    ConsistentHashRouter,
+    LeastLoadedRouter,
+    ReplicaSet,
+    make_replica_router,
+)
 from repro.serving.retry import RetryPolicy, submit_with_retry
 from repro.serving.slo import DegradationLadder, SLOConfig
 from repro.serving.runtime import (
@@ -60,6 +67,7 @@ __all__ = [
     "AdmissionError",
     "BATCH_LADDER",
     "CompileCache",
+    "ConsistentHashRouter",
     "ControllerConfig",
     "DegradationLadder",
     "DeleteRequest",
@@ -73,9 +81,12 @@ __all__ = [
     "FaultyExecutor",
     "InjectedFault",
     "LatencyHistogram",
+    "LeastLoadedRouter",
     "LocalExecutor",
     "MUTATION_FAMILIES",
     "MicroBatch",
+    "ROUTER_KINDS",
+    "ReplicaSet",
     "Request",
     "Response",
     "RetryPolicy",
@@ -94,6 +105,7 @@ __all__ = [
     "deadline_due",
     "deadline_missed",
     "label_words_row",
+    "make_replica_router",
     "make_serving_router",
     "make_tier_ladder",
     "mixed_workload",

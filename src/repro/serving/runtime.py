@@ -58,6 +58,7 @@ from repro.serving.types import (
     Request,
     Response,
     UpsertRequest,
+    cpu_clock,
     deadline_missed,
     wall_clock,
 )
@@ -368,9 +369,13 @@ class ServingRuntime:
         max_fault_retries: int = 2,
         tracing: bool = True,
         logger: Optional[JsonLogger] = None,
+        replica_id: Optional[int] = None,
     ):
         self.executor = executor
         self.n_labels = int(n_labels)
+        # Which replica of a ReplicaSet this runtime is (None standalone);
+        # stamped into every trace so a tier's spans are attributable.
+        self.replica_id = replica_id
         tiers = tuple(tiers) if tiers is not None else make_tier_ladder()
         self.controller = controller or AdaptiveController(tiers, slo=slo)
         if slo is not None and self.controller.ladder is None:
@@ -405,6 +410,14 @@ class ServingRuntime:
         self._max_unpolled = 4 * self.max_pending
         self._in_flight = 0
         self._next_id = 0
+        # Cumulative dispatch CPU seconds charged to this runtime — one
+        # charge per microbatch (queries and mutations), measured on the
+        # dispatching thread's CPU clock, unlike the execute stage
+        # histogram which charges wall batch duration to every member
+        # request. This is the replica's true busy time — the cost it
+        # would pay on its own core — and the scrape-side denominator
+        # for tier scaling (see types.cpu_clock).
+        self.busy_seconds = 0.0
         # Hybrid execution (opt-in; DESIGN.md §9): a router stamps each
         # request's strategy at admission and the pump dispatches posting /
         # overlay microbatches outside the graph compile cache (their jit
@@ -530,7 +543,9 @@ class ServingRuntime:
         self._in_flight += 1
         self.telemetry.on_submit()
         if self.tracing:
-            req.trace = RequestTrace(req.req_id, req.arrival_t)
+            req.trace = RequestTrace(
+                req.req_id, req.arrival_t, replica=self.replica_id
+            )
             req.trace.mark(f"route:{req.strategy}", req.arrival_t)
         self._log(
             "admit",
@@ -766,8 +781,10 @@ class ServingRuntime:
         """
         t_start = self.clock()
         t0 = wall_clock()
+        c0 = cpu_clock()
         results = self.executor.apply_mutations(mb.requests)
         dt = wall_clock() - t0
+        self.busy_seconds += cpu_clock() - c0
         if hasattr(self.clock, "advance"):
             self.clock.advance(dt)
         now = self.clock()
@@ -873,6 +890,7 @@ class ServingRuntime:
         # amortize.
         t_start = self.clock()
         t0 = wall_clock()
+        c0 = cpu_clock()
         try:
             queries = assemble_queries(mb, self.executor.dim)
             constraint = assemble_constraint(mb)
@@ -897,12 +915,14 @@ class ServingRuntime:
             # their budget, and budget-exhausted ones surface as FAILED
             # responses — a fault never hangs or loses a request.
             dt = wall_clock() - t0
+            self.busy_seconds += cpu_clock() - c0
             if hasattr(self.clock, "advance"):
                 self.clock.advance(dt)
             return self._recover_faulted(mb, fault, t_start)
         ids = np.asarray(res.ids)
         dists = np.asarray(res.dists)
         dt = wall_clock() - t0
+        self.busy_seconds += cpu_clock() - c0
         if hasattr(self.clock, "advance"):
             # Virtual-time replay: execution cost advances the timeline.
             self.clock.advance(dt)

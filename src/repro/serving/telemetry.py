@@ -178,6 +178,11 @@ class Telemetry:
             self.counters["failed"] += 1
         else:
             self.latency_hist.record(resp.latency)
+            # Fill accounting as plain counters so "equal fill" is
+            # measurable from a /metrics scrape alone (the replica-tier
+            # bench reads filled_slots / requested_slots, never telemetry).
+            self.counters["filled_slots"] += int(resp.filled)
+            self.counters["requested_slots"] += int(resp.k)
             if resp.trace is not None:
                 for stage in ("queue_wait", "batch_wait", "execute", "overhead"):
                     hist = self.stage_hists.get(stage)

@@ -227,3 +227,17 @@ class VirtualClock:
 
 def wall_clock() -> float:
     return time.perf_counter()
+
+
+def cpu_clock() -> float:
+    """CPU seconds consumed by the calling thread.
+
+    Dispatch *cost accounting* (ServingRuntime.busy_seconds) uses this
+    instead of wall intervals: in a single-process multi-replica harness
+    the GIL deschedules a dispatching pump while other replicas' threads
+    run, and a wall interval would charge that contention to the replica
+    — precisely what shared-nothing placement on separate cores removes.
+    Timeline advancement (deadlines, virtual clocks) stays on
+    ``wall_clock``.
+    """
+    return time.thread_time()
